@@ -1,0 +1,73 @@
+"""Paper §IV "computer efficiency": encode throughput.
+
+Compares, per [n, k] at a fixed stream size:
+  * core dense encode (M^T matmul, jnp)
+  * Pallas gf_matmul kernel (interpret on CPU; MXU path on TPU)
+  * Pallas circulant_encode kernel (structure-exploiting: k MACs/symbol
+    instead of n — the 2x arithmetic saving the construction buys)
+plus the ring-encode collective's per-link traffic model (k blocks/link).
+
+NOTE on CPU: Pallas interpret mode measures the *kernel semantics*, not TPU
+performance; the MB/s numbers are relative indicators, the symbol-op counts
+are exact.  The roofline story for TPU lives in benchmarks/roofline.py.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.circulant import CodeSpec
+from repro.core.msr import DoubleCirculantMSR
+from repro.core.ring import ring_link_traffic_blocks
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, reps=3):
+    fn(*args).block_until_ready()          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(ks=(2, 8), stream_symbols: int = 1 << 16, quiet=False):
+    rows = []
+    for k in ks:
+        spec = CodeSpec.make(k, 257)
+        code = DoubleCirculantMSR(spec)
+        n = spec.n
+        rng = np.random.default_rng(0)
+        data = jnp.asarray(rng.integers(0, 257, (n, stream_symbols), dtype=np.int64), jnp.int32)
+        mt = jnp.asarray(code._mt)
+
+        t_dense = _timeit(lambda d: code.encode(d), data)
+        t_kmat = _timeit(lambda d: ops.gf_matmul(mt, d, 257), data)
+        t_circ = _timeit(lambda d: ops.circulant_encode(d, spec.c, 257), data)
+        # exact agreement across all three paths
+        np.testing.assert_array_equal(
+            np.asarray(code.encode(data)),
+            np.asarray(ops.circulant_encode(data, spec.c, 257)))
+
+        mb = n * stream_symbols / 2**20
+        rows.append({
+            "k": k, "n": n, "stream_mb": round(mb, 2),
+            "dense_jnp_s": round(t_dense, 4),
+            "pallas_gf_matmul_s": round(t_kmat, 4),
+            "pallas_circulant_s": round(t_circ, 4),
+            "dense_mbps": round(mb / t_dense, 1),
+            "circulant_mbps": round(mb / t_circ, 1),
+            "macs_per_symbol_dense": n,
+            "macs_per_symbol_circulant": k,
+            "ring_blocks_per_link": ring_link_traffic_blocks(spec),
+        })
+        if not quiet:
+            r = rows[-1]
+            print(f"[encode] k={k:3d} n={n:3d}: dense {r['dense_mbps']} MB/s, "
+                  f"circulant-kernel {r['circulant_mbps']} MB/s "
+                  f"({r['macs_per_symbol_dense']} vs {r['macs_per_symbol_circulant']} MAC/sym)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Paper §II eq.(1) / §IV eq.(7): repair bandwidth gamma.
+
+Columns per [n=2k, k]:
+  * gamma_msr      — MEASURED bytes the newcomer reads (our checkpointer)
+  * gamma_eq7      — (k+1) B / (2k), the MSR bound at d = k+1
+  * gamma_ec       — classical erasure coding repair: B (full reconstruction)
+  * gamma_repl     — replication: B (read one replica ... of the whole file)
+  * storage_msr    — per-node alpha = B/k (MSR point) vs replication B
+Also validates measured ~= bound (the paper's optimality claim).
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import gf
+from repro.core.baselines import ReplicationScheme, RSCode
+from repro.core.circulant import CodeSpec
+from repro.checkpoint.msr_checkpoint import MSRCheckpointer
+
+
+def run(file_bytes: int = 1 << 20, ks=(2, 3, 4, 8), quiet=False):
+    # NOTE: k is capped at 8 over GF(257).  Empirically (see
+    # bench_field_size and EXPERIMENTS.md §Paper), for k >= 10 a ~1/p
+    # fraction of the C(2k, k) reconstruction subsets is singular for ANY
+    # random coefficient vector — condition (6) demands field size >> the
+    # subset count, so byte-field storage groups top out at n = 16; larger
+    # clusters scale out via multiple groups.
+    rows = []
+    payload = np.random.default_rng(0).integers(0, 256, file_bytes, dtype=np.int64)
+    state = {"blob": payload.astype(np.int32)}  # 4 B/entry -> B = 4*file_bytes
+    for k in ks:
+        spec = CodeSpec.make(k, 257)
+        with tempfile.TemporaryDirectory() as d:
+            ck = MSRCheckpointer(d, spec)
+            t0 = time.perf_counter()
+            ck.save(0, state)
+            t_enc = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            measured = ck.repair_node(0, node=1)
+            t_rep = time.perf_counter() - t0
+            # B in stored bytes = n * S (packed ~1 B/symbol)
+            import json, pathlib
+            man = json.loads((pathlib.Path(d) / "step_000000" / "manifest.json").read_text())
+            import json as _j
+            tree = _j.loads(man["tree"])
+            s_block = tree["block_symbols"]
+        b = 2 * k * s_block
+        gamma_eq7 = (k + 1) * b // (2 * k)
+        repl = ReplicationScheme(replicas=3)
+        rows.append({
+            "k": k, "n": 2 * k, "B_bytes": b,
+            "gamma_msr_measured": measured,
+            "gamma_eq7": gamma_eq7,
+            "gamma_ratio": round(measured / gamma_eq7, 4),
+            "gamma_ec": b,
+            "gamma_repl": repl.repair_symbols(b),
+            "saving_vs_ec": round(1 - measured / b, 4),
+            "alpha_msr": b // k,
+            "alpha_repl": b,
+            "encode_s": round(t_enc, 4),
+            "repair_s": round(t_rep, 4),
+        })
+        if not quiet:
+            r = rows[-1]
+            print(f"[repair] k={k:3d} n={2*k:3d}  gamma={r['gamma_msr_measured']:>10d}B "
+                  f"bound={r['gamma_eq7']:>10d}B (x{r['gamma_ratio']:.3f})  "
+                  f"EC={r['gamma_ec']:>10d}B  saving={r['saving_vs_ec']:.1%}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,138 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts in benchmarks/dryrun_results/.
+
+    compute term    = HLO_FLOPs / peak_FLOPs          (per chip, trip-aware)
+    memory term     = HLO_bytes / HBM_bw              (per chip, trip-aware)
+    collective term = wire_bytes / ICI_bw             (per chip)
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  FLOPs/bytes come from the trip-count-aware HLO walk
+(launch/hlo_stats.py) because compiled.cost_analysis() counts while-loop
+bodies once; `static_*` columns keep the raw cost_analysis values for
+comparison.
+
+Wire-byte model per collective type (operand bytes O, group size n):
+  all-reduce          2 * O * (n-1)/n      (ring reduce-scatter + all-gather)
+  reduce-scatter      O * (n-1)/n
+  all-gather          O * (n-1)            (operand is the local shard)
+  all-to-all          O * (n-1)/n
+  collective-permute  O
+Group sizes are not recoverable per-op from the dynamic walk, so we use the
+per-type static result/operand ratio as the effective n for all-gather and
+the mesh axis sizes elsewhere (documented approximation; the dominant-term
+ranking is insensitive to the (n-1)/n factors).
+"""
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (1-link conservative)
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "dryrun_results"
+
+
+def wire_bytes(rec: dict) -> float:
+    dyn = rec["dynamic"]["collectives"]
+    stat = rec["collectives"]
+    # effective gather width from static result/operand ratio
+    ag_ratio = 1.0
+    if stat["all-gather"]["bytes"]:
+        ag_ratio = max(stat["all-gather"]["result_bytes"]
+                       / stat["all-gather"]["bytes"] - 1.0, 0.0)
+    total = 0.0
+    total += 2.0 * dyn["all-reduce"]["bytes"]
+    total += 1.0 * dyn["reduce-scatter"]["bytes"]
+    total += ag_ratio * dyn["all-gather"]["bytes"]
+    total += 1.0 * dyn["all-to-all"]["bytes"]
+    total += 1.0 * dyn["collective-permute"]["bytes"]
+    return total
+
+
+def analyze_record(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    flops = rec["dynamic"]["flops"]
+    hbm = rec["dynamic"]["hbm_bytes"]
+    wire = wire_bytes(rec)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    model_flops = 6.0 * rec["n_active_params"] * rec["tokens_per_step"]
+    mfu = (model_flops / n_dev / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    useful = model_flops / n_dev / max(flops, 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck, "step_time_s": step_time,
+        "model_flops_per_chip": model_flops / n_dev,
+        "hlo_flops_per_chip": flops,
+        "useful_flops_ratio": useful,
+        "projected_mfu": mfu,
+        "hbm_args_gib": rec["memory"]["argument_bytes"] / 2**30,
+        "hbm_temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "fits_hbm": (rec["memory"]["argument_bytes"]
+                     + rec["memory"]["temp_bytes"]) < 16 * 2**30,
+        "static_flops": rec["cost"]["flops"],
+        "wire_gib": wire / 2**30,
+    }
+
+
+def hint(row: dict) -> str:
+    b = row["bottleneck"]
+    if b == "collective":
+        return ("shrink TP activation all-reduces (bf16 wire, reduce-scatter "
+                "+ sequence-sharded residuals)")
+    if b == "memory":
+        if row["kind"] == "decode":
+            return ("decode is weight/cache-read bound: batch more queries "
+                    "per step or quantize KV/weights")
+        return "raise arithmetic intensity: fuse, cut fp32 score traffic, remat less"
+    return "compute-bound: cut non-model FLOPs (remat policy, attention casting)"
+
+
+def load_all() -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        if f.name.endswith(".error.json"):
+            continue
+        rec = json.loads(f.read_text())
+        if "error" in rec:
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def table(rows: list[dict], mesh: str = "pod16x16") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | bottleneck | useful/HLO | proj. MFU | fits HBM |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['projected_mfu']:.1%} | {'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def run(quiet=False):
+    rows = load_all()
+    if not quiet:
+        for r in sorted(rows, key=lambda r: -r["step_time_s"]):
+            if r["mesh"] != "pod16x16":
+                continue
+            print(f"[roofline] {r['arch']:22s} {r['shape']:12s} "
+                  f"C={r['t_compute_s']:.2e} M={r['t_memory_s']:.2e} "
+                  f"X={r['t_collective_s']:.2e} -> {r['bottleneck']:10s} "
+                  f"MFU~{r['projected_mfu']:.1%}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6)
+plus the roofline report over the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows at the end.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import (bench_encode_throughput, bench_field_size,
+                        bench_regeneration, bench_repair_bandwidth, roofline)
+
+OUT = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    args = ap.parse_args()
+    OUT.mkdir(exist_ok=True)
+    csv_rows = [("name", "us_per_call", "derived")]
+
+    print("== paper §IV eq.(7): repair bandwidth =====================")
+    t0 = time.perf_counter()
+    rows = bench_repair_bandwidth.run(
+        file_bytes=(1 << 18 if args.fast else 1 << 20),
+        ks=(2, 3, 4) if args.fast else (2, 3, 4, 8))
+    (OUT / "repair_bandwidth.json").write_text(json.dumps(rows, indent=1))
+    csv_rows.append(("repair_bandwidth",
+                     f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
+                     f"saving_vs_ec={rows[-1]['saving_vs_ec']:.3f}"))
+
+    print("== paper §IV-A: field size requirement ====================")
+    t0 = time.perf_counter()
+    rows = bench_field_size.run(ks=(2, 3) if args.fast else (2, 3, 4, 5))
+    if not args.fast:
+        scaling = bench_field_size.scaling_limit()
+        (OUT / "field_scaling.json").write_text(json.dumps(scaling, indent=1))
+    (OUT / "field_size.json").write_text(json.dumps(rows, indent=1))
+    csv_rows.append(("field_size",
+                     f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
+                     f"min_field_k2={rows[0]['min_field']}"))
+
+    print("== paper §IV: regeneration complexity =====================")
+    t0 = time.perf_counter()
+    rows = bench_regeneration.run(
+        ks=(2, 4) if args.fast else (2, 4, 8),
+        block_symbols=(1 << 14 if args.fast else 1 << 18))
+    (OUT / "regeneration.json").write_text(json.dumps(rows, indent=1))
+    csv_rows.append(("regeneration",
+                     f"{rows[-1]['t_embedded_s']*1e6:.0f}",
+                     f"speedup_vs_solve={rows[-1]['speedup']}"))
+
+    print("== paper §IV: encode throughput (kernels) =================")
+    t0 = time.perf_counter()
+    rows = bench_encode_throughput.run(
+        ks=(2,) if args.fast else (2, 8),
+        stream_symbols=(1 << 12 if args.fast else 1 << 16))
+    (OUT / "encode_throughput.json").write_text(json.dumps(rows, indent=1))
+    csv_rows.append(("encode_throughput",
+                     f"{rows[-1]['pallas_circulant_s']*1e6:.0f}",
+                     f"circulant_mbps={rows[-1]['circulant_mbps']}"))
+
+    print("== roofline (dry-run artifacts) ===========================")
+    t0 = time.perf_counter()
+    rows = roofline.run()
+    if rows:
+        (OUT / "roofline.json").write_text(json.dumps(rows, indent=1))
+        worst = min(rows, key=lambda r: r["projected_mfu"])
+        csv_rows.append(("roofline",
+                         f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
+                         f"cells={len(rows)};worst_mfu={worst['projected_mfu']:.3f}"))
+    else:
+        print("  (no dry-run artifacts found — run repro.launch.dryrun --all)")
+
+    print()
+    for row in csv_rows:
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

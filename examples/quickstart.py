@@ -1,0 +1,69 @@
+"""Quickstart: the paper end-to-end in 60 lines.
+
+Encode a file with a [2k, k] double circulant MSR code, kill a node,
+regenerate it with the embedded d = k+1 protocol, and verify any-k
+reconstruction — printing the bandwidth ledger from eq. (7).
+
+    PYTHONPATH=src python examples/quickstart.py [--k 4] [--mb 4]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.circulant import CodeSpec
+from repro.core.msr import DoubleCirculantMSR, encode_file, reconstruct_file
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--mb", type=float, default=4.0, help="file size in MiB")
+    args = ap.parse_args()
+
+    k = args.k
+    spec = CodeSpec.make(k, p=257)
+    code = DoubleCirculantMSR(spec)
+    n, d = spec.n, spec.d
+    print(f"[{n},{k}] double circulant MSR code over GF(257), "
+          f"c = {spec.c}  (condition (6) verified)")
+
+    payload = np.random.default_rng(0).integers(0, 256, int(args.mb * 2**20),
+                                                dtype=np.int64).astype(np.uint8).tobytes()
+    enc = encode_file(payload, spec, code)
+    b = len(payload)
+    s_block = enc.data.shape[1]
+    print(f"file B = {b/2**20:.1f} MiB -> {n} data blocks + {n} redundancy "
+          f"blocks of {s_block/2**20:.2f} MiB; per-node alpha = {2*s_block/2**20:.2f} MiB "
+          f"(= B/k, the MSR point)")
+
+    # ---- kill node 3 and regenerate it (the paper's §III-C protocol)
+    victim = 3
+    plan = code.repair_plan(victim)
+    print(f"\nnode v_{victim} fails.  Embedded repair plan (no coefficient "
+          f"search): redundancy from v_{plan.prev_node}, data from "
+          f"{['v_%d' % j for j in plan.next_nodes]}")
+    r_prev = jnp.asarray(enc.red[plan.prev_node - 1])
+    nxt = jnp.asarray(enc.data[np.asarray(plan.data_indices)])
+    a_new, r_new = code.regenerate(victim, r_prev, nxt)
+    assert np.array_equal(np.asarray(a_new), enc.data[victim - 1])
+    assert np.array_equal(np.asarray(r_new), enc.red[victim - 1])
+    gamma = d * s_block
+    print(f"regenerated BIT-EXACTLY.  downloaded {d} blocks = "
+          f"{gamma/2**20:.2f} MiB = (k+1)B/2k; classical EC would read "
+          f"{b/2**20:.1f} MiB  ->  saving {1-gamma/b:.1%}")
+
+    # ---- any-k reconstruction (data collector path)
+    pick = sorted(np.random.default_rng(1).choice(n, size=k, replace=False) + 1)
+    got = reconstruct_file(enc, [int(x) for x in pick])
+    assert got == payload
+    print(f"\nDC reconstruction from nodes {pick}: OK "
+          f"(downloaded 2k blocks = B = {b/2**20:.1f} MiB, the minimum)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""End-to-end fault-tolerant training driver (deliverable b).
+
+Trains an LM on the synthetic pipeline with MSR-coded checkpointing and an
+injected node crash mid-run; verifies the post-repair run is bit-exact with
+an uninterrupted one.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --preset tiny   # CPU, ~1 min
+    PYTHONPATH=src python examples/train_tiny_lm.py --preset 100m   # ~100M params
+    PYTHONPATH=src python examples/train_tiny_lm.py --arch qwen3-4b --reduced
+
+The 100m preset is the "train a ~100M model for a few hundred steps" driver;
+on this CPU container it is compute-heavy — tiny is the smoke default.
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.checkpoint.msr_checkpoint import MSRCheckpointer
+from repro.configs import get_config
+from repro.core.circulant import CodeSpec
+from repro.optim import adamw
+from repro.train.fault_tolerance import FailureEvent, FailureInjector
+from repro.train.loop import TrainConfig, train
+
+PRESETS = {
+    "tiny": dict(model=dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                            head_dim=32, d_ff=512, vocab_size=512,
+                            loss_chunk=64),
+                 steps=120, batch=8, seq=64),
+    "100m": dict(model=dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                            head_dim=64, d_ff=2048, vocab_size=8192,
+                            loss_chunk=128),
+                 steps=300, batch=8, seq=256),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="tiny")
+    ap.add_argument("--arch", default="paper-tiny-lm")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--k", type=int, default=4, help="MSR code dimension")
+    ap.add_argument("--crash-step", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    preset = PRESETS[args.preset]
+    cfg = get_config(args.arch)
+    if args.reduced or args.arch == "paper-tiny-lm":
+        cfg = cfg.reduced(**preset["model"])
+    steps = args.steps or preset["steps"]
+    tcfg = TrainConfig(n_steps=steps, global_batch=preset["batch"],
+                       seq_len=preset["seq"], ckpt_every=max(steps // 6, 5),
+                       log_every=max(steps // 10, 1), seed=0)
+    crash = args.crash_step or (steps * 2 // 3)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="msr_ckpt_")
+    spec = CodeSpec.make(args.k, 257)
+    from repro.launch.steps import count_params
+    from repro.models import Model
+    n_params = count_params(jax.eval_shape(
+        lambda: Model(cfg).init(jax.random.PRNGKey(0))))
+    print(f"arch={cfg.name}  params={n_params/1e6:.1f}M  steps={steps}  "
+          f"MSR code [{spec.n},{spec.k}] over GF({spec.p})  ckpt={ckpt_dir}")
+    ckpt = MSRCheckpointer(ckpt_dir, spec)
+    injector = FailureInjector(spec.n, schedule=[FailureEvent(step=crash, node=2)])
+
+    opt = adamw.AdamWConfig(lr=3e-3, warmup_steps=max(steps // 20, 1),
+                            total_steps=steps)
+    print(f"\n-- training with a node-2 crash injected at step {crash} --")
+    state, log = train(cfg, tcfg, opt, checkpointer=ckpt, injector=injector)
+    repairs = [e for e in log if e["event"] == "repair"]
+    steps_logged = [e for e in log if e["event"] == "step"]
+    print(f"completed: {len(steps_logged)} step executions, "
+          f"{len(repairs)} repair event(s)")
+    for r in repairs:
+        print(f"  crash@{r['step']}: restored from ckpt@{r['ckpt_step']} via "
+              f"'{r['restore_path']}', repair read {r['repair_bytes']/2**20:.2f} MiB")
+    losses = [e["loss"] for e in steps_logged]
+    print(f"loss: first={losses[0]:.4f}  last={losses[-1]:.4f}")
+    assert losses[-1] < losses[0], "training must make progress"
+
+    print("\n-- verifying bit-exact equivalence with an uninterrupted run --")
+    with tempfile.TemporaryDirectory() as d2:
+        ckpt2 = MSRCheckpointer(d2, spec)
+        state_clean, _ = train(cfg, tcfg, opt, checkpointer=ckpt2)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(state_clean)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("final states are BIT-EXACT equal: crash + MSR repair is invisible.")
+
+
+if __name__ == "__main__":
+    main()

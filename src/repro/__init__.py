@@ -1,0 +1,4 @@
+"""repro: Double Circulant MSR codes as the fault-tolerance substrate of a
+multi-pod JAX training/inference framework (see DESIGN.md)."""
+
+__version__ = "0.1.0"

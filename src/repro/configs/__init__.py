@@ -1,0 +1,2 @@
+from .base import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+from .registry import ARCH_IDS, get_config, get_shape, cells, skipped_cells  # noqa: F401

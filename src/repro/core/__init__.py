@@ -1,0 +1,9 @@
+"""Core: the paper's contribution — Double Circulant MSR codes.
+
+Gastón & Pujol (2010): systematic [n=2k, k] Minimum Storage Regenerating
+codes with d = k+1 determined helpers and precalculated (embedded)
+coefficients, built from a double circulant generator A = (I | M).
+"""
+from . import gf, circulant, msr, baselines, placement  # noqa: F401
+from .circulant import CodeSpec, check_condition6, find_coefficients, min_field_size  # noqa: F401
+from .msr import DoubleCirculantMSR, RepairPlan, encode_file, reconstruct_file  # noqa: F401

@@ -1,0 +1,136 @@
+"""Baselines the paper compares against (§II, §IV).
+
+1. Replication  — per-node storage alpha = B, repair gamma = B (download a
+   full replica); storage overhead = replicas x.
+2. Classical MDS erasure coding (systematic Reed–Solomon via Vandermonde over
+   GF(p)) — alpha = B/k, but repair of ONE node requires downloading the
+   whole file: gamma = B (the paper's central drawback, §II).
+3. Solve-based MSR repair (Rashmi/Cullina-style, modelled): optimal gamma but
+   the newcomer must (a) pick d helpers, (b) discover/solve for coefficients
+   — an O(k^3) field solve per repair plus per-helper inner products.  We
+   model it as full any-k reconstruction + re-encode with an added coefficient
+   solve, and count field operations so benchmarks can compare complexity
+   (paper §IV "the algorithm for node regeneration is trivial").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import gf
+
+
+# ----------------------------------------------------------------- replication
+@dataclass(frozen=True)
+class ReplicationScheme:
+    replicas: int
+
+    def storage_per_node_symbols(self, file_symbols: int) -> int:
+        return file_symbols
+
+    def total_storage_symbols(self, file_symbols: int) -> int:
+        return self.replicas * file_symbols
+
+    def repair_symbols(self, file_symbols: int) -> int:
+        return file_symbols  # download one replica
+
+    def max_failures(self) -> int:
+        return self.replicas - 1
+
+
+# ------------------------------------------------------------------ classical RS
+class RSCode:
+    """Systematic [n, k] Reed–Solomon (Vandermonde) over GF(p).
+
+    Node v_i stores ONE block of B/k symbols (classical EC view, Fig. 1).
+    Repairing any single node = reconstruct from k nodes = download B symbols.
+    """
+
+    def __init__(self, n: int, k: int, p: int = gf.DEFAULT_P):
+        if n >= p:
+            raise ValueError(f"RS over GF({p}) needs n < p, got n={n}")
+        self.n, self.k, self.p = n, k, p
+        # generator: G = [I | V] with V[j, i] = x_i^j (k x (n-k)); any k columns
+        # of [I | V] invertible for distinct evaluation points (Cauchy/Vandermonde
+        # systematicization): we build G by interpolation to guarantee MDS.
+        x = np.arange(1, n + 1, dtype=np.int64) % p          # n distinct points
+        vand_k = np.vstack([pow_col(x[:k], j, p) for j in range(k)])   # (k, k)
+        inv = gf.gauss_inverse(vand_k.T % p, p)               # interpolation
+        vand_n = np.vstack([pow_col(x, j, p) for j in range(k)]).T % p  # (n, k)
+        self.g = (vand_n.astype(np.int64) @ inv.astype(np.int64)) % p  # (n, k)
+        # rows 0..k-1 of g form I_k => systematic
+        assert np.array_equal(self.g[:k] % p, np.eye(k, dtype=np.int64) % p)
+        self.g = self.g.astype(np.int32)
+
+    def encode(self, data: jnp.ndarray) -> jnp.ndarray:
+        """data: (k, S) -> codeword blocks (n, S); first k rows are the data."""
+        return gf.matmul(jnp.asarray(self.g), jnp.asarray(data, jnp.int32), self.p)
+
+    def reconstruct(self, node_ids: Sequence[int], blocks: jnp.ndarray) -> jnp.ndarray:
+        """Any k node blocks -> original (k, S) data."""
+        rows = [i - 1 for i in node_ids]
+        sub = self.g[rows]                                   # (k, k)
+        inv = gf.gauss_inverse(sub, self.p)
+        return gf.matmul(jnp.asarray(inv), jnp.asarray(blocks, jnp.int32), self.p)
+
+    def repair_symbols(self, file_symbols: int) -> int:
+        return file_symbols                                   # gamma = B
+
+    def storage_per_node_symbols(self, file_symbols: int) -> int:
+        return file_symbols // self.k                         # alpha = B/k
+
+    def total_storage_symbols(self, file_symbols: int) -> int:
+        return self.n * self.storage_per_node_symbols(file_symbols)
+
+
+def pow_col(x: np.ndarray, j: int, p: int) -> np.ndarray:
+    out = np.ones_like(x)
+    for _ in range(j):
+        out = (out * x) % p
+    return out
+
+
+# ----------------------------------------------------- solve-based MSR (modelled)
+@dataclass
+class SolveBasedRepairCost:
+    """Field-operation counts for one repair, for complexity comparison."""
+    coefficient_solve_ops: int    # discovering/solving combination coefficients
+    helper_combine_ops: int       # helpers' internal linear combinations
+    newcomer_solve_ops: int       # newcomer's linear system solve
+    stream_ops: int               # per-symbol multiply-accumulate work
+    downloads_symbols: int
+
+
+def solve_based_msr_repair_cost(k: int, block_symbols: int) -> SolveBasedRepairCost:
+    """Rashmi et al. (d = k+1) style repair, modelled per §IV: helpers combine
+    their q=2 blocks, the newcomer solves a (k+1)-dim system, and coefficients
+    must be discovered per failure (O(k^3) solve over the field)."""
+    d = k + 1
+    return SolveBasedRepairCost(
+        coefficient_solve_ops=2 * k**3,          # Gaussian elimination scale
+        helper_combine_ops=d * 2 * block_symbols,  # each helper combines q=2 blocks
+        newcomer_solve_ops=2 * d**3,
+        stream_ops=d * d * block_symbols,        # applying the solved system
+        downloads_symbols=d * block_symbols,
+    )
+
+
+def embedded_repair_cost(k: int, block_symbols: int) -> SolveBasedRepairCost:
+    """The paper's embedded repair: zero coefficient discovery, zero helper-side
+    combinations; the newcomer does 2k multiply-accumulates per symbol
+    (k-1 MACs + 1 inverse-scale for a_{i-1}; k MACs for r_i)."""
+    d = k + 1
+    return SolveBasedRepairCost(
+        coefficient_solve_ops=0,
+        helper_combine_ops=0,
+        newcomer_solve_ops=0,
+        stream_ops=2 * k * block_symbols,
+        downloads_symbols=d * block_symbols,
+    )
+
+
+__all__ = ["ReplicationScheme", "RSCode", "SolveBasedRepairCost",
+           "solve_based_msr_repair_cost", "embedded_repair_cost"]

@@ -1,0 +1,245 @@
+"""Prime-field GF(p) arithmetic, vectorized for JAX.
+
+The paper (Gastón & Pujol 2010) works over an arbitrary finite field F_m.
+We default to p = 257: the smallest prime > 2**8, so every data *byte* is a
+field element.  Key TPU-native property (see DESIGN.md §2):
+
+  * integers 0..256 are exactly representable in bf16 (8-bit significand),
+  * products <= 256**2 = 2**16 are exact in the MXU's fp32 accumulator,
+  * a k-term dot product with k <= 128 stays < 2**24, i.e. exact in fp32.
+
+Hence GF(257) matmuls lower to a single native bf16xbf16->fp32 MXU pass plus
+a cheap `mod p` fold — no lookup tables, no integer matmul units.  On CPU
+(this container) the same code paths run in fp32/int32 and remain exact.
+
+Everything here is pure JAX (jit/vmap/shard_map friendly).  Host-side helpers
+(`inv_table`, `gauss_inverse`) use numpy for tiny O(n^3) matrices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_P = 257
+
+# Max number of accumulation terms before an fp32 dot of GF(p) symbols can
+# lose exactness: k * (p-1)^2 < 2^24  =>  k <= 255 for p=257.  We fold the
+# modulus every _FOLD terms to stay far inside the envelope.
+_FOLD = 128
+
+
+def _check_prime(p: int) -> None:
+    if p < 2 or any(p % q == 0 for q in range(2, int(p**0.5) + 1)):
+        raise ValueError(f"p={p} is not prime")
+
+
+# ---------------------------------------------------------------------------
+# Elementwise ops (int32 lanes; exact)
+# ---------------------------------------------------------------------------
+
+def add(x, y, p: int = DEFAULT_P):
+    return (jnp.asarray(x, jnp.int32) + jnp.asarray(y, jnp.int32)) % p
+
+
+def sub(x, y, p: int = DEFAULT_P):
+    return (jnp.asarray(x, jnp.int32) - jnp.asarray(y, jnp.int32)) % p
+
+
+def mul(x, y, p: int = DEFAULT_P):
+    return (jnp.asarray(x, jnp.int32) * jnp.asarray(y, jnp.int32)) % p
+
+
+def neg(x, p: int = DEFAULT_P):
+    return (-jnp.asarray(x, jnp.int32)) % p
+
+
+def pow_(x, e: int, p: int = DEFAULT_P):
+    """x**e mod p by square-and-multiply (e is a static python int >= 0)."""
+    x = jnp.asarray(x, jnp.int32) % p
+    acc = jnp.ones_like(x)
+    while e:
+        if e & 1:
+            acc = (acc * x) % p
+        x = (x * x) % p
+        e >>= 1
+    return acc
+
+
+def inv(x, p: int = DEFAULT_P):
+    """Multiplicative inverse by Fermat's little theorem: x**(p-2) mod p."""
+    return pow_(x, p - 2, p)
+
+
+# ---------------------------------------------------------------------------
+# Matmul over GF(p)
+# ---------------------------------------------------------------------------
+
+def matmul(a, b, p: int = DEFAULT_P, *, precision=None):
+    """(a @ b) mod p, exact.
+
+    a: (..., m, k) int32 symbols in [0, p)
+    b: (..., k, n) int32 symbols in [0, p)
+
+    For p <= 257 the contraction runs through the fp32 (MXU) path with
+    mod-folds every _FOLD terms; for larger p falls back to int32 lanes.
+    """
+    a = jnp.asarray(a, jnp.int32) % p
+    b = jnp.asarray(b, jnp.int32) % p
+    k = a.shape[-1]
+    if (p - 1) ** 2 * min(k, _FOLD) < 2**24:
+        return _matmul_f32(a, b, p, precision)
+    # exact int32 path: k * (p-1)^2 may overflow int32, fold every chunk
+    chunk = max(1, (2**31 - 1) // ((p - 1) ** 2))
+    out = None
+    for s in range(0, k, chunk):
+        part = jnp.einsum("...mk,...kn->...mn",
+                          a[..., s : s + chunk], b[..., s : s + chunk, :]) % p
+        out = part if out is None else (out + part) % p
+    return out
+
+
+def _matmul_f32(a, b, p, precision):
+    k = a.shape[-1]
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if k <= _FOLD:
+        prod = jnp.einsum("...mk,...kn->...mn", af, bf,
+                          precision=precision or jax.lax.Precision.HIGHEST)
+        return (prod.astype(jnp.int32)) % p
+    # fold modulus every _FOLD terms to preserve fp32 exactness
+    out = None
+    for s in range(0, k, _FOLD):
+        prod = jnp.einsum("...mk,...kn->...mn",
+                          af[..., s : s + _FOLD], bf[..., s : s + _FOLD, :],
+                          precision=precision or jax.lax.Precision.HIGHEST)
+        part = (prod.astype(jnp.int32)) % p
+        out = part if out is None else (out + part) % p
+    return out
+
+
+def matvec(m, v, p: int = DEFAULT_P):
+    return matmul(m, v[..., None], p)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Host-side dense linear algebra (tiny matrices: code dimension n <= 512)
+# ---------------------------------------------------------------------------
+
+def gauss_inverse(mat: np.ndarray, p: int = DEFAULT_P) -> np.ndarray:
+    """Inverse of a square matrix over GF(p) by Gauss-Jordan (numpy, host).
+
+    Raises ValueError if the matrix is singular over GF(p).
+    """
+    mat = np.asarray(mat, dtype=np.int64) % p
+    n = mat.shape[0]
+    if mat.shape != (n, n):
+        raise ValueError(f"square matrix required, got {mat.shape}")
+    aug = np.concatenate([mat, np.eye(n, dtype=np.int64)], axis=1)
+    for col in range(n):
+        piv = None
+        for r in range(col, n):
+            if aug[r, col] % p != 0:
+                piv = r
+                break
+        if piv is None:
+            raise ValueError("matrix is singular over GF(%d)" % p)
+        if piv != col:
+            aug[[col, piv]] = aug[[piv, col]]
+        pinv = pow(int(aug[col, col]), p - 2, p)
+        aug[col] = (aug[col] * pinv) % p
+        for r in range(n):
+            if r != col and aug[r, col] % p:
+                aug[r] = (aug[r] - aug[r, col] * aug[col]) % p
+    return (aug[:, n:] % p).astype(np.int32)
+
+
+def gauss_det(mat: np.ndarray, p: int = DEFAULT_P) -> int:
+    """Determinant over GF(p) (numpy, host)."""
+    mat = np.asarray(mat, dtype=np.int64).copy() % p
+    n = mat.shape[0]
+    det = 1
+    for col in range(n):
+        piv = None
+        for r in range(col, n):
+            if mat[r, col] % p != 0:
+                piv = r
+                break
+        if piv is None:
+            return 0
+        if piv != col:
+            mat[[col, piv]] = mat[[piv, col]]
+            det = (-det) % p
+        det = (det * int(mat[col, col])) % p
+        pinv = pow(int(mat[col, col]), p - 2, p)
+        mat[col] = (mat[col] * pinv) % p
+        for r in range(col + 1, n):
+            if mat[r, col] % p:
+                mat[r] = (mat[r] - mat[r, col] * mat[col]) % p
+    return int(det % p)
+
+
+def solve(mat: np.ndarray, rhs: np.ndarray, p: int = DEFAULT_P) -> np.ndarray:
+    """Solve mat @ x = rhs over GF(p).  rhs may be a matrix of columns.
+
+    Host-side numpy for the tiny system matrix; the big-block application is
+    done with `matmul` on device by the callers.
+    """
+    inv_m = gauss_inverse(mat, p)
+    return (inv_m.astype(np.int64) @ (np.asarray(rhs, np.int64) % p)) % p
+
+
+# ---------------------------------------------------------------------------
+# Byte <-> symbol packing
+# ---------------------------------------------------------------------------
+
+def bytes_to_symbols(data: bytes | np.ndarray, p: int = DEFAULT_P) -> np.ndarray:
+    """Lossless embedding of a byte stream into GF(p) symbols (p > 256)."""
+    if p <= 256:
+        raise ValueError("byte embedding requires p > 256")
+    arr = np.frombuffer(data, dtype=np.uint8) if isinstance(data, (bytes, bytearray)) else np.asarray(data, np.uint8)
+    return arr.astype(np.int32)
+
+
+def symbols_to_bytes(sym: np.ndarray) -> bytes:
+    sym = np.asarray(sym)
+    if sym.max(initial=0) > 255 or sym.min(initial=0) < 0:
+        raise ValueError("symbols out of byte range; not a systematic data block")
+    return sym.astype(np.uint8).tobytes()
+
+
+def pack257(sym: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Pack GF(257) symbols (values 0..256) into (low_bytes uint8, idx256).
+
+    The value 256 occurs with probability ~1/257 in redundancy blocks; we
+    store its positions explicitly, so storage is S * (1 + 4/257) bytes
+    instead of 2-4 bytes/symbol — the redundancy blocks stay byte-priced.
+    """
+    sym = np.asarray(sym)
+    if sym.min(initial=0) < 0 or sym.max(initial=0) > 256:
+        raise ValueError("symbols out of GF(257) range")
+    hi = np.nonzero(sym.reshape(-1) == 256)[0].astype(np.int64)
+    low = (sym.reshape(-1) % 256).astype(np.uint8)
+    return low, hi
+
+
+def unpack257(low: np.ndarray, hi: np.ndarray, shape=None) -> np.ndarray:
+    out = low.astype(np.int32)
+    out[hi] = 256
+    return out.reshape(shape) if shape is not None else out
+
+
+def packed_nbytes(sym: np.ndarray) -> int:
+    low, hi = pack257(sym)
+    return low.nbytes + hi.nbytes
+
+
+__all__ = [
+    "DEFAULT_P", "add", "sub", "mul", "neg", "pow_", "inv", "matmul",
+    "matvec", "gauss_inverse", "gauss_det", "solve",
+    "bytes_to_symbols", "symbols_to_bytes",
+    "pack257", "unpack257", "packed_nbytes",
+]

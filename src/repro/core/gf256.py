@@ -1,0 +1,112 @@
+"""GF(2^8) backend — byte-native portability fallback (DESIGN.md §2).
+
+The primary field is GF(257) (MXU-exact fp32 matmuls); GF(2^8) trades the
+MXU for VMEM-resident log/exp table gathers but is *closed over bytes*
+(no 256-value packing, XOR addition).  Field: AES polynomial x^8+x^4+x^3+x+1
+(0x11B), generator 0x03.
+
+Useful when the deployment target lacks fast fp32 accumulation or when
+storage must be strictly byte-in/byte-out with zero packing overhead.
+Provided: elementwise ops, matmul, Gauss-Jordan inverse — enough to run a
+Vandermonde/Cauchy MDS code or a double circulant construction over GF(256)
+(condition (6) checked with the same circulant machinery generalized over a
+field object).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_POLY = 0x11B
+_GEN = 0x03
+
+
+@functools.cache
+def _tables() -> tuple[np.ndarray, np.ndarray]:
+    """exp[i] = g^i (510 entries for wraparound), log[x] for x in 1..255."""
+    exp = np.zeros(510, np.int32)
+    log = np.zeros(256, np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        hi = x << 1                  # times generator 0x03 = (x << 1) ^ x
+        if hi & 0x100:
+            hi ^= _POLY
+        x = hi ^ x
+    exp[255:510] = exp[0:255]
+    return exp, log
+
+
+def add(x, y):
+    """Addition in GF(2^8) is XOR."""
+    return jnp.bitwise_xor(jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32))
+
+
+sub = add  # characteristic 2
+
+
+def mul(x, y):
+    exp, log = _tables()
+    exp_t, log_t = jnp.asarray(exp), jnp.asarray(log)
+    x = jnp.asarray(x, jnp.int32)
+    y = jnp.asarray(y, jnp.int32)
+    prod = exp_t[log_t[x] + log_t[y]]
+    return jnp.where((x == 0) | (y == 0), 0, prod)
+
+
+def inv(x):
+    exp, log = _tables()
+    exp_t, log_t = jnp.asarray(exp), jnp.asarray(log)
+    x = jnp.asarray(x, jnp.int32)
+    return jnp.where(x == 0, 0, exp_t[255 - log_t[x]])
+
+
+def matmul(a, b):
+    """(a @ b) over GF(2^8): gather-multiply + XOR-reduce.
+
+    a: (m, k), b: (k, n) int32 bytes.  TPU mapping: the log/exp tables are
+    VMEM-resident (766 x 4 B); each output element is a k-deep XOR tree —
+    VPU work, no MXU (the price of the byte-native field)."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    prods = mul(a[:, :, None], b[None, :, :])       # (m, k, n)
+    return jax.lax.reduce(prods, np.int32(0),
+                          lambda x, y: jnp.bitwise_xor(x, y), (1,))
+
+
+def gauss_inverse(mat: np.ndarray) -> np.ndarray:
+    """Inverse over GF(2^8), host-side numpy."""
+    exp, log = _tables()
+
+    def m_(x, y):
+        if x == 0 or y == 0:
+            return 0
+        return int(exp[log[x] + log[y]])
+
+    def inv_(x):
+        return int(exp[255 - log[x]]) if x else 0
+
+    mat = np.asarray(mat, np.int32) % 256
+    n = mat.shape[0]
+    aug = np.concatenate([mat, np.eye(n, dtype=np.int32)], axis=1)
+    for col in range(n):
+        piv = next((r for r in range(col, n) if aug[r, col]), None)
+        if piv is None:
+            raise ValueError("singular over GF(256)")
+        if piv != col:
+            aug[[col, piv]] = aug[[piv, col]]
+        pinv = inv_(int(aug[col, col]))
+        aug[col] = [m_(int(v), pinv) for v in aug[col]]
+        for r in range(n):
+            if r != col and aug[r, col]:
+                f = int(aug[r, col])
+                aug[r] = [int(v) ^ m_(f, int(w))
+                          for v, w in zip(aug[r], aug[col])]
+    return aug[:, n:].astype(np.int32)
+
+
+__all__ = ["add", "sub", "mul", "inv", "matmul", "gauss_inverse"]

@@ -1,0 +1,92 @@
+"""Pytree <-> MSR block placement: serialize training state into the code's
+n = 2k data blocks and back (DESIGN.md §2 — MSR-coded checkpointing).
+
+The mapping is deliberately dumb and auditable:
+  pytree -> flat list of (path, dtype, shape, raw bytes) -> one byte stream
+         -> GF(p) symbols -> pad to a multiple of n -> reshape (n, S).
+
+Systematic property: restoring WITHOUT failures reads only the raw data
+blocks — `blocks_to_pytree(data_blocks)` never touches field arithmetic.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+from . import gf
+
+
+@dataclass
+class TreeSpec:
+    """Static metadata needed to rebuild the pytree from bytes."""
+    treedef_repr: str
+    leaves: list[dict]       # [{dtype, shape, nbytes}]
+    total_bytes: int
+    n_blocks: int
+    block_symbols: int
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "treedef_repr": self.treedef_repr,
+            "leaves": self.leaves,
+            "total_bytes": self.total_bytes,
+            "n_blocks": self.n_blocks,
+            "block_symbols": self.block_symbols,
+        })
+
+    @staticmethod
+    def from_json(s: str) -> "TreeSpec":
+        d = json.loads(s)
+        return TreeSpec(**d)
+
+
+def pytree_to_bytes(tree: Any) -> tuple[bytes, jax.tree_util.PyTreeDef, list[dict]]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    metas, chunks = [], []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        raw = arr.tobytes()
+        metas.append({"dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "nbytes": len(raw)})
+        chunks.append(raw)
+    return b"".join(chunks), treedef, metas
+
+
+def bytes_to_leaves(payload: bytes, metas: list[dict]) -> list[np.ndarray]:
+    leaves, off = [], 0
+    for m in metas:
+        raw = payload[off: off + m["nbytes"]]
+        off += m["nbytes"]
+        leaves.append(np.frombuffer(raw, dtype=np.dtype(m["dtype"])).reshape(m["shape"]).copy())
+    return leaves
+
+
+def pytree_to_blocks(tree: Any, n: int, p: int = gf.DEFAULT_P,
+                     ) -> tuple[np.ndarray, jax.tree_util.PyTreeDef, TreeSpec]:
+    """Serialize a pytree into (n, S) GF(p) data blocks a_0..a_{n-1}."""
+    payload, treedef, metas = pytree_to_bytes(tree)
+    sym = gf.bytes_to_symbols(payload, p)
+    pad = (-len(sym)) % n
+    sym = np.pad(sym, (0, pad))
+    blocks = sym.reshape(n, -1).astype(np.int32)
+    spec = TreeSpec(treedef_repr=str(treedef), leaves=metas,
+                    total_bytes=len(payload), n_blocks=n,
+                    block_symbols=blocks.shape[1])
+    return blocks, treedef, spec
+
+
+def blocks_to_pytree(blocks: np.ndarray, treedef: jax.tree_util.PyTreeDef,
+                     spec: TreeSpec) -> Any:
+    """Inverse of pytree_to_blocks.  Pure byte reads for systematic blocks."""
+    sym = np.asarray(blocks).reshape(-1)
+    payload = gf.symbols_to_bytes(sym)[: spec.total_bytes]
+    leaves = bytes_to_leaves(payload, spec.leaves)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+__all__ = ["TreeSpec", "pytree_to_bytes", "bytes_to_leaves",
+           "pytree_to_blocks", "blocks_to_pytree"]

@@ -1,0 +1,55 @@
+"""Public jit'd wrappers around the Pallas GF kernels.
+
+`interpret` defaults to True off-TPU (this container is CPU-only; the kernels
+target TPU VMEM/MXU and are validated in interpret mode per DESIGN.md).
+On a TPU backend the same calls compile natively (interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .circulant_encode import circulant_encode as _circulant_encode
+from .gf_matmul import gf_matmul as _gf_matmul
+
+
+@functools.cache
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gf_matmul(a, b, p: int = 257, *, block_s: int = 512,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """Exact (a @ b) mod p — kernel-backed."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _gf_matmul(a, b, p, block_s=block_s, interpret=interpret)
+
+
+def circulant_encode(data, c, p: int = 257, *, block_s: int = 512,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """MSR redundancy blocks from data blocks — kernel-backed, coefficients
+    compile-time-specialized (embedded property)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _circulant_encode(data, tuple(int(x) for x in c), p,
+                             block_s=block_s, interpret=interpret)
+
+
+def msr_matmul_backend(p: int = 257, *, block_s: int = 512,
+                       interpret: bool | None = None):
+    """A drop-in `matmul(a, b, p)` for DoubleCirculantMSR(..., matmul=...)."""
+    def matmul(a, b, p_inner=p):
+        return gf_matmul(a, b, p_inner, block_s=block_s, interpret=interpret)
+    return matmul
+
+
+# re-export oracles for test convenience
+gf_matmul_ref = ref.gf_matmul_ref
+circulant_encode_ref = ref.circulant_encode_ref
+
+__all__ = ["gf_matmul", "circulant_encode", "msr_matmul_backend",
+           "gf_matmul_ref", "circulant_encode_ref"]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the GF(p) kernels (exact integer semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
+    """(a @ b) mod p with exact integer accumulation.
+
+    a: (m, k) int32 in [0, p); b: (k, s) int32 in [0, p).  Oracle uses
+    float64-free int32 chunked accumulation (chunks keep partial sums within
+    int32), matching repro.core.gf.matmul semantics.
+    """
+    a = jnp.asarray(a, jnp.int32) % p
+    b = jnp.asarray(b, jnp.int32) % p
+    k = a.shape[-1]
+    chunk = max(1, (2**31 - 1) // max((p - 1) ** 2, 1))
+    out = None
+    for s0 in range(0, k, chunk):
+        part = (a[:, s0:s0 + chunk] @ b[s0:s0 + chunk, :]) % p
+        out = part if out is None else (out + part) % p
+    return out
+
+
+def circulant_encode_ref(data: jnp.ndarray, c, p: int) -> jnp.ndarray:
+    """Redundancy blocks r[i] = sum_{u=1..k} c_u * data[(i - k - u) mod n] mod p.
+
+    data: (n, s) int32; c: (k,) with n = 2k.  This is the paper's eq. (2) in
+    circulant closed form — the oracle realizes it with explicit rolls.
+    """
+    data = jnp.asarray(data, jnp.int32) % p
+    c = np.asarray(c, dtype=np.int64) % p
+    k = c.shape[0]
+    n = data.shape[0]
+    assert n == 2 * k, (n, k)
+    out = jnp.zeros_like(data)
+    for u in range(1, k + 1):
+        # row j holds r_{j+1} (nodes are 1-indexed in the paper):
+        # r_{j+1} = sum_u c_u data[(j+1-k-u) mod n]  =>  roll by k+u-1
+        rolled = jnp.roll(data, shift=k + u - 1, axis=0)
+        out = (out + int(c[u - 1]) * rolled) % p
+    return out
+
+
+def gf_axpy_ref(y: jnp.ndarray, alpha: int, x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """(y + alpha * x) mod p — the regenerate-path primitive."""
+    return (jnp.asarray(y, jnp.int32) + (int(alpha) % p) * (jnp.asarray(x, jnp.int32) % p)) % p

@@ -1,0 +1,4 @@
+# NOTE: dryrun is intentionally NOT imported here — importing it sets
+# XLA_FLAGS for 512 host devices, which must only happen in the dry-run
+# entry point itself.
+from . import mesh, steps  # noqa: F401

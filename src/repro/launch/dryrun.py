@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   Set ONLY here — tests/benches see the host's single device.
+
+"""Multi-pod dry-run (deliverable e): for every (arch x shape x mesh) cell,
+lower + compile the step function against ShapeDtypeStruct inputs on the
+production mesh, record memory_analysis / cost_analysis / collective bytes.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+Artifacts: benchmarks/dryrun_results/<arch>__<shape>__<mesh>.json (incremental:
+already-computed cells are skipped unless --force).
+"""
+import argparse
+import gzip
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.registry import cells, skipped_cells
+from repro.launch import hlo_stats
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.optim import adamw
+from repro.sharding import ctx as shctx
+from repro.sharding import policy
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ------------------------------------------------------- collective parser
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[a-z0-9\[\],{}/* ]+\)?)\s+[a-z][\w\-]*\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuple types `(f32[2], bf16[4])`."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _build_symbol_table(hlo_text: str) -> dict[str, int]:
+    """instruction name -> result bytes (operands print as bare %name)."""
+    table: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            table[m.group(1)] = _type_bytes(m.group(2))
+    return table
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Collective op counts + operand bytes from POST-SPMD optimized HLO.
+
+    Collective bytes are per-program (per-device) operand sizes — the traffic
+    each chip's links carry up to the collective's algorithmic factor, which
+    roofline.py applies per op type.  Operands are resolved via a symbol
+    table because optimized HLO prints them as bare `%name`.
+    """
+    table = _build_symbol_table(hlo_text)
+    out = {c: {"count": 0, "bytes": 0, "result_bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            m = re.search(rf"=\s*([^=]+?)\s+{c}(?:-start)?\(([^)]*)\)", line)
+            if not m:
+                continue
+            result_t, operands = m.groups()
+            ob = sum(table.get(name, 0)
+                     for name in re.findall(r"%([\w.\-]+)", operands))
+            if ob == 0:  # operands with inline types (older printers)
+                ob = _type_bytes(operands)
+            out[c]["count"] += 1
+            out[c]["bytes"] += ob
+            out[c]["result_bytes"] += _type_bytes(result_t)
+            break
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+# --------------------------------------------------------------- lowering
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               policy_overrides: dict | None = None,
+               save_hlo: pathlib.Path | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    t0 = time.time()
+
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    layout = policy.choose_layout(cfg, mesh, shape)
+    pspecs = policy.param_specs(params_shapes, mesh, layout=layout)
+    n_params_total = steps_mod.count_params(params_shapes)
+    # >100B: bf16 moments (fp32 AdamW state would exceed pod HBM — DESIGN.md)
+    opt_cfg = adamw.AdamWConfig(
+        moment_dtype="bfloat16" if n_params_total > 100e9 else "float32")
+    act_rules = policy.activation_rules(cfg, mesh, shape.kind, layout=layout)
+
+    with mesh, shctx.rules(mesh, act_rules):
+        if shape.kind == "train":
+            state_shapes = {"params": params_shapes,
+                            "opt": jax.eval_shape(lambda: adamw.init(params_shapes, opt_cfg))}
+            state_sh = {"params": pspecs,
+                        "opt": adamw.OptState(mu=pspecs, nu=pspecs,
+                                              step=policy.P())}
+            batch_shapes = steps_mod.input_specs(cfg, shape)
+            bspecs = policy.batch_spec(batch_shapes, mesh,
+                                       global_batch=shape.global_batch,
+                                       layout=layout)
+            n_dev = 512 if multi_pod else 256
+            n_shards = n_dev if layout == "dp" else n_dev // 16
+            n_micro = steps_mod.pick_microbatches(shape, n_shards)
+            fn = steps_mod.make_train_step(model, opt_cfg, n_micro)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(policy.named(state_sh, mesh),
+                              policy.named(bspecs, mesh)),
+                donate_argnums=(0,),
+            ).lower(state_shapes, batch_shapes)
+        elif shape.kind == "prefill":
+            batch_shapes = steps_mod.input_specs(cfg, shape, labels=False)
+            bspecs = policy.batch_spec(batch_shapes, mesh,
+                                       global_batch=shape.global_batch)
+            fn = steps_mod.make_prefill_step(model, max_len=shape.seq_len)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(policy.named(pspecs, mesh),
+                              policy.named(bspecs, mesh)),
+            ).lower(params_shapes, batch_shapes)
+        else:  # decode
+            cache_shapes, tok, pos = steps_mod.decode_input_specs(cfg, shape, model)
+            cspecs = policy.cache_spec(cache_shapes, mesh,
+                                       batch=shape.global_batch,
+                                       seq_shard=shape.global_batch == 1)
+            tspec = policy.batch_spec({"tokens": tok}, mesh,
+                                      global_batch=shape.global_batch)["tokens"]
+            fn = steps_mod.make_decode_step(model, max_len=shape.seq_len)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(policy.named(pspecs, mesh),
+                              policy.named(cspecs, mesh),
+                              policy.named(tspec, mesh),
+                              policy.named(policy.P(), mesh)),
+                donate_argnums=(1,),
+            ).lower(params_shapes, cache_shapes, tok, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    if save_hlo is not None:
+        save_hlo.parent.mkdir(parents=True, exist_ok=True)
+        with gzip.open(save_hlo, "wt") as fh:
+            fh.write(hlo_text)
+    coll = parse_collectives(hlo_text)
+    dyn = hlo_stats.analyze(hlo_text)   # trip-count-aware (see hlo_stats.py)
+
+    n_params = steps_mod.count_params(params_shapes)
+    n_active = steps_mod.count_active_params(cfg, params_shapes)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "n_params": n_params, "n_active_params": n_active,
+        "tokens_per_step": tokens,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "cost": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+        },
+        "collectives": coll,
+        "dynamic": {                     # while-loop trip counts applied
+            "flops": dyn["flops"],
+            "hbm_bytes": dyn["hbm_bytes"],
+            "collectives": dyn["collectives"],
+        },
+        "n_microbatches": (n_micro if shape.kind == "train" else None),
+        "layout": layout,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    return result
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool) -> pathlib.Path:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    return RESULTS_DIR / f"{arch}__{shape_name}__{mesh}.json"
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, force: bool = False,
+             verbose: bool = True) -> dict | None:
+    out = cell_path(arch, shape_name, multi_pod)
+    if out.exists() and not force:
+        if verbose:
+            print(f"[skip] {out.name} (cached)")
+        return json.loads(out.read_text())
+    try:
+        res = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                         save_hlo=out.with_suffix(".hlo.gz"))
+    except Exception as e:  # noqa: BLE001 — record the failure artifact
+        res = {"arch": arch, "shape": shape_name,
+               "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        out.with_suffix(".error.json").write_text(json.dumps(res, indent=2))
+        print(f"[FAIL] {arch} x {shape_name}: {res['error']}")
+        return None
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2))
+    if verbose:
+        gb = res["memory"]["argument_bytes"] / 2**30
+        print(f"[ok] {arch} x {shape_name} x {res['mesh']}: "
+              f"flops/dev={res['cost']['flops']:.3e} args/dev={gb:.2f}GiB "
+              f"coll={res['collectives']['total_bytes']/2**30:.3f}GiB "
+              f"compile={res['compile_s']}s")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    ok = fail = 0
+    for mp in meshes:
+        for arch, shape_name in todo:
+            r = run_cell(arch, shape_name, multi_pod=mp, force=args.force)
+            ok, fail = (ok + 1, fail) if r is not None else (ok, fail + 1)
+    for arch, shape_name, why in skipped_cells():
+        print(f"[skipped-by-design] {arch} x {shape_name}: {why}")
+    print(f"done: {ok} ok, {fail} failed")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,299 @@
+"""Trip-count-aware HLO statistics.
+
+`compiled.cost_analysis()` counts each while-loop BODY once, but a layer
+scan executes its body n_cycles times (and grad-accumulation / loss-chunk /
+q-chunk scans likewise) — so FLOPs, bytes and collective traffic are
+undercounted by the trip counts.  This module re-derives the three roofline
+inputs from the optimized HLO text with loop multipliers applied:
+
+  * flops            — dot ops exactly (2 * numel(result) * K), elementwise 1/elem
+  * hbm_bytes        — operand+result bytes at fusion boundaries (a standard
+                       proxy for HBM traffic, same convention as XLA's
+                       bytes_accessed)
+  * collective_bytes — per collective type, operand bytes x trip counts
+
+Parsing strategy: split the module into computations; compute per-
+computation totals; walk the call graph from ENTRY with multipliers
+(while bodies x trip count, conditionals x 1, fusion-called computations are
+EXCLUDED from the walk — their cost is folded into the fusion instruction).
+Trip counts come from the loop-condition's compare-against-constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "select", "compare", "and", "or", "xor", "convert", "floor", "ceil",
+    "sign", "cosine", "sine", "logistic", "exponential-minus-one",
+    "log-plus-one", "atan2", "remainder", "clamp",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# type = lazy run up to the first "opcode(" token; tuple types may contain
+# /*index=N*/ comments and layout braces, so a charset match is infeasible
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"            # name
+    r"(.*?)\s+"                                        # type (lazy)
+    r"([a-z][\w\-]*)\("                                # opcode
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->")
+
+
+def _type_numel_bytes(type_str: str) -> tuple[int, int]:
+    numel_total, bytes_total = 0, 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return numel_total, bytes_total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    opseg: str           # raw operand segment (holds literal constants)
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    symbols: dict        # name -> type_str
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+
+
+def parse_module(hlo_text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry: str | None = None
+    cur: Computation | None = None
+    for line in hlo_text.splitlines():
+        # computation headers start at column 0: "%name (...) -> ... {"
+        # (ENTRY lines may contain /*index=N*/ comments and layout braces)
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            # parameters: "%p = f32[..] parameter(0)" matches; constants too
+            continue
+        name, type_str, opcode = m.groups()
+        rest = line[m.end():]
+        close = rest.find(")")
+        opseg = rest[:close if close >= 0 else len(rest)]
+        operands = re.findall(r"%([\w.\-]+)", opseg)
+        cur.instrs.append(Instr(name, type_str, opcode, operands, opseg,
+                                rest[close + 1:] if close >= 0 else ""))
+        cur.symbols[name] = type_str
+    return comps, entry
+
+
+def _call_refs(instr: Instr) -> dict[str, list[str]]:
+    """attr kind -> called computation names."""
+    out = defaultdict(list)
+    for kind, pat in (("fused", r"calls=%?([\w.\-]+)"),
+                      ("body", r"body=%?([\w.\-]+)"),
+                      ("cond", r"condition=%?([\w.\-]+)"),
+                      ("apply", r"to_apply=%?([\w.\-]+)"),
+                      ("branch", r"branch_computations=\{([^}]*)\}")):
+        for m in re.finditer(pat, instr.attrs):
+            if kind == "branch":
+                out[kind].extend(x.strip().lstrip("%")
+                                 for x in m.group(1).split(","))
+            else:
+                out[kind].append(m.group(1))
+    return out
+
+
+def _trip_count(cond: Computation, body_sym: dict) -> int:
+    """Loop condition: compare(%iv, %const), direction=LT — the constant is
+    the trip count for scan-lowered loops (iv starts at 0)."""
+    consts: list[int] = []
+    for instr in cond.instrs:
+        if instr.opcode == "constant":
+            m = re.fullmatch(r"\s*(\d+)\s*", instr.opseg)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _instr_flops(instr: Instr, symbols: dict) -> float:
+    numel, _ = _type_numel_bytes(instr.type_str)
+    if instr.opcode == "dot":
+        k = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+        if m and instr.operands:
+            lhs_t = symbols.get(instr.operands[0], "")
+            dims = _shape_dims(lhs_t)
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    k *= dims[idx]
+        return 2.0 * numel * k
+    if instr.opcode in _ELEMENTWISE:
+        return float(numel)
+    if instr.opcode in ("reduce", "reduce-window"):
+        # ~1 op per input element
+        tot = 0
+        for op in instr.operands[: max(1, len(instr.operands) // 2)]:
+            n, _ = _type_numel_bytes(symbols.get(op, ""))
+            tot += n
+        return float(tot or numel)
+    return 0.0
+
+
+_SLICING_OPS = {"fusion", "dynamic-slice", "dynamic-update-slice", "gather",
+                "scatter", "slice"}
+
+
+def _instr_bytes(instr: Instr, symbols: dict, loop_trip: int = 1) -> float:
+    """HBM-traffic proxy: result + operand bytes.
+
+    Two scan-body corrections (without them, layer/time-scan traffic is
+    overcounted by the trip count):
+      * a slicing op whose RESULT is the loop-carried stacked buffer
+        (leading dim == trip count, e.g. dynamic-update-slice into the xs/ys
+        stack) truly writes size/trip per iteration;
+      * operands larger than the (corrected) result are capped at it — a
+        dynamic-slice reads one slice of the stacked buffer, not all of it.
+    Genuine high-K contractions are top-level `dot` ops and keep their true
+    operand sizes.
+    """
+    _, rb = _type_numel_bytes(instr.type_str)
+    cap = instr.opcode in _SLICING_OPS
+    if cap and loop_trip > 1:
+        dims = _shape_dims(instr.type_str)
+        if dims and dims[0] == loop_trip:
+            rb = rb / loop_trip
+    ob = 0
+    for op in instr.operands:
+        _, b = _type_numel_bytes(symbols.get(op, ""))
+        if cap and b > rb:
+            b = rb
+        ob += b
+    return float(rb + ob)
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "while", "conditional", "call", "custom-call"}
+
+
+def analyze(hlo_text: str, entry: str | None = None) -> dict:
+    comps, parsed_entry = parse_module(hlo_text)
+    if not comps:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "collectives": {}}
+    entry_name = entry or parsed_entry
+    if entry_name is None:  # fallback: a computation nobody calls
+        called: set[str] = set()
+        for c in comps.values():
+            for instr in c.instrs:
+                for names in _call_refs(instr).values():
+                    called.update(names)
+        entries = [c for c in comps if c not in called]
+        entry_name = entries[0] if entries else next(iter(comps))
+
+    fused: set[str] = set()
+    for c in comps.values():
+        for instr in c.instrs:
+            refs = _call_refs(instr)
+            fused.update(refs.get("fused", []))
+            fused.update(refs.get("apply", []))
+
+    coll = {c: {"count": 0.0, "bytes": 0.0} for c in _COLLECTIVES}
+    totals = {"flops": 0.0, "hbm_bytes": 0.0, "transcendentals": 0.0}
+
+    seen_stack: set[str] = set()
+
+    def walk(comp_name: str, mult: float, loop_trip: int = 1):
+        if comp_name not in comps or comp_name in seen_stack:
+            return
+        seen_stack.add(comp_name)
+        comp = comps[comp_name]
+        for instr in comp.instrs:
+            refs = _call_refs(instr)
+            # cost of fused computations folds into this instruction
+            own_flops = _instr_flops(instr, comp.symbols)
+            for fname in refs.get("fused", []):
+                if fname in comps:
+                    fc = comps[fname]
+                    own_flops += sum(_instr_flops(i, fc.symbols)
+                                     for i in fc.instrs)
+            totals["flops"] += mult * own_flops
+            if instr.opcode not in _SKIP_BYTES_OPS:
+                totals["hbm_bytes"] += mult * _instr_bytes(instr, comp.symbols,
+                                                           loop_trip)
+            base = instr.opcode.removesuffix("-start")
+            if base in _COLLECTIVES:
+                ob = sum(_type_numel_bytes(comp.symbols.get(op, ""))[1]
+                         for op in instr.operands)
+                if ob == 0:
+                    ob = _type_numel_bytes(instr.type_str)[1]
+                coll[base]["count"] += mult
+                coll[base]["bytes"] += mult * ob
+            # control flow
+            if instr.opcode == "while":
+                body = refs.get("body", [None])[0]
+                cond = refs.get("cond", [None])[0]
+                trips = _trip_count(comps[cond], comp.symbols) if cond in comps else 1
+                if body:
+                    walk(body, mult * trips, trips)
+                if cond:
+                    walk(cond, mult * trips, trips)
+            elif instr.opcode == "conditional":
+                for b in refs.get("branch", []):
+                    walk(b, mult, loop_trip)   # upper bound: all branches
+            elif instr.opcode in ("call", "async-start"):
+                for b in refs.get("apply", []):
+                    if b not in fused:
+                        walk(b, mult, loop_trip)
+        seen_stack.discard(comp_name)
+
+    walk(entry_name, 1.0)
+    coll_out: dict = {k: {"count": int(v["count"]), "bytes": float(v["bytes"])}
+                      for k, v in coll.items()}
+    coll_out["total_bytes"] = sum(v["bytes"] for v in coll.values())
+    coll_out["total_count"] = int(sum(v["count"] for v in coll.values()))
+    return {"flops": totals["flops"], "hbm_bytes": totals["hbm_bytes"],
+            "collectives": coll_out, "entry": entry_name,
+            "n_computations": len(comps)}

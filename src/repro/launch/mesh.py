@@ -1,0 +1,28 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (dry-run sets the 512-device flag first).
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); `pod` is an
+outer data axis (DCN between pods, ICI within).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_storage_mesh(n_nodes: int):
+    """1-D ring mesh for the MSR storage layer (circulant encode/repair runs
+    neighbour-wise over this axis — DESIGN.md §2)."""
+    return jax.make_mesh((n_nodes,), ("storage",))
+
+
+def make_host_mesh():
+    """Whatever this host offers (tests/examples): 1-D data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

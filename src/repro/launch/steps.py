@@ -1,0 +1,182 @@
+"""Step functions (train / prefill / decode) and ShapeDtypeStruct input specs
+for every (arch x shape) cell — shared by dryrun, train driver and benches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import Model
+from repro.optim import adamw
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    n_microbatches: int = 1):
+    """Gradient-accumulated train step.  Microbatching bounds the live
+    activation footprint (the layer scan saves one residual-stream carry per
+    layer per microbatch: O(L * b_micro * s * d) instead of O(L * b * s * d))
+    and is the unit of compute/comm overlap: XLA overlaps microbatch k's
+    gradient reduce with k+1's compute."""
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            # §Perf lever (all cells): cast weights to bf16 BEFORE use — the
+            # model consumes them in bf16 anyway, so the FSDP all-gather
+            # inside the layer scan moves half the bytes, and the backward
+            # cotangents (hence the data-axis gradient reduce-scatters) are
+            # bf16 too.  The f32 master copy and the f32 grad ACCUMULATOR
+            # keep the update exact-ish (error < 1 bf16 ulp per microbatch).
+            pc = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32 and x.ndim >= 2 else x, p)
+            return model.loss(pc, batch)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % n_microbatches == 0, (b, n_microbatches)
+                return x.reshape(n_microbatches, b // n_microbatches,
+                                 *x.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()
+                     if not (k == "positions" and v.ndim == 3)}
+            if "positions" in batch and batch["positions"].ndim == 3:
+                # M-RoPE positions (3, b, s): batch is dim 1
+                pos = batch["positions"]
+                micro["positions"] = pos.reshape(
+                    3, n_microbatches, pos.shape[1] // n_microbatches,
+                    pos.shape[2]).swapaxes(0, 1)
+
+            zero_grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                g_acc, loss_acc, aux_acc = acc
+                (loss, metrics), g = grads_of(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss, aux_acc + metrics["aux"]), None
+
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                body, (zero_grads, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatches, grads)
+            loss = loss_sum / n_microbatches
+            metrics = {"xent": loss, "aux": aux_sum / n_microbatches}
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, state["opt"], state["params"])
+        out = {"params": new_params, "opt": new_opt}
+        return out, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def pick_microbatches(shape: ShapeConfig, n_batch_shards: int,
+                      target_dev_tokens: int = 16384) -> int:
+    # 16k tokens/device/microbatch: fewer microbatches halve the per-step
+    # FSDP gather + gradient reduce traffic (both scale with n_micro) at the
+    # cost of ~2x live activations — still inside the 16 GiB HBM envelope
+    # (EXPERIMENTS.md §Perf, lever 2).
+    """Largest microbatch count that divides the per-shard batch while
+    pushing per-device live tokens down to ~target_dev_tokens."""
+    local = shape.global_batch // max(n_batch_shards, 1)
+    if local <= 0:
+        return 1
+    want = max(1, (local * shape.seq_len) // target_dev_tokens)
+    n = min(local, want)
+    while local % n:
+        n -= 1
+    return max(1, n)
+
+
+def make_prefill_step(model: Model, *, max_len: int, q_chunk: int = 1024):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len, q_chunk=q_chunk)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, max_len: int):
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, max_len=max_len)
+
+    return serve_step
+
+
+# ------------------------------------------------------------ input specs
+def f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, labels: bool = True) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a train/prefill
+    batch (weak-type-correct, shardable, no device allocation).
+
+    [audio]/[vlm]: the frontend is a stub — specs carry precomputed
+    frame/patch embeddings instead of raw modalities (assignment note)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.embeds_as_input and not cfg.is_encoder_decoder:
+        out["inputs_embeds"] = f((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = f((b, s), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = f((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.mrope_sections:
+        out["positions"] = f((3, b, s), jnp.int32)
+    if labels and shape.kind == "train":
+        out["labels"] = f((b, s), jnp.int32)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model):
+    """(cache, tokens, pos) stand-ins for serve_step at this cell: one new
+    token against a KV cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    tokens = f((b, 1), jnp.int32)
+    pos = f((), jnp.int32)
+    return cache, tokens, pos
+
+
+def state_specs(model: Model):
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(lambda: adamw.init(params))
+    return {"params": params, "opt": opt}
+
+
+def count_params(params_shapes) -> int:
+    import math
+    return sum(math.prod(x.shape) if x.shape else 1
+               for x in jax.tree_util.tree_leaves(params_shapes))
+
+
+def count_active_params(cfg: ModelConfig, params_shapes) -> int:
+    """MoE: experts beyond top-k don't contribute to per-token compute."""
+    total = count_params(params_shapes)
+    if not cfg.n_experts:
+        return total
+    # expert tensors are the w_in/w_gate/w_out leaves under "moe" (they carry
+    # an E axis, possibly behind the stacked n_cycles axis)
+    import math
+    expert = 0
+    def visit(path, leaf):
+        nonlocal expert
+        names = [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
+        if "moe" in names and names[-1] in ("w_in", "w_gate", "w_out"):
+            expert += math.prod(leaf.shape)
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, params_shapes)
+    frac = cfg.n_experts_per_token / cfg.n_experts
+    return int(total - expert * (1 - frac))

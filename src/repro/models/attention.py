@@ -1,0 +1,206 @@
+"""Attention: GQA/MQA/MHA, global & sliding-window, self & cross, with
+KV caches (append cache for global, ring buffer for windowed layers).
+
+Numerics: logits accumulate in fp32, softmax in fp32, values in bf16.
+Prefill uses a q-chunked attention (bounded score memory, no O(S^2) buffer);
+train uses the plain masked form (remat at the layer level bounds its
+footprint at 4k tokens); decode reads the whole cache with one query.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ctx as shctx
+
+from .flash import flash_attention
+from .layers import COMPUTE_DTYPE, PARAM_DTYPE, apply_rope, dense_init, rms_head_norm
+
+NEG_INF = -1e30
+
+# Train-path attention switches to the flash custom-VJP (models/flash.py)
+# above this many score elements: neither fwd nor bwd materializes the
+# (sq, sk) buffer, which dominated HBM for the b_local=1 DP-layout train
+# cells (yi/gemma3/qwen2-vl — EXPERIMENTS.md §Perf).  Small shapes (all unit
+# tests) keep the exact materializing path.
+FLASH_MIN_ELEMS = 2 ** 28
+
+
+# ----------------------------------------------------------------- params
+def init_attention(cfg, key, *, cross: bool = False) -> dict:
+    d, h, m, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd)),
+        "wk": dense_init(ks[1], (d, m, hd)),
+        "wv": dense_init(ks[2], (d, m, hd)),
+        "wo": dense_init(ks[3], (h, hd, d), scale=(h * hd) ** -0.5),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_scale"] = jnp.ones((hd,), PARAM_DTYPE)
+        p["k_scale"] = jnp.ones((hd,), PARAM_DTYPE)
+    return p
+
+
+# -------------------------------------------------------------- projections
+def project_q(cfg, params, x, cos, sin):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if "q_scale" in params:
+        q = rms_head_norm(q, params["q_scale"], cfg.norm_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+    return q
+
+
+def project_kv(cfg, params, x, cos, sin):
+    k = jnp.einsum("bsd,dmk->bsmk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dmk->bsmk", x, params["wv"].astype(x.dtype))
+    if "k_scale" in params:
+        k = rms_head_norm(k, params["k_scale"], cfg.norm_eps)
+    if cos is not None:
+        k = apply_rope(k, cos, sin)
+    return k, v
+
+
+def out_proj(params, o):
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(o.dtype))
+
+
+# ---------------------------------------------------------------- core math
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int],
+               k_valid=None) -> jnp.ndarray:
+    """(b, sq, sk) additive bias from absolute positions."""
+    ok = jnp.ones(q_pos.shape[:1] + (q_pos.shape[1], k_pos.shape[1]), bool)
+    d = q_pos[:, :, None] - k_pos[:, None, :]
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    if k_valid is not None:
+        ok &= k_valid[:, None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias):
+    """q: (b,sq,h,hd)  k/v: (b,sk,m,hd)  bias: (b,sq,sk) -> (b,sq,h,hd).
+
+    GQA via repeat-kv: k/v are broadcast from m to h heads so every einsum
+    keeps the cleanly-sharded `h` axis (no (m, g) reshape across the model
+    axis — that reshape forces involuntary resharding under GSPMD).  XLA
+    fuses the broadcast into the dots, so no real memory is spent.
+    """
+    b, sq, h, hd = q.shape
+    m = k.shape[2]
+    if m != h:
+        g = h // m
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = shctx.constrain(q, "attn_q")          # seq-parallel hint (policy-driven)
+    # NOTE (§Perf, refuted hypothesis): storing scores/probs in bf16 was
+    # tried to cut the f32 buffers; the manual-softmax backward materialized
+    # MORE intermediates under the HBM proxy (yi M: 14.5 -> 15.4 s) and was
+    # reverted.  The real lever is a flash-style custom-vjp (never
+    # materialize (s, t) buffers) — see attention "flash" path.
+    logits = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32)
+    logits = shctx.constrain(logits, "attn_scores")
+    logits = logits * (hd ** -0.5) + bias[:, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhst,bthk->bshk", probs, v)
+    return shctx.constrain(o, "attn_out")
+
+
+def attention(cfg, q, k, v, *, q_pos, k_pos, causal=True, window=None,
+              k_valid=None, q_chunk: Optional[int] = None):
+    """Masked GQA attention.  If q_chunk is set, scan over query chunks
+    (prefill path: bounds live score memory to (b, h, q_chunk, sk))."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if (k_valid is None and q_chunk is None
+            and b * h * sq * sk >= FLASH_MIN_ELEMS and sq > 1):
+        m = k.shape[2]
+        if m != h:
+            k = jnp.repeat(k, h // m, axis=2)
+            v = jnp.repeat(v, h // m, axis=2)
+        return flash_attention(q, k, v, q_pos, k_pos, causal, window, 1024)
+    if q_chunk is None or q.shape[1] <= q_chunk:
+        return _sdpa(q, k, v, _mask_bias(q_pos, k_pos, causal=causal,
+                                         window=window, k_valid=k_valid))
+    b, sq, h, hd = q.shape
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    nc = sq // q_chunk
+    qc = q.reshape(b, nc, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(b, nc, q_chunk).transpose(1, 0, 2)
+
+    def one(args):
+        qi, pi = args
+        bias = _mask_bias(pi, k_pos, causal=causal, window=window, k_valid=k_valid)
+        return _sdpa(qi, k, v, bias)
+
+    oc = jax.lax.map(one, (qc, pc))
+    return oc.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+# -------------------------------------------------------------------- caches
+def init_global_cache(cfg, batch: int, max_len: int) -> dict:
+    m, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, m, hd), COMPUTE_DTYPE),
+        "v": jnp.zeros((batch, max_len, m, hd), COMPUTE_DTYPE),
+    }
+
+
+def init_window_cache(cfg, batch: int) -> dict:
+    m, hd, w = cfg.n_kv_heads, cfg.head_dim, cfg.window_size
+    return {
+        "k": jnp.zeros((batch, w, m, hd), COMPUTE_DTYPE),
+        "v": jnp.zeros((batch, w, m, hd), COMPUTE_DTYPE),
+    }
+
+
+def global_cache_update(cache: dict, k_new, v_new, pos) -> dict:
+    """Write s_new entries at [pos, pos+s_new) (scalar traced pos)."""
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos, 0, 0))
+    return {"k": k, "v": v}
+
+
+def window_cache_update(cache: dict, k_new, v_new, pos) -> dict:
+    """Ring-buffer write of ONE token at slot pos % W (decode path)."""
+    w = cache["k"].shape[1]
+    slot = jax.lax.rem(pos, w)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    return {"k": k, "v": v}
+
+
+def window_slot_positions(pos, w: int) -> jnp.ndarray:
+    """Absolute position of the latest write in each ring slot, given that the
+    token at `pos` has just been written: slot s holds position
+    pos - ((pos - s) mod W); slots never written are masked by the caller
+    via position > pos or < 0 checks."""
+    s = jnp.arange(w, dtype=jnp.int32)
+    return pos - jnp.mod(pos - s, w)   # jnp.mod is non-negative for w > 0
+
+
+def prefill_to_window_cache(cfg, k_full, v_full, seq_len: int) -> dict:
+    """Convert full-length prefill K/V into the ring buffer holding the last W
+    positions, laid out so slot s holds absolute position p with p % W == s."""
+    w = cfg.window_size
+    b, s, m, hd = k_full.shape
+    if s < w:
+        pad = w - s
+        k = jnp.concatenate([k_full, jnp.zeros((b, pad, m, hd), k_full.dtype)], 1)
+        v = jnp.concatenate([v_full, jnp.zeros((b, pad, m, hd), v_full.dtype)], 1)
+        return {"k": k, "v": v}
+    last_k = k_full[:, s - w:, :, :]
+    last_v = v_full[:, s - w:, :, :]
+    # absolute positions s-w .. s-1 ; slot of position p is p % W
+    roll = (s - w) % w
+    return {"k": jnp.roll(last_k, roll, axis=1), "v": jnp.roll(last_v, roll, axis=1)}

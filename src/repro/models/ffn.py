@@ -1,0 +1,33 @@
+"""Dense FFN: SwiGLU (silu), GeGLU (geglu) or plain-GELU MLP (gelu)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def is_gated(act: str) -> bool:
+    return act in ("silu", "geglu")
+
+
+def init_ffn(cfg, key, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, ff)),
+         "w_out": dense_init(ks[1], (ff, d))}
+    if is_gated(cfg.act):
+        p["w_gate"] = dense_init(ks[2], (d, ff))
+    return p
+
+
+def apply_ffn(cfg, params, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ params["w_in"].astype(x.dtype)
+    if is_gated(cfg.act):
+        g = x @ params["w_gate"].astype(x.dtype)
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["w_out"].astype(x.dtype)

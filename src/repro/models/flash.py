@@ -1,0 +1,125 @@
+"""Flash-style attention with a custom VJP (pure jnp, TPU-fusable).
+
+Neither forward nor backward ever materializes the (sq, sk) score matrix:
+the forward streams KV chunks with an online softmax saving only (o, lse);
+the backward recomputes per-chunk probabilities from (q, k, lse) and
+accumulates dq/dk/dv chunkwise.  This is the documented §Perf lever for the
+train cells whose f32 score buffers exceeded HBM (yi-34b/gemma3/qwen2-vl at
+b_local = 1).
+
+Masking is positional (causal and/or sliding window + validity), matching
+attention._mask_bias semantics.  GQA is handled by the caller (repeat-kv).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_bias(q_pos, k_pos, causal, window):
+    """(b, sq_c, sk_c) additive f32 bias from absolute positions."""
+    d = q_pos[:, :, None] - k_pos[:, None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _split(x, nc, axis=1):
+    """(b, s, ...) -> (nc, b, s/nc, ...) chunk-major."""
+    b = x.shape[0]
+    s = x.shape[axis]
+    shape = x.shape[:axis] + (nc, s // nc) + x.shape[axis + 1:]
+    return jnp.moveaxis(x.reshape(shape), axis, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_attention(q, k, v, q_pos, k_pos, causal=True, window=None,
+                    kv_chunk=1024):
+    """q: (b,sq,h,hd), k/v: (b,sk,h,hd) (same head count — repeat-kv before),
+    q_pos: (b,sq), k_pos: (b,sk).  Returns (b,sq,h,hd) in q.dtype."""
+    o, _ = _flash_fwd_inner(q, k, v, q_pos, k_pos, causal, window, kv_chunk)
+    return o
+
+
+def _flash_fwd_inner(q, k, v, q_pos, k_pos, causal, window, kv_chunk):
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    nc = max(1, sk // min(kv_chunk, sk))
+    assert sk % nc == 0, (sk, nc)
+    scale = hd ** -0.5
+    ks_, vs_ = _split(k, nc), _split(v, nc)
+    kps = _split(k_pos, nc)
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry                       # (b,h,sq), (b,h,sq), (b,h,sq,hd)
+        kc, vc, kpc = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kc.astype(jnp.float32)) * scale
+        s = s + _chunk_bias(q_pos, kpc, causal, window)[:, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc = (acc * corr[..., None]
+               + jnp.einsum("bhqk,bkhd->bhqd", p, vc.astype(jnp.float32)))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks_, vs_, kps))
+    l_safe = jnp.maximum(l, 1e-30)
+    o = (acc / l_safe[..., None]).swapaxes(1, 2)          # (b,sq,h,hd)
+    lse = m + jnp.log(l_safe)                             # (b,h,sq)
+    return o.astype(q.dtype), lse
+
+
+def _fwd(q, k, v, q_pos, k_pos, causal, window, kv_chunk):
+    o, lse = _flash_fwd_inner(q, k, v, q_pos, k_pos, causal, window, kv_chunk)
+    return o, (q, k, v, q_pos, k_pos, o, lse)
+
+
+def _bwd(causal, window, kv_chunk, res, do):
+    q, k, v, q_pos, k_pos, o, lse = res
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    nc = max(1, sk // min(kv_chunk, sk))
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    of = o.astype(jnp.float32)
+    # delta_q = rowsum(do * o): (b,h,sq)
+    delta = jnp.einsum("bqhd,bqhd->bhq", dof, of)
+    ks_, vs_ = _split(k, nc), _split(v, nc)
+    kps = _split(k_pos, nc)
+
+    def body(dq_acc, xs):
+        kc, vc, kpc = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kc.astype(jnp.float32)) * scale
+        s = s + _chunk_bias(q_pos, kpc, causal, window)[:, None, :, :]
+        p = jnp.exp(s - lse[..., None])                    # (b,h,sq,kc)
+        dv_c = jnp.einsum("bhqk,bqhd->bkhd", p, dof)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", dof, vc.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                                     kc.astype(jnp.float32))
+        dk_c = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks_, vs_, kps))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, sk, h, hd)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, sk, h, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+flash_attention.defvjp(_fwd, _bwd)

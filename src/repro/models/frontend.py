@@ -1,0 +1,49 @@
+"""Modality frontend STUBS (assignment: "[audio]/[vlm] entries specify the
+transformer BACKBONE only; the modality frontend is a STUB — input_specs()
+provides precomputed frame/patch embeddings").
+
+These helpers define the stand-in embedding shapes and a deterministic
+synthetic generator for smoke tests / examples.  A real deployment would
+replace them with the conv feature extractor (whisper) or the dynamic-
+resolution ViT (qwen2-vl).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def audio_frame_embeddings_shape(cfg, batch: int) -> tuple[int, int, int]:
+    """Whisper: 30 s of audio -> cfg.encoder_seq log-mel frame embeddings."""
+    return (batch, cfg.encoder_seq, cfg.d_model)
+
+
+def vision_patch_embeddings_shape(cfg, batch: int, seq: int) -> tuple[int, int, int]:
+    """Qwen2-VL: dynamic-resolution patches + text, already merged to one
+    stream of `seq` embeddings."""
+    return (batch, seq, cfg.d_model)
+
+
+def synth_embeddings(key, shape, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.02
+
+
+def mrope_positions(batch: int, seq: int, *, image_tokens: int = 0,
+                    grid_hw: tuple[int, int] = (0, 0)) -> np.ndarray:
+    """Qwen2-VL M-RoPE position streams (3, b, s): vision tokens get (t, h, w)
+    grid coordinates, text tokens advance all three streams together."""
+    t = np.zeros((3, seq), dtype=np.int32)
+    if image_tokens:
+        gh, gw = grid_hw
+        assert gh * gw == image_tokens
+        hh, ww = np.meshgrid(np.arange(gh), np.arange(gw), indexing="ij")
+        t[0, :image_tokens] = 0
+        t[1, :image_tokens] = hh.reshape(-1)
+        t[2, :image_tokens] = ww.reshape(-1)
+        base = max(gh, gw)
+    else:
+        base = 0
+    text = np.arange(seq - image_tokens, dtype=np.int32) + base
+    t[:, image_tokens:] = text[None]
+    return np.broadcast_to(t[:, None, :], (3, batch, seq)).copy()

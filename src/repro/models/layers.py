@@ -1,0 +1,112 @@
+"""Shared layer primitives: norms, initializers, RoPE / M-RoPE, embeddings.
+
+Compute dtype is bf16, parameters are stored fp32 (cast at use); all shapes
+are chosen to shard cleanly under repro.sharding.policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def dense_init(key, shape, scale: float | None = None) -> jnp.ndarray:
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, PARAM_DTYPE) * scale)
+
+
+def embed_init(key, shape) -> jnp.ndarray:
+    # d_model^-0.5 keeps (tied-)head logits O(1) at init; d_model is the
+    # smaller dim for both (vocab, d) embeddings and (d, vocab) heads
+    scale = min(shape) ** -0.5 if len(shape) >= 2 else 0.02
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, PARAM_DTYPE) * scale
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(cfg, dim: int) -> dict:
+    p = {"scale": jnp.ones((dim,), PARAM_DTYPE)}
+    if cfg.norm == "layer":
+        p["bias"] = jnp.zeros((dim,), PARAM_DTYPE)
+    return p
+
+
+def apply_norm(cfg, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """qk-norm: RMS over the head dim."""
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps) * scale
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (..., s) int32 -> cos/sin of shape (..., s, head_dim//2), fp32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (b, s, h, hd); cos/sin: (b, s, hd//2) or (s, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def mrope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                 sections: tuple[int, int, int]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL M-RoPE: positions (3, b, s) for (t, h, w) streams; the rotary
+    half-dim is split into `sections` (sum = head_dim//2), each section using
+    its own position stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # section id per frequency slot
+    cos_parts, sin_parts = [], []
+    start = 0
+    for sec_id, width in enumerate(sections):
+        f = freq[start:start + width]
+        ang = positions[sec_id].astype(jnp.float32)[..., None] * f   # (b, s, width)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += width
+    return jnp.concatenate(cos_parts, -1), jnp.concatenate(sin_parts, -1)
+
+
+def positions_to_angles(cfg, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (b, s) — or (3, b, s) when cfg.mrope_sections is set."""
+    if cfg.mrope_sections is not None:
+        if positions.ndim == 2:   # text-only stream: all three sections aligned
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return mrope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    return rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------- activations
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "geglu": jax.nn.gelu}[name]

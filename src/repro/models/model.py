@@ -1,0 +1,176 @@
+"""Model: embeddings + stack(s) + chunked-loss head.  Public API:
+
+    model = Model(cfg)
+    params = model.init(key)                       (eval_shape-able)
+    loss, aux = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+
+Batch dict keys (see repro.data.pipeline / repro.launch.dryrun.input_specs):
+    tokens (b, s) int32          — or inputs_embeds (b, s, d) for [audio]/[vlm]
+    labels (b, s) int32          — train only
+    positions (b, s) int32       — or (3, b, s) for M-RoPE
+    enc_embeds (b, enc_seq, d)   — encoder-decoder only (stub frontend output)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from .layers import COMPUTE_DTYPE, PARAM_DTYPE, apply_norm, embed_init, init_norm, positions_to_angles
+
+Params = Any
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        params: dict = {
+            "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+            "final_norm": init_norm(cfg, cfg.d_model),
+            "stack": tfm.init_stack(cfg, ks[1], decoder=cfg.is_encoder_decoder),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(ks[2], (cfg.d_model, cfg.vocab_size))
+        if cfg.is_encoder_decoder:
+            enc_cfg = self._encoder_cfg()
+            params["encoder"] = {
+                "stack": tfm.init_stack(enc_cfg, ks[3]),
+                "final_norm": init_norm(enc_cfg, enc_cfg.d_model),
+            }
+        if cfg.param_dtype != "float32":
+            dt = jnp.dtype(cfg.param_dtype)
+            params = jax.tree_util.tree_map(lambda x: x.astype(dt), params)
+        return params
+
+    def _encoder_cfg(self):
+        import dataclasses
+        cfg = self.cfg
+        return dataclasses.replace(
+            cfg, n_layers=cfg.encoder_layers, layer_pattern=("enc",),
+            is_encoder_decoder=False)
+
+    def head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # -------------------------------------------------------------- embed
+    def _embed_inputs(self, params, batch) -> jnp.ndarray:
+        if "inputs_embeds" in batch:
+            return batch["inputs_embeds"].astype(COMPUTE_DTYPE)
+        tok = batch["tokens"]
+        return params["embed"].astype(COMPUTE_DTYPE)[tok]
+
+    def _encode(self, params, batch) -> Optional[jnp.ndarray]:
+        if not self.cfg.is_encoder_decoder:
+            return None
+        enc_cfg = self._encoder_cfg()
+        x = batch["enc_embeds"].astype(COMPUTE_DTYPE)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        cos, sin = positions_to_angles(enc_cfg, pos)
+        ctx = tfm.Ctx(mode="train", cos=cos, sin=sin, q_pos=pos, pos=None,
+                      max_len=s)
+        x, _, _ = tfm.apply_stack(enc_cfg, params["encoder"]["stack"], x, ctx,
+                                  None, remat=False)
+        return apply_norm(enc_cfg, params["encoder"]["final_norm"], x)
+
+    # ------------------------------------------------------------ forward
+    def _positions(self, batch) -> jnp.ndarray:
+        if "positions" in batch:
+            return batch["positions"]
+        if "inputs_embeds" in batch:
+            b, s, _ = batch["inputs_embeds"].shape
+        else:
+            b, s = batch["tokens"].shape
+        return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def forward(self, params, batch, mode: str, cache=None, *, pos=None,
+                max_len: int = 0, q_chunk: Optional[int] = None,
+                remat: bool = True):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        positions = self._positions(batch)
+        # masks use the temporal stream when M-RoPE supplies (t, h, w) streams
+        rope_pos = positions[0] if positions.ndim == 3 else positions   # (b,s)
+        cos, sin = positions_to_angles(cfg, positions)
+        enc_out = (self._encode(params, batch)
+                   if cfg.is_encoder_decoder and mode != "decode" else None)
+        ctx = tfm.Ctx(mode=mode, cos=cos, sin=sin, q_pos=rope_pos, pos=pos,
+                      max_len=max_len, enc_out=enc_out, q_chunk=q_chunk)
+        x, cache, aux = tfm.apply_stack(cfg, params["stack"], x, ctx, cache,
+                                        decoder=cfg.is_encoder_decoder,
+                                        remat=remat)
+        x = apply_norm(cfg, params["final_norm"], x)
+        return x, cache, aux
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch, *, remat: bool = True):
+        """Mean next-token cross entropy, vocab-sharded chunked over seq."""
+        cfg = self.cfg
+        h, _, aux = self.forward(params, batch, "train", remat=remat)
+        labels = batch["labels"]
+        head = self.head(params).astype(COMPUTE_DTYPE)
+        b, s, d = h.shape
+        chunk = min(cfg.loss_chunk, s)
+        if s % chunk:
+            chunk = s
+        nc = s // chunk
+        hs = h.reshape(b, nc, chunk, d).swapaxes(0, 1)
+        ys = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+        def body(tot, xs):
+            hi, yi = xs
+            logits = (hi @ head).astype(jnp.float32)
+            if cfg.logit_softcap:
+                logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, yi[..., None], axis=-1)[..., 0]
+            return tot + jnp.sum(lse - ll), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+        loss = total / (b * s)
+        return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_len: int):
+        return tfm.init_stack_cache(self.cfg, batch, max_len,
+                                    decoder=self.cfg.is_encoder_decoder)
+
+    def prefill(self, params, batch, *, max_len: int = 0,
+                q_chunk: Optional[int] = 1024):
+        """Run the prompt, return (last-position logits, filled cache)."""
+        cfg = self.cfg
+        if "inputs_embeds" in batch:
+            b, s = batch["inputs_embeds"].shape[:2]
+        else:
+            b, s = batch["tokens"].shape
+        max_len = max(max_len, s)
+        cache = self.init_cache(b, max_len)
+        h, cache, _ = self.forward(params, batch, "prefill", cache,
+                                   max_len=max_len, q_chunk=q_chunk,
+                                   remat=False)
+        logits = (h[:, -1:] @ self.head(params).astype(h.dtype)).astype(jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos, *, max_len: int):
+        """tokens: (b, 1) int32; pos: scalar int32 — absolute position of the
+        incoming token.  Returns (logits (b,1,V), new cache)."""
+        b = tokens.shape[0]
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32)[None, None], (b, 1))
+        batch = {"tokens": tokens, "positions": positions}
+        h, cache, _ = self.forward(params, batch, "decode", cache, pos=pos,
+                                   max_len=max_len, remat=False)
+        logits = (h @ self.head(params).astype(h.dtype)).astype(jnp.float32)
+        return logits, cache

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with per-chunk capacity
+(GShard-style einsum dispatch), expert-parallel over the `model` mesh axis,
+optional parallel dense-residual branch (Arctic).
+
+Memory note: the dispatch one-hot is (b, chunk, E, C); chunking the sequence
+bounds it to tens of MB at production shapes while keeping the einsum
+formulation GSPMD-friendly (experts shard on `model`, tokens on `data`;
+no explicit all-to-all is needed because activations are replicated across
+the model axis under our TP layout).
+
+Load-balancing aux loss follows Switch (mean fraction * mean prob per expert).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ffn import init_ffn, apply_ffn, is_gated
+from .layers import dense_init
+
+
+def init_moe(cfg, key) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_dff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), scale=d ** -0.5),
+        "w_in": dense_init(ks[1], (e, d, ff)),
+        "w_out": dense_init(ks[2], (e, ff, d)),
+    }
+    if is_gated(cfg.act):
+        p["w_gate"] = dense_init(ks[3], (e, d, ff))
+    if cfg.dense_residual:
+        p["residual"] = init_ffn(cfg, ks[4], d_ff=cfg.d_ff)
+    return p
+
+
+def _capacity(chunk: int, cfg) -> int:
+    c = int(chunk * cfg.n_experts_per_token / cfg.n_experts * cfg.capacity_factor)
+    return max(1, min(chunk, c))
+
+
+def _moe_chunk(cfg, params, x):
+    """x: (b, t, d) one sequence chunk -> (out, aux_loss_terms)."""
+    b, t, d = x.shape
+    e, topk = cfg.n_experts, cfg.n_experts_per_token
+    cap = _capacity(t, cfg)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)  # (b,t,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, topk)                     # (b,t,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)              # (b,t,k,e)
+    flat = onehot.reshape(b, t * topk, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(b, t, topk, e)
+    pos_in_expert = (pos_in_expert * onehot).sum(-1)                     # (b,t,k)
+    keep = pos_in_expert < cap
+    # dispatch (b,t,e,cap) / combine weights via capacity-slot one-hot
+    slot_oh = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), cap,
+                             dtype=jnp.float32)                          # (b,t,k,cap)
+    disp = jnp.einsum("btke,btkc,btk->btec", onehot, slot_oh,
+                      keep.astype(jnp.float32))                          # (b,t,e,cap)
+    comb = jnp.einsum("btec,btke,btk->btec", disp, onehot,
+                      gate_vals * keep.astype(jnp.float32))
+
+    xe = jnp.einsum("btec,btd->becd", disp.astype(x.dtype), x)           # (b,e,cap,d)
+    h = jnp.einsum("becd,edf->becf", xe, params["w_in"].astype(x.dtype))
+    if "w_gate" in params:
+        g = jnp.einsum("becd,edf->becf", xe, params["w_gate"].astype(x.dtype))
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("becf,efd->becd", h, params["w_out"].astype(x.dtype))
+    out = jnp.einsum("btec,becd->btd", comb.astype(x.dtype), ye)
+
+    # Switch aux loss terms for this chunk
+    me = jnp.mean(onehot.sum(2), axis=(0, 1))        # fraction routed per expert
+    ce = jnp.mean(probs, axis=(0, 1))                # mean router prob per expert
+    aux = jnp.sum(me * ce) * e / topk
+    return out, aux
+
+
+def apply_moe(cfg, params, x):
+    """x: (b, s, d) -> (out, aux_loss).  Sequence is chunked for dispatch
+    memory; capacity is enforced per chunk."""
+    b, s, d = x.shape
+    chunk = min(cfg.moe_chunk, s)
+    if s % chunk == 0 and s // chunk > 1:
+        nc = s // chunk
+        xs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+
+        def body(carry, xi):
+            o, a = _moe_chunk(cfg, params, xi)
+            return carry + a, o
+
+        aux_sum, os_ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+        out = os_.transpose(1, 0, 2, 3).reshape(b, s, d)
+        aux = aux_sum / (s // chunk)
+    else:
+        out, aux = _moe_chunk(cfg, params, x)
+    if "residual" in params:
+        out = out + apply_ffn(cfg, params["residual"], x)
+    return out, aux

@@ -1,0 +1,105 @@
+"""Griffin recurrent block (RecurrentGemma): temporal conv1d + RG-LRU.
+
+RG-LRU (arXiv:2402.19427 eq. 1-4):
+    r_t = sigmoid(W_a x_t)                   (recurrence gate)
+    i_t = sigmoid(W_x x_t)                   (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses an associative scan over the sequence (log-depth on
+TPU); decode carries (conv_state, h) in the cache.  The block wraps the LRU
+with the Griffin gated-linear-unit structure:  out = W_out( GELU(W_gate x) *
+LRU(conv1d(W_branch x)) ).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, PARAM_DTYPE, dense_init
+
+_C = 8.0
+
+
+def init_rglru_block(cfg, key) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a^c in [0.9, 0.999] (griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), PARAM_DTYPE, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))     # softplus^-1(-log(u)/c)
+    return {
+        "w_branch": dense_init(ks[1], (d, w)),
+        "w_gate": dense_init(ks[2], (d, w)),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, w), scale=cfg.conv_width ** -0.5),
+        "conv_b": jnp.zeros((w,), PARAM_DTYPE),
+        "wa": dense_init(ks[4], (w, w)),
+        "wx": dense_init(ks[5], (w, w)),
+        "lam": lam,
+        "w_out": dense_init(ks[6], (w, d)),
+    }
+
+
+def _causal_conv(params, x, state=None):
+    """Depthwise causal conv1d, width cw.  x: (b, s, w).
+    state: (b, cw-1, w) prior context (decode) or None (train: zero pad)."""
+    cw = params["conv_w"].shape[0]
+    wt = params["conv_w"].astype(x.dtype)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (b, s+cw-1, w)
+    out = sum(xp[:, i:i + x.shape[1], :] * wt[i] for i in range(cw))
+    new_state = xp[:, xp.shape[1] - (cw - 1):, :]
+    return out + params["conv_b"].astype(x.dtype), new_state
+
+
+def _rg_lru_gates(params, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["wx"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r          # (b, s, w)
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated_x
+
+
+def _lru_scan(a, gx, h0=None):
+    """h_t = a_t h_{t-1} + gx_t via associative scan over the seq axis.
+    a, gx: (b, s, w) fp32; h0: (b, w) initial state or None."""
+    if h0 is not None:
+        gx = gx.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return h                                              # (b, s, w)
+
+
+def apply_rglru_block(cfg, params, x, *, cache=None, pos=None):
+    """x: (b, s, d).  Returns (out, new_cache).
+
+    Train/prefill: cache=None -> associative scan from zero state; the
+    returned cache carries (conv_state, h_last) for decode handoff.
+    Decode: cache={"conv": (b,cw-1,w), "h": (b,w)}; s may be 1.
+    """
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype))
+    branch = x @ params["w_branch"].astype(x.dtype)
+    conv_state = None if cache is None else cache["conv"]
+    branch, new_conv = _causal_conv(params, branch, conv_state)
+    a, gx = _rg_lru_gates(params, branch)
+    h0 = None if cache is None else cache["h"].astype(jnp.float32)
+    h = _lru_scan(a, gx, h0)
+    new_cache = {"conv": new_conv.astype(COMPUTE_DTYPE),
+                 "h": h[:, -1, :].astype(jnp.float32)}
+    out = (gate * h.astype(x.dtype)) @ params["w_out"].astype(x.dtype)
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch: int) -> dict:
+    w = cfg.rnn_width
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, w), COMPUTE_DTYPE),
+            "h": jnp.zeros((batch, w), jnp.float32)}

@@ -1,0 +1,299 @@
+"""Block assembly + scan-over-superblocks transformer stack.
+
+The layer pattern (cfg.layer_pattern, e.g. ("la","la","la","la","la","ga"))
+is cycled to n_layers.  Full cycles are STACKED and run under one lax.scan —
+HLO size stays O(cycle), which is what makes 512-device SPMD compiles
+tractable; remainder layers are unrolled.
+
+Modes: "train" (no cache), "prefill" (build cache), "decode" (consume cache,
+s == 1).  Caches mirror the parameter stacking structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ctx as shctx
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import xlstm as xlstm_mod
+from .layers import apply_norm, init_norm, positions_to_angles
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context threaded through blocks."""
+    mode: str                       # train | prefill | decode
+    cos: Optional[jnp.ndarray]      # rotary angles for current positions
+    sin: Optional[jnp.ndarray]
+    q_pos: jnp.ndarray              # (b, s) absolute positions of the inputs
+    pos: Optional[jnp.ndarray]      # scalar int32: decode write offset
+    max_len: int                    # global-attn cache capacity (decode)
+    enc_out: Optional[jnp.ndarray] = None   # encoder hidden states (enc-dec)
+    q_chunk: Optional[int] = None   # prefill attention chunking
+
+
+# ------------------------------------------------------------- block: init
+def init_block(cfg, key, kind: str, *, decoder: bool = False) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if kind in ("ga", "la", "gm", "enc"):
+        p = {"norm1": init_norm(cfg, d),
+             "attn": attn.init_attention(cfg, ks[0]),
+             "norm2": init_norm(cfg, d)}
+        if kind == "gm":
+            p["moe"] = moe_mod.init_moe(cfg, ks[1])
+        else:
+            p["ffn"] = ffn_mod.init_ffn(cfg, ks[1])
+        if decoder and cfg.is_encoder_decoder and kind != "enc":
+            p["cross_norm"] = init_norm(cfg, d)
+            p["cross"] = attn.init_attention(cfg, ks[2], cross=True)
+        return p
+    if kind == "rg":
+        return {"norm1": init_norm(cfg, d),
+                "rglru": rglru_mod.init_rglru_block(cfg, ks[0]),
+                "norm2": init_norm(cfg, d),
+                "ffn": ffn_mod.init_ffn(cfg, ks[1])}
+    if kind == "ml":
+        return {"norm1": init_norm(cfg, d),
+                "mlstm": xlstm_mod.init_mlstm_block(cfg, ks[0])}
+    if kind == "sl":
+        return {"norm1": init_norm(cfg, d),
+                "slstm": xlstm_mod.init_slstm_block(cfg, ks[0])}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_block_cache(cfg, kind: str, batch: int, max_len: int,
+                     *, decoder: bool = False) -> dict:
+    if kind in ("ga", "gm", "enc"):
+        c = attn.init_global_cache(cfg, batch, max_len)
+    elif kind == "la":
+        c = attn.init_window_cache(cfg, batch)
+    elif kind == "rg":
+        c = rglru_mod.init_rglru_cache(cfg, batch)
+    elif kind == "ml":
+        c = xlstm_mod.init_mlstm_cache(cfg, batch)
+    elif kind == "sl":
+        c = xlstm_mod.init_slstm_cache(cfg, batch)
+    else:
+        raise ValueError(kind)
+    if decoder and cfg.is_encoder_decoder and kind not in ("enc",):
+        m, hd = cfg.n_kv_heads, cfg.head_dim
+        c = dict(c)
+        c["ck"] = jnp.zeros((batch, cfg.encoder_seq, m, hd), jnp.bfloat16)
+        c["cv"] = jnp.zeros((batch, cfg.encoder_seq, m, hd), jnp.bfloat16)
+    return c
+
+
+# ------------------------------------------------------------ block: apply
+def _self_attention_sublayer(cfg, p, x, kind, ctx: Ctx, cache):
+    h = apply_norm(cfg, p["norm1"], x)
+    causal = kind != "enc"
+    window = cfg.window_size if kind == "la" else None
+    q = attn.project_q(cfg, p["attn"], h, ctx.cos, ctx.sin)
+    k_new, v_new = attn.project_kv(cfg, p["attn"], h, ctx.cos, ctx.sin)
+    new_cache = cache
+    if ctx.mode == "decode":
+        if kind == "la":
+            new_cache = {**cache,
+                         **attn.window_cache_update(cache, k_new, v_new, ctx.pos)}
+            w = cfg.window_size
+            slot_pos = attn.window_slot_positions(ctx.pos, w)       # (W,)
+            k_pos = jnp.broadcast_to(slot_pos[None], (x.shape[0], w))
+            k_valid = (slot_pos >= 0) & (slot_pos <= ctx.pos)
+            k_valid = jnp.broadcast_to(k_valid[None], (x.shape[0], w))
+        else:
+            new_cache = {**cache,
+                         **attn.global_cache_update(cache, k_new, v_new, ctx.pos)}
+            t = jnp.arange(ctx.max_len, dtype=jnp.int32)
+            k_pos = jnp.broadcast_to(t[None], (x.shape[0], ctx.max_len))
+            k_valid = jnp.broadcast_to((t <= ctx.pos)[None],
+                                       (x.shape[0], ctx.max_len))
+        o = attn.attention(cfg, q, new_cache["k"], new_cache["v"],
+                           q_pos=ctx.q_pos, k_pos=k_pos, causal=causal,
+                           window=cfg.window_size if kind == "la" else None,
+                           k_valid=k_valid)
+    else:
+        o = attn.attention(cfg, q, k_new, v_new, q_pos=ctx.q_pos,
+                           k_pos=ctx.q_pos, causal=causal, window=window,
+                           q_chunk=ctx.q_chunk)
+        if ctx.mode == "prefill" and cache is not None:
+            if kind == "la":
+                ring = attn.prefill_to_window_cache(cfg, k_new, v_new, x.shape[1])
+                new_cache = {**cache, **ring}
+            else:
+                new_cache = {**cache,
+                             **attn.global_cache_update(
+                                 {"k": cache["k"], "v": cache["v"]},
+                                 k_new, v_new, 0)}
+    return x + attn.out_proj(p["attn"], o), new_cache
+
+
+def _cross_attention_sublayer(cfg, p, x, ctx: Ctx, cache):
+    h = apply_norm(cfg, p["cross_norm"], x)
+    q = attn.project_q(cfg, p["cross"], h, None, None)   # no rope on cross
+    new_cache = cache
+    if ctx.mode == "decode":
+        ck, cv = cache["ck"], cache["cv"]
+    else:
+        ck, cv = attn.project_kv(cfg, p["cross"], ctx.enc_out, None, None)
+        if ctx.mode == "prefill" and cache is not None:
+            new_cache = {**cache, "ck": ck.astype(cache["ck"].dtype),
+                         "cv": cv.astype(cache["cv"].dtype)}
+    t = ck.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                             (x.shape[0], t))
+    o = attn.attention(cfg, q, ck, cv, q_pos=jnp.zeros_like(ctx.q_pos),
+                       k_pos=k_pos, causal=False, window=None,
+                       q_chunk=ctx.q_chunk)
+    return x + attn.out_proj(p["cross"], o), new_cache
+
+
+def apply_block(cfg, p, kind: str, x, ctx: Ctx, cache=None,
+                *, decoder: bool = False):
+    """Returns (x, new_cache, aux)."""
+    x = shctx.constrain(x, "residual")
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("ga", "la", "gm", "enc"):
+        x, cache = _self_attention_sublayer(cfg, p, x, kind, ctx, cache)
+        if decoder and cfg.is_encoder_decoder and kind != "enc":
+            x, cache = _cross_attention_sublayer(cfg, p, x, ctx, cache)
+        h = apply_norm(cfg, p["norm2"], x)
+        if kind == "gm":
+            f, aux = moe_mod.apply_moe(cfg, p["moe"], h)
+        else:
+            f = ffn_mod.apply_ffn(cfg, p["ffn"], h)
+        return x + f, cache, aux
+    if kind == "rg":
+        h = apply_norm(cfg, p["norm1"], x)
+        o, new_rec = rglru_mod.apply_rglru_block(
+            cfg, p["rglru"], h,
+            cache=None if ctx.mode == "train" and cache is None else cache,
+            pos=ctx.pos)
+        x = x + o
+        h2 = apply_norm(cfg, p["norm2"], x)
+        x = x + ffn_mod.apply_ffn(cfg, p["ffn"], h2)
+        return x, new_rec, aux
+    if kind == "ml":
+        h = apply_norm(cfg, p["norm1"], x)
+        o, new_state = xlstm_mod.apply_mlstm_block(cfg, p["mlstm"], h,
+                                                   cache=cache, pos=ctx.pos)
+        return x + o, new_state, aux
+    if kind == "sl":
+        h = apply_norm(cfg, p["norm1"], x)
+        o, new_state = xlstm_mod.apply_slstm_block(cfg, p["slstm"], h,
+                                                   cache=cache, pos=ctx.pos)
+        return x + o, new_state, aux
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------- stack: init
+def init_stack(cfg, key, *, decoder: bool = False) -> dict:
+    n_cycles, rem = cfg.cycles()
+    pattern = cfg.layer_pattern
+    keys = jax.random.split(key, len(pattern) + rem)
+    params: dict = {}
+    if n_cycles > 0:
+        cyc = []
+        for j, kind in enumerate(pattern):
+            sub = jax.random.split(keys[j], n_cycles)
+            cyc.append(jax.vmap(lambda kk, kind=kind: init_block(
+                cfg, kk, kind, decoder=decoder))(sub))
+        params["cycles"] = tuple(cyc)
+    for r in range(rem):
+        kind = pattern[r]
+        params[f"rem_{r}"] = init_block(cfg, keys[len(pattern) + r], kind,
+                                        decoder=decoder)
+    return params
+
+
+def init_stack_cache(cfg, batch: int, max_len: int, *, decoder: bool = False) -> dict:
+    n_cycles, rem = cfg.cycles()
+    pattern = cfg.layer_pattern
+    cache: dict = {}
+    if n_cycles > 0:
+        cyc = []
+        for kind in pattern:
+            one = init_block_cache(cfg, kind, batch, max_len, decoder=decoder)
+            cyc.append(jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_cycles,) + x.shape, x.dtype), one))
+        cache["cycles"] = tuple(cyc)
+    for r in range(rem):
+        cache[f"rem_{r}"] = init_block_cache(cfg, pattern[r], batch, max_len,
+                                             decoder=decoder)
+    return cache
+
+
+# ---------------------------------------------------------- stack: apply
+def apply_stack(cfg, params: dict, x, ctx: Ctx, cache: Optional[dict] = None,
+                *, decoder: bool = False, remat: bool = True):
+    """Returns (x, new_cache_or_None, aux_sum)."""
+    n_cycles, rem = cfg.cycles()
+    pattern = cfg.layer_pattern
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    if n_cycles > 0:
+        def cycle_body(carry, xs):
+            xc, aux = carry
+            layer_params, layer_cache = xs
+            new_caches = []
+            for j, kind in enumerate(pattern):
+                cj = None if layer_cache is None else layer_cache[j]
+                xc, cj_new, a = apply_block(cfg, layer_params[j], kind, xc,
+                                            ctx, cj, decoder=decoder)
+                aux = aux + a
+                new_caches.append(cj_new)
+            return (xc, aux), tuple(new_caches)
+
+        body = jax.checkpoint(cycle_body) if (remat and ctx.mode == "train") \
+            else cycle_body
+        cyc_cache = cache["cycles"] if cache is not None else None
+        if cyc_cache is None:
+            # feed dummy None-cache: use per-kind fresh zeros? train mode:
+            # recurrent blocks need an initial state even without a cache.
+            dummy = _train_cache_stub(cfg, x.shape[0], n_cycles)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             (params["cycles"], dummy))
+        else:
+            (x, aux_total), out_cyc = jax.lax.scan(body, (x, aux_total),
+                                                   (params["cycles"], cyc_cache))
+            new_cache["cycles"] = out_cyc
+
+    for r in range(rem):
+        kind = pattern[r]
+        cj = None if cache is None else cache[f"rem_{r}"]
+        x, cj_new, a = apply_block(cfg, params[f"rem_{r}"], kind, x, ctx, cj,
+                                   decoder=decoder)
+        aux_total = aux_total + a
+        if cache is not None:
+            new_cache[f"rem_{r}"] = cj_new
+
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+def _train_cache_stub(cfg, batch: int, n_cycles: int):
+    """Zero initial recurrent states for train mode (attention kinds get an
+    empty dict placeholder: their train path ignores the cache)."""
+    stubs = []
+    for kind in cfg.layer_pattern:
+        if kind == "rg":
+            one = rglru_mod.init_rglru_cache(cfg, batch)
+        elif kind == "ml":
+            one = xlstm_mod.init_mlstm_cache(cfg, batch)
+        elif kind == "sl":
+            one = xlstm_mod.init_slstm_cache(cfg, batch)
+        else:
+            one = {}
+        stubs.append(jax.tree_util.tree_map(
+            lambda x: jnp.zeros((n_cycles,) + x.shape, x.dtype), one))
+    return tuple(stubs)

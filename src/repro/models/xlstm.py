@@ -1,0 +1,253 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM — matrix-memory cell with exponential gating:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,   n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t^T q_t|, 1)
+Training/prefill uses the stabilized CHUNKWISE form (intra-chunk parallel via
+the log-gate decay matrix D, inter-chunk recurrent state — GLA/SSD-style,
+O(C^2) score tiles instead of O(S^2)); decode keeps (C, n, m) state.
+Block structure: pre-norm -> up-proj (x2) -> [conv? omitted] -> mLSTM heads
+-> learnable skip gate -> down-proj (the paper's pre-up-projection block).
+
+sLSTM — scalar memory, new memory mixing, exponential gating with the
+stabilizer m_t; realized as a lax.scan over time (only 1/8 of the layers).
+Block: pre-norm -> sLSTM -> post up/down MLP (factor 4/3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, PARAM_DTYPE, dense_init
+
+NEG_INF = -1e30
+
+
+# ==================================================================== mLSTM
+def init_mlstm_block(cfg, key) -> dict:
+    d = cfg.d_model
+    di = int(d * cfg.xlstm_proj_factor)        # inner width
+    h = cfg.n_heads
+    dh = di // h
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], (d, di)),
+        "w_up_gate": dense_init(ks[1], (d, di)),
+        "wq": dense_init(ks[2], (di, h, dh)),
+        "wk": dense_init(ks[3], (di, h, dh)),
+        "wv": dense_init(ks[4], (di, h, dh)),
+        # per-head scalar gates from the inner stream
+        "w_i": dense_init(ks[5], (di, h), scale=di ** -0.5),
+        "w_f": dense_init(ks[6], (di, h), scale=di ** -0.5),
+        "b_i": jnp.zeros((h,), PARAM_DTYPE),
+        "b_f": jnp.full((h,), 3.0, PARAM_DTYPE),   # forget-gate bias: remember
+        "skip_scale": jnp.ones((di,), PARAM_DTYPE),
+        "w_down": dense_init(ks[7], (di, d)),
+        "out_norm_scale": jnp.ones((di,), PARAM_DTYPE),
+    }
+
+
+MLSTM_CHUNK = 256
+
+
+def _mlstm_chunk_step(state, q, k, v, log_i, log_f, dh):
+    """One chunk of the stabilized CHUNKWISE mLSTM (paper app. A adapted to
+    the GLA/SSD chunkwise scheme — TPU-native: intra-chunk parallel matmuls
+    on the MXU, O(C^2) score tiles, inter-chunk O(dk*dv) recurrent state).
+
+    state: {c: (b,h,dk,dv), n: (b,h,dk), m: (b,h)} — stabilized so the true
+      state is (c, n) * exp(m).
+    q,k,v: (b,C,h,dh) fp32; log_i/log_f: (b,C,h) fp32.
+    Returns (new_state, h_out (b,C,h,dh)).
+    """
+    b, C, h, _ = q.shape
+    c0, n0, m0 = state["c"], state["n"], state["m"]
+    F = jnp.cumsum(log_f, axis=1)                          # (b,C,h) inclusive
+    # intra-chunk decay matrix D[t,u] = F_t - F_u + log_i_u  (u <= t)
+    dmat = F[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]
+    tri = jnp.tril(jnp.ones((C, C), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, NEG_INF)
+    intra_max = jnp.max(dmat, axis=2)                      # (b,t,h)
+    # stabilizer per position: max(cross-chunk carry, intra contributions)
+    m_t = jnp.maximum(F + m0[:, None, :], intra_max)       # (b,C,h)
+    dexp = jnp.exp(dmat - m_t[:, :, None, :])              # (b,t,u,h)
+    scores = jnp.einsum("bthd,buhd->btuh", q, k)           # q pre-scaled by dh^-0.5
+    w = scores * dexp                                      # masked by dexp=0
+    carry_scale = jnp.exp(F + m0[:, None, :] - m_t)        # (b,C,h)
+    num = (jnp.einsum("btuh,buhd->bthd", w, v)
+           + carry_scale[..., None] * jnp.einsum("bthk,bhkv->bthv", q, c0))
+    den_intra = w.sum(2)                                   # (b,t,h)
+    den_carry = jnp.einsum("bthk,bhk->bth", q, n0)
+    den = den_intra + carry_scale * den_carry
+    h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    # end-of-chunk state update (t = C-1 formulas)
+    m_new = m_t[:, -1, :]                                  # (b,h)
+    decay_u = jnp.exp(F[:, -1:, :] - F + log_i - m_new[:, None, :])  # (b,u,h)
+    kv = jnp.einsum("buh,buhk,buhv->bhkv", decay_u, k, v)
+    c_new = jnp.exp(F[:, -1, :] + m0 - m_new)[..., None, None] * c0 + kv
+    n_new = (jnp.exp(F[:, -1, :] + m0 - m_new)[..., None] * n0
+             + jnp.einsum("buh,buhk->bhk", decay_u, k))
+    return {"c": c_new, "n": n_new, "m": m_new}, h_out
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk=MLSTM_CHUNK):
+    """Scan chunks of the sequence through _mlstm_chunk_step.
+    q,k,v: (b,s,h,dh) any dtype; returns (h_out (b,s,h,dh) fp32, final state)."""
+    b, s, h, dh = q.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    def split(x):
+        return x.reshape(b, nc, c, *x.shape[2:]).swapaxes(0, 1)
+    qs, ks, vs = (split(x.astype(jnp.float32)) for x in (q, k, v))
+    lis, lfs = split(log_i), split(log_f)
+
+    def body(st, xs):
+        qi, ki, vi, li, lf = xs
+        st, hi = _mlstm_chunk_step(st, qi, ki, vi, li, lf, dh)
+        return st, hi
+
+    state, hs = jax.lax.scan(body, state, (qs, ks, vs, lis, lfs))
+    return hs.swapaxes(0, 1).reshape(b, s, h, dh), state
+
+
+def _mlstm_recurrent_step(state, q, k, v, log_i, log_f):
+    """One decode step.  state: dict(c (b,h,dk,dv), n (b,h,dk), m (b,h)).
+    q,k,v: (b,h,dh) fp32; log_i/log_f: (b,h)."""
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c_new = f_sc[..., None, None] * c + i_sc[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = f_sc[..., None] * n + i_sc[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return {"c": c_new, "n": n_new, "m": m_new}, h
+
+
+def apply_mlstm_block(cfg, params, x, *, cache=None, pos=None):
+    """x: (b, s, d) -> (out, new_cache)."""
+    b, s, d = x.shape
+    hh = cfg.n_heads
+    up = x @ params["w_up"].astype(x.dtype)                    # (b,s,di)
+    gate = jax.nn.silu(x @ params["w_up_gate"].astype(x.dtype))
+    di = up.shape[-1]
+    dh = di // hh
+    q = jnp.einsum("bsd,dhk->bshk", up, params["wq"].astype(x.dtype)) * (dh ** -0.5)
+    k = jnp.einsum("bsd,dhk->bshk", up, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", up, params["wv"].astype(x.dtype))
+    upf = up.astype(jnp.float32)
+    log_i = upf @ params["w_i"].astype(jnp.float32) + params["b_i"]    # (b,s,h)
+    log_f = jax.nn.log_sigmoid(upf @ params["w_f"].astype(jnp.float32)
+                               + params["b_f"])
+
+    state = cache if cache is not None else init_mlstm_cache(cfg, b)
+    if s > 1:   # train / prefill: chunkwise (intra-parallel, inter-recurrent)
+        hout, state = _mlstm_chunkwise(q, k, v, log_i, log_f, state)
+        hout = hout.astype(x.dtype)
+    else:       # decode: single recurrent step
+        state, h_t = _mlstm_recurrent_step(
+            state, q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), log_i[:, 0], log_f[:, 0])
+        hout = h_t[:, None].astype(x.dtype)
+
+    hflat = hout.reshape(b, s, di)
+    # group-norm-ish output norm per inner dim (RMS)
+    hf = hflat.astype(jnp.float32)
+    hflat = (hf * jax.lax.rsqrt((hf ** 2).mean(-1, keepdims=True) + 1e-6)
+             * params["out_norm_scale"]).astype(x.dtype)
+    mixed = hflat * gate + params["skip_scale"].astype(x.dtype) * up
+    out = mixed @ params["w_down"].astype(x.dtype)
+    return out, {k_: v_ for k_, v_ in state.items()}
+
+
+def init_mlstm_cache(cfg, batch: int) -> dict:
+    di = int(cfg.d_model * cfg.xlstm_proj_factor)
+    h = cfg.n_heads
+    dh = di // h
+    return {"c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e9, jnp.float32)}
+
+
+# ==================================================================== sLSTM
+def init_slstm_block(cfg, key) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    ff = int(d * cfg.slstm_mlp_factor)
+    return {
+        # input projections for (z, i, f, o) gates
+        "w_zifo": dense_init(ks[0], (d, 4, h, dh)),
+        # recurrent (per-head block-diagonal) weights
+        "r_zifo": dense_init(ks[1], (4, h, dh, dh), scale=dh ** -0.5),
+        "b_zifo": jnp.zeros((4, h, dh), PARAM_DTYPE),
+        "w_mlp_in": dense_init(ks[2], (d, ff)),
+        "w_mlp_gate": dense_init(ks[3], (d, ff)),
+        "w_mlp_out": dense_init(ks[4], (ff, d)),
+        "norm_scale": jnp.ones((d,), PARAM_DTYPE),
+    }
+
+
+def _slstm_step(params, state, zifo_x_t):
+    """state: dict(c,n,m,h) each (b, heads, dh); zifo_x_t: (b, 4, h, dh) fp32
+    — the PRE-PROJECTED input gates for this timestep.
+
+    Perf note (EXPERIMENTS.md §Perf, xlstm iteration 1): the input projection
+    w_zifo is hoisted out of the time scan into one big pre-scan matmul;
+    computing it in-step re-reads the full (d, 4, h, dh) weight every
+    timestep — 4096 x 67 MB per layer per microbatch of pure HBM traffic
+    (the dominant term of the xlstm-1.3b train_4k baseline roofline).
+    Only the genuinely sequential h_{t-1} recurrence stays in the scan."""
+    c, n, m, h_prev = state["c"], state["n"], state["m"], state["h"]
+    zifo_r = jnp.einsum("bhk,ghkl->bghl", h_prev, params["r_zifo"].astype(jnp.float32))
+    pre = zifo_x_t + zifo_r + params["b_zifo"].astype(jnp.float32)
+    z = jnp.tanh(pre[:, 0])
+    i_log = pre[:, 1]                         # exponential input gate (log-dom)
+    f_log = jax.nn.log_sigmoid(pre[:, 2])     # sigmoid forget gate in log space
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_sc = jnp.exp(i_log - m_new)
+    f_sc = jnp.exp(f_log + m - m_new)
+    c_new = f_sc * c + i_sc * z
+    n_new = f_sc * n + i_sc
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def apply_slstm_block(cfg, params, x, *, cache=None, pos=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    state = cache if cache is not None else init_slstm_cache(cfg, b)
+    xf = x.astype(jnp.float32)
+    # hoisted input projection: ONE matmul for all timesteps (see _slstm_step)
+    zifo_x = jnp.einsum("bsd,dghk->sbghk", xf,
+                        params["w_zifo"].astype(jnp.float32))
+
+    def body(st, zx_t):
+        st = _slstm_step(params, st, zx_t)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(body, state, zifo_x)         # (s, b, h, dh)
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-6)
+         * params["norm_scale"]).astype(x.dtype)
+    # post MLP (gated)
+    hmid = jax.nn.silu(y @ params["w_mlp_gate"].astype(x.dtype)) * (
+        y @ params["w_mlp_in"].astype(x.dtype))
+    out = hmid @ params["w_mlp_out"].astype(x.dtype)
+    return out, state
+
+
+def init_slstm_cache(cfg, batch: int) -> dict:
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h, dh), -1e9, jnp.float32),
+            "h": z}

@@ -1,0 +1,88 @@
+"""Batched serving engine: prefill + decode with KV caches and a simple
+continuous-batching request queue (admit-on-slot-free).
+
+The decode step is the same `serve_step` the dry-run lowers at production
+shapes; here it runs jit'd at host scale for the examples/tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (s,) int32
+    max_new_tokens: int
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, batch_size: int, max_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                                   max_len=max_len))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=max_len, q_chunk=None))
+
+    # ----------------------------------------------------------- one batch
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 stop_token: Optional[int] = None) -> np.ndarray:
+        """prompts: (b, s) int32, same length (padded upstream).
+        Returns (b, max_new_tokens) int32."""
+        b, s = prompts.shape
+        assert s + max_new_tokens <= self.max_len, "exceeds cache capacity"
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        out = np.zeros((b, max_new_tokens), np.int32)
+        tok = self._sample(logits)
+        for t in range(max_new_tokens):
+            out[:, t] = np.asarray(tok[:, 0])
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.asarray(s + t, jnp.int32))
+            tok = self._sample(logits)
+        return out
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        logits = logits[:, -1, :]
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature)[:, None].astype(jnp.int32)
+
+    # ------------------------------------------------- continuous batching
+    def serve(self, requests: list[Request], prompt_len: int) -> list[Request]:
+        """Round-based continuous batching: up to `batch_size` active slots;
+        a finished request's slot is refilled from the queue at the next
+        prefill round.  Prompts are right-aligned/padded to prompt_len."""
+        queue = list(requests)
+        done: list[Request] = []
+        while queue:
+            active = queue[: self.batch_size]
+            queue = queue[self.batch_size:]
+            prompts = np.zeros((len(active), prompt_len), np.int32)
+            for i, r in enumerate(active):
+                p = r.prompt[-prompt_len:]
+                prompts[i, prompt_len - len(p):] = p
+            steps = max(r.max_new_tokens for r in active)
+            outs = self.generate(prompts, steps)
+            for i, r in enumerate(active):
+                r.out_tokens = outs[i, : r.max_new_tokens].tolist()
+                r.done = True
+                done.append(r)
+        return done

@@ -1,0 +1,1 @@
+from . import ctx, policy  # noqa: F401

@@ -1,0 +1,56 @@
+"""Activation-sharding hint context.
+
+GSPMD propagates parameter shardings to most intermediates, but some layouts
+(notably sequence-parallel attention for head counts that do not divide the
+model axis) must be stated explicitly.  Model code calls `constrain(x, kind)`
+at the few relevant points; outside a `rules(...)` context (unit tests,
+single-device runs) it is a no-op.  Constraints that do not divide the
+tensor's dimensions are skipped silently — one policy serves every arch.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = contextvars.ContextVar("activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def rules(mesh: Mesh, table: dict[str, P]):
+    tok = _CTX.set((mesh, dict(table)))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def _fits(shape, spec, mesh) -> bool:
+    for dim, ax in zip(shape, tuple(spec)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([mesh.shape.get(a, 1) for a in axes]))
+        if n > 1 and dim % n != 0:
+            return False
+    return True
+
+
+def constrain(x, kind: str):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, table = ctx
+    spec = table.get(kind)
+    if spec is None:
+        return x
+    if len(tuple(spec)) > x.ndim or not _fits(x.shape, spec, mesh):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def active() -> bool:
+    return _CTX.get() is not None

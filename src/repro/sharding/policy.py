@@ -1,0 +1,358 @@
+"""Sharding policy: PartitionSpec rules per (param path x shape) and per
+batch/cache kind, for the production meshes (DESIGN.md §5).
+
+Philosophy: sharding never changes semantics under GSPMD — only layout and
+collective traffic — so every rule has a divisibility-checked preference
+list with a safe fallback, letting one policy serve all 10 architectures:
+
+  * embeddings / lm_head:       vocab -> model
+  * attention q/o projections:  heads -> model, else head_dim, else d_model
+  * attention k/v projections:  kv_heads -> model, else head_dim, else d
+  * dense FFN:                  hidden  -> model
+  * MoE experts:                expert  -> model (expert parallelism)
+  * RG-LRU / xLSTM inner dims:  width   -> model
+  * norms / biases / gates:     replicated
+  * batch:                      (pod, data); long-context decode shards the
+                                KV-cache sequence dim on data instead
+  * optimizer moments:          mirror the parameter specs (zero1_specs adds
+                                a data-axis shard on the largest dim — ZeRO-1)
+
+Stacked (scan) parameters carry a leading n_cycles axis: specs are computed
+on shape[1:] and prefixed with None (detected via the "cycles" path entry).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------- helpers
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fits(dim: int, mesh: Mesh, axis: str) -> bool:
+    n = _axis_size(mesh, axis)
+    return n > 1 and dim % n == 0
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "idx"):
+            out.append(f"[{e.idx}]")
+        else:
+            out.append(str(e))
+    return out
+
+
+# ------------------------------------------------------------- layouts
+def choose_layout(cfg, mesh: Mesh, shape_cfg) -> str:
+    """"hybrid" (TP over `model` + DP/FSDP over `data`) vs "dp" (the model
+    axis JOINS data parallelism: pure FSDP over every chip, no per-layer
+    activation all-reduces — EXPERIMENTS.md §Perf lever 3).
+
+    dp is chosen when (a) the global batch divides the full chip count,
+    (b) sharded optimizer state is comfortably small, and (c) a single
+    sample's attention scores fit next to the activations (plain-attention
+    training at b_local=1).
+    """
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    if shape_cfg.kind != "train" or shape_cfg.global_batch % n_dev:
+        return "hybrid"
+    state_bytes = _rough_param_bytes(cfg) * 3       # fp32 params + mu + nu
+    if state_bytes / n_dev > 2 * 2**30:
+        return "hybrid"
+    score_bytes = cfg.n_heads * shape_cfg.seq_len ** 2 * 4
+    if score_bytes > 4 * 2**30:
+        return "hybrid"
+    return "dp"
+
+
+def _rough_param_bytes(cfg) -> float:
+    d, L = cfg.d_model, cfg.n_layers
+    per_layer = 4 * d * cfg.n_heads * (cfg.head_dim or d // cfg.n_heads)
+    per_layer += 3 * d * max(cfg.d_ff, int(d * cfg.xlstm_proj_factor))
+    per_layer += 3 * cfg.n_experts * d * cfg.moe_dff
+    total = L * per_layer + 2 * cfg.vocab_size * d
+    return total * 4.0
+
+
+# ---------------------------------------------------------- param rules
+def param_spec(path_names: list[str], shape: tuple[int, ...], mesh: Mesh) -> P:
+    stacked = any("cycles" in n for n in path_names)
+    eff = shape[1:] if stacked and len(shape) >= 2 else shape
+    name = path_names[-1] if path_names else ""
+    spec = _param_spec_inner(name, path_names, eff, mesh)
+    if stacked and len(shape) >= 2:
+        spec = P(None, *spec)
+    return spec
+
+
+def _param_spec_inner(name: str, path: list[str], shape: tuple[int, ...],
+                      mesh: Mesh) -> P:
+    nd = len(shape)
+    if nd <= 1:
+        return P()                                           # norms, biases
+    if name == "embed":
+        return P("model", None) if _fits(shape[0], mesh, "model") else P()
+    if name == "lm_head":
+        return P(None, "model") if _fits(shape[1], mesh, "model") else P()
+    in_moe = any(n in ("moe",) for n in path)
+    if in_moe and name in ("w_in", "w_out", "w_gate") and nd == 3:
+        # (E, d, ff) / (E, ff, d): expert parallelism first
+        for cand in (P("model", None, None),
+                     P(None, None, "model") if name != "w_out" else P(None, "model", None),
+                     P(None, "model", None) if name != "w_out" else P(None, None, "model")):
+            if _spec_fits(cand, shape, mesh):
+                return cand
+        return P()
+    if name in ("wq", "wk", "wv") and nd == 3:               # (d, heads, hd)
+        # heads -> model when divisible; otherwise REPLICATE over model (FSDP
+        # still shards over data).  Never shard the contraction/input dims:
+        # GSPMD defers the partial-sum into the attention einsums and emits
+        # full-batch score all-reduces (32 GiB/op observed — see EXPERIMENTS).
+        cand = P(None, "model", None)
+        return cand if _spec_fits(cand, shape, mesh) else P()
+    if name == "wo" and nd == 3:                             # (h, hd, d)
+        cand = P("model", None, None)                        # Megatron row-par
+        return cand if _spec_fits(cand, shape, mesh) else P()
+    if name == "w_zifo" and nd == 4:                         # (d, 4, h, dh)
+        for cand in (P(None, None, "model", None), P(None, None, None, "model"),
+                     P("model", None, None, None)):
+            if _spec_fits(cand, shape, mesh):
+                return cand
+        return P()
+    if name == "r_zifo" and nd == 4:                         # (4, h, dh, dh)
+        for cand in (P(None, "model", None, None), P(None, None, "model", None)):
+            if _spec_fits(cand, shape, mesh):
+                return cand
+        return P()
+    if nd == 2:
+        # generic matmul weight (d_in, d_out): prefer output dim ("column
+        # parallel"), except *_out / w_down / wo which prefer input dim
+        prefer_in = name in ("w_out", "w_down", "w_mlp_out")
+        cands = ([P("model", None), P(None, "model")] if prefer_in
+                 else [P(None, "model"), P("model", None)])
+        for cand in cands:
+            if _spec_fits(cand, shape, mesh):
+                return cand
+        return P()
+    if name == "conv_w":                                     # (cw, width)
+        return P(None, "model") if _fits(shape[1], mesh, "model") else P()
+    if nd == 3:
+        for cand in (P(None, None, "model"), P(None, "model", None)):
+            if _spec_fits(cand, shape, mesh):
+                return cand
+    return P()
+
+
+def _spec_fits(spec: P, shape: tuple[int, ...], mesh: Mesh) -> bool:
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if n > 1 and dim % n != 0:
+            return False
+        if any(_axis_size(mesh, a) == 1 for a in axes):
+            return False
+    return True
+
+
+def _add_fsdp(spec: P, shape: tuple[int, ...], mesh: Mesh,
+              min_size: int = 2**20, axes: tuple[str, ...] = ("data",)) -> P:
+    """Add an FSDP shard over `axes` on the first free, divisible dim
+    (ZeRO-3 style).  Parameters and optimizer moments then occupy
+    bytes / prod(axes x existing) per device; GSPMD all-gathers each layer's
+    weight slice inside the scan.  Tiny leaves (norms, biases) stay
+    replicated."""
+    if int(np.prod(shape)) < min_size:
+        return spec
+    used = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    n = int(np.prod([_axis_size(mesh, a) for a in axes]))
+    if n <= 1:
+        return spec
+    # prefer the largest free dim
+    order = sorted((i for i, ax in enumerate(used) if ax is None),
+                   key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] % n == 0:
+            new = list(used)
+            new[i] = axes if len(axes) > 1 else axes[0]
+            return P(*new)
+    # split axes across two free dims if one dim cannot take the product
+    if len(axes) == 2 and len(order) >= 2:
+        a0, a1 = axes
+        for i in order:
+            if shape[i] % _axis_size(mesh, a0) == 0:
+                for j in order:
+                    if j != i and shape[j] % _axis_size(mesh, a1) == 0:
+                        new = list(used)
+                        new[i], new[j] = a0, a1
+                        return P(*new)
+    return spec
+
+
+# weights consumed INSIDE a per-timestep scan: FSDP-sharding them makes
+# GSPMD emit a gather/all-reduce EVERY timestep (observed: 24.6k ARs /
+# 400 GiB per step on xlstm).  They are small — keep them replicated.
+_SCAN_RESIDENT = ("r_zifo", "b_zifo")
+
+
+def param_specs(params_shapes: Any, mesh: Mesh, *, fsdp: bool = True,
+                layout: str = "hybrid") -> Any:
+    """Pytree of PartitionSpec matching a pytree of ShapeDtypeStruct/arrays.
+
+    layout="hybrid": TP rules + FSDP over `data` on stack weights.
+    layout="dp":     no TP — everything FSDP over ("data", "model").
+
+    FSDP is applied ONLY to layer-stack weights: sharding the embedding's
+    d_model over `data` collides with batch-data sharding at the first
+    gather and makes GSPMD replicate the global batch through the entire
+    model (observed: 32 GiB full-batch score buffers)."""
+    def one(path, leaf):
+        names = _path_names(path)
+        if layout == "dp":
+            # EVERYTHING is FSDP over (data, model) — including embeddings:
+            # replicated embed + moments cost ~9 GiB/dev on 150k vocabs.
+            if names[-1] in _SCAN_RESIDENT:
+                return P()
+            stacked = any("cycles" in n for n in names)
+            eff = tuple(leaf.shape[1:]) if stacked else tuple(leaf.shape)
+            spec = _add_fsdp(P(), eff, mesh, axes=("data", "model"))
+            if stacked:
+                spec = P(None, *spec)
+            return spec
+        spec = param_spec(names, tuple(leaf.shape), mesh)
+        if (fsdp and "stack" in names
+                and names[-1] not in ("embed", "lm_head") + _SCAN_RESIDENT):
+            spec = _add_fsdp(spec, tuple(leaf.shape), mesh)
+        return spec
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def activation_rules(cfg, mesh: Mesh, kind: str,
+                     layout: str = "hybrid") -> dict[str, P]:
+    """Activation sharding hints (DESIGN.md §5).
+
+    * residual: pin the residual stream to batch-over-(pod,data) at every
+      block boundary.  REQUIRED with FSDP: without it GSPMD lets the
+      data-axis weight shards override batch sharding and replicates the
+      global batch through the model (observed 32 GiB score buffers).
+    * seq-parallel attention for head counts that do not divide the model
+      axis: shard the query-seq dim of q/scores/attn-out over `model`.
+    """
+    if layout == "dp":
+        all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+        return {"residual": P(all_axes, None, None)}
+    baxes = batch_axes(mesh)
+    rules: dict[str, P] = {}
+    if baxes:
+        rules["residual"] = P(baxes, None, None)        # (b, s, d)
+    n_model = _axis_size(mesh, "model")
+    if n_model > 1 and cfg.n_heads % n_model != 0:
+        rules["attn_q"] = P(baxes, "model", None, None)        # (b, s, h, hd)
+        rules["attn_scores"] = P(baxes, None, "model", None)   # (b, h, s, t)
+        rules["attn_out"] = P(baxes, "model", None, None)      # (b, s, h, hd)
+    return rules
+
+
+# ----------------------------------------------------------- batch rules
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(batch_shapes: Any, mesh: Mesh, *, global_batch: int,
+               layout: str = "hybrid") -> Any:
+    """tokens/labels (b, s) -> (pod,data) on b; embeds (b, s, d) likewise;
+    mrope positions (3, b, s) on axis 1.  Falls back to replication when the
+    batch does not divide the data axes (e.g. long_500k's batch=1)."""
+    if layout == "dp":
+        baxes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    else:
+        baxes = batch_axes(mesh)
+    bsize = int(np.prod([_axis_size(mesh, a) for a in baxes]))
+    shard_batch = global_batch % bsize == 0 and bsize > 1
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        if not shard_batch:
+            return P()
+        if name == "positions" and nd == 3:
+            return P(None, baxes, None)
+        if name == "enc_embeds" or name == "inputs_embeds":
+            return P(baxes, None, None)
+        if nd >= 1 and leaf.shape[0] == global_batch:
+            return P(baxes, *([None] * (nd - 1)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+# ----------------------------------------------------------- cache rules
+def cache_spec(cache_shapes: Any, mesh: Mesh, *, batch: int,
+               seq_shard: bool = False) -> Any:
+    """KV caches (b, len, m, hd) & recurrent states.
+
+    seq_shard=True (long_500k, batch=1): shard the cache length dim over
+    `data` and recurrent widths over `model`; otherwise batch over
+    (pod, data) and KV length replicated."""
+    baxes = batch_axes(mesh)
+    bsize = int(np.prod([_axis_size(mesh, a) for a in baxes]))
+
+    def one(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        stacked = any("cycles" in n for n in _path_names(path))
+        eff = shape[1:] if stacked else shape
+        pre = (None,) if stacked else ()
+        if len(eff) == 0:
+            return P()
+        if not seq_shard and batch % bsize == 0 and bsize > 1 and eff[0] == batch:
+            spec = [baxes] + [None] * (len(eff) - 1)
+            # KV caches (b, L, m, hd): also shard kv-heads (else head_dim)
+            # over model — a 32k cache replicated over the model axis costs
+            # 16x the HBM (observed 24 GiB/dev on gemma3 decode_32k).
+            if len(eff) == 4:
+                if _fits(eff[2], mesh, "model"):
+                    spec[2] = "model"
+                elif _fits(eff[3], mesh, "model"):
+                    spec[3] = "model"
+            elif len(eff) >= 2 and _fits(eff[-1], mesh, "model"):
+                spec[-1] = "model"      # recurrent state width
+            return P(*pre, *spec)
+        if seq_shard:
+            # (b, L, m, hd): L -> data when divisible; recurrent (b, w): w -> model
+            if len(eff) == 4 and _fits(eff[1], mesh, "data"):
+                spec = [None, "data", None, None]
+                if _fits(eff[2], mesh, "model"):
+                    spec[2] = "model"
+                elif _fits(eff[3], mesh, "model"):
+                    spec[3] = "model"
+                return P(*pre, *spec)
+            if len(eff) >= 2 and _fits(eff[-1], mesh, "model"):
+                return P(*pre, *([None] * (len(eff) - 1)), "model")
+        return P(*pre, *([None] * len(eff)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# ------------------------------------------------------------- optimizer
+def opt_specs(pspecs: Any) -> Any:
+    """Moments mirror parameter specs; the scalar step is replicated."""
+    from repro.optim.adamw import OptState
+    return OptState(mu=pspecs, nu=pspecs, step=P())
+
+
+def named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,165 @@
+"""Fault-tolerance runtime: failure injection, heartbeat/straggler detection,
+elastic re-meshing — the control plane around the MSR storage layer.
+
+On real hardware these hook the cluster manager; here the same logic runs
+against a simulated clock so every policy is unit-testable.  The decisions
+(who repairs, from whom, at what bandwidth) are delegated to the paper's
+embedded property: helpers are DETERMINED (prev + next-k ring neighbours),
+so the control plane never solves coefficient/helper-selection problems —
+the paper's central operational claim (§IV).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+
+# ------------------------------------------------------------ failure model
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    step: int
+    node: int                    # 1-indexed storage node / host
+    kind: str = "crash"          # crash | straggler
+
+
+class FailureInjector:
+    """Deterministic or Poisson failure schedule over training steps."""
+
+    def __init__(self, n_nodes: int, *, schedule: Sequence[FailureEvent] = (),
+                 rate_per_step: float = 0.0, seed: int = 0):
+        self.n_nodes = n_nodes
+        self._fixed = sorted(schedule, key=lambda e: e.step)
+        self._rate = rate_per_step
+        self._rng = np.random.default_rng(seed)
+
+    def at(self, step: int) -> list[FailureEvent]:
+        out = [e for e in self._fixed if e.step == step]
+        if self._rate > 0:
+            n = self._rng.poisson(self._rate)
+            for _ in range(min(n, self.n_nodes - 1)):
+                out.append(FailureEvent(step=step,
+                                        node=int(self._rng.integers(1, self.n_nodes + 1))))
+        return out
+
+
+# ---------------------------------------------------------------- heartbeats
+class HeartbeatMonitor:
+    """Progress-based straggler detection: a node whose reported step lags
+    the median by > `lag_threshold` steps, or whose last heartbeat is older
+    than `timeout_s`, is flagged.  Mitigation at the caller: re-dispatch the
+    laggard's microbatch to a spare (backup-task / speculative execution)."""
+
+    def __init__(self, n_nodes: int, *, timeout_s: float = 60.0,
+                 lag_threshold: int = 2):
+        self.n_nodes = n_nodes
+        self.timeout_s = timeout_s
+        self.lag_threshold = lag_threshold
+        self._last_beat = {i: 0.0 for i in range(1, n_nodes + 1)}
+        self._progress = {i: 0 for i in range(1, n_nodes + 1)}
+
+    def beat(self, node: int, step: int, now: float):
+        self._last_beat[node] = now
+        self._progress[node] = max(self._progress[node], step)
+
+    def dead(self, now: float) -> list[int]:
+        return [i for i, t in self._last_beat.items() if now - t > self.timeout_s]
+
+    def stragglers(self, now: float) -> list[int]:
+        alive = [i for i in self._last_beat if i not in self.dead(now)]
+        if not alive:
+            return []
+        med = float(np.median([self._progress[i] for i in alive]))
+        return [i for i in alive
+                if med - self._progress[i] > self.lag_threshold]
+
+
+# ------------------------------------------------------------------ elastic
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_alive: int
+    data_parallel: int           # new data-axis extent
+    dropped_nodes: tuple[int, ...]
+    microbatch_scale: float      # factor to keep the global batch constant
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.dropped_nodes)
+
+
+def plan_elastic(n_nodes: int, dead: Iterable[int], *,
+                 keep_global_batch: bool = True) -> ElasticPlan:
+    """Shrink the data-parallel extent to the largest power-of-two <= alive
+    hosts (mesh axes must stay regular); surviving hosts absorb the dropped
+    ranks' share via more grad-accumulation microbatches."""
+    dead = tuple(sorted(set(dead)))
+    alive = n_nodes - len(dead)
+    if alive < 1:
+        raise RuntimeError("no hosts left")
+    dp = 2 ** int(math.log2(alive))
+    scale = (n_nodes / dp) if keep_global_batch else 1.0
+    return ElasticPlan(n_alive=alive, data_parallel=dp, dropped_nodes=dead,
+                       microbatch_scale=scale)
+
+
+# --------------------------------------------------------------- supervisor
+class Supervisor:
+    """Drives train-step execution with failure handling:
+
+    on crash events at step t:
+      1. flag the node dead; if a checkpoint exists, REPAIR its shard via the
+         MSR newcomer protocol (gamma = (k+1)B/2k reads, not B);
+      2. restore the training state (systematic path for survivors);
+      3. re-plan the mesh if the node stays gone (elastic), else resume.
+
+    The loop is synchronous-SPMD, so a crash loses at most the steps since
+    the last checkpoint; the MSR layer's job is to make the *storage* repair
+    cheap and deterministic.
+    """
+
+    def __init__(self, checkpointer, injector: Optional[FailureInjector] = None,
+                 *, ckpt_every: int = 10):
+        self.ckpt = checkpointer
+        self.injector = injector
+        self.ckpt_every = ckpt_every
+        self.log: list[dict] = []
+
+    def run(self, state, step_fn: Callable, data_fn: Callable, n_steps: int,
+            start_step: int = 0):
+        """data_fn: step -> batch (stateless indexing — after a rollback the
+        exact stream replays, no loss/duplication: repro.data.pipeline)."""
+        step = start_step
+        consumed: set[tuple[int, int]] = set()
+        while step < start_step + n_steps:
+            events = self.injector.at(step) if self.injector else []
+            crashes = [e for e in events if e.kind == "crash"
+                       and (e.step, e.node) not in consumed]
+            consumed.update((e.step, e.node) for e in crashes)
+            if crashes and self.ckpt.steps():
+                last = self.ckpt.steps()[-1]
+                failed = [e.node for e in crashes]
+                repaired_bytes = 0
+                if len(failed) == 1:
+                    repaired_bytes = self.ckpt.repair_node(last, failed[0])
+                    state, report = self.ckpt.restore(state, last)
+                else:
+                    state, report = self.ckpt.restore(state, last,
+                                                      failed_nodes=failed)
+                self.log.append({
+                    "step": step, "event": "repair", "failed": failed,
+                    "ckpt_step": last, "restore_path": report.path,
+                    "repair_bytes": repaired_bytes or report.bytes_read,
+                })
+                step = last          # roll back to the checkpoint
+                continue
+            batch = data_fn(step)
+            state, metrics = step_fn(state, batch)
+            self.log.append({"step": step, "event": "step",
+                             "loss": float(metrics["loss"])})
+            step += 1
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+                self.log.append({"step": step, "event": "ckpt"})
+        return state

@@ -1,0 +1,79 @@
+"""Training loop: jit'd gradient-accumulated steps + MSR checkpointing +
+failure supervision.  Used by examples/train_tiny_lm.py and the system tests;
+the same step function lowers on the production mesh via launch/dryrun.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.data import pipeline
+from repro.models import Model
+from repro.optim import adamw
+from repro.launch.steps import make_train_step
+
+from .fault_tolerance import FailureInjector, Supervisor
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 64
+    n_microbatches: int = 1
+    ckpt_every: int = 20
+    log_every: int = 10
+    seed: int = 0
+
+
+def init_state(model: Model, opt_cfg: adamw.AdamWConfig, seed: int = 0) -> dict:
+    params = model.init(jax.random.PRNGKey(seed))
+    return {"params": params, "opt": adamw.init(params, opt_cfg)}
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig,
+          opt_cfg: Optional[adamw.AdamWConfig] = None, *,
+          checkpointer=None, injector: Optional[FailureInjector] = None,
+          state: Optional[dict] = None, start_step: int = 0,
+          log: Callable = print) -> tuple[dict, list[dict]]:
+    """Returns (final_state, history).  Deterministic given seeds."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        lr=1e-3, warmup_steps=max(tcfg.n_steps // 20, 1),
+        total_steps=tcfg.n_steps)
+    model = Model(cfg)
+    dcfg = pipeline.DataConfig(vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+                               global_batch=tcfg.global_batch, seed=tcfg.seed)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, tcfg.n_microbatches),
+                      donate_argnums=(0,))
+    if state is None:
+        state = init_state(model, opt_cfg, tcfg.seed)
+
+    history: list[dict] = []
+
+    def data_fn(step: int) -> dict:
+        b = pipeline.batch_at(dcfg, step)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    if checkpointer is not None:
+        sup = Supervisor(checkpointer, injector, ckpt_every=tcfg.ckpt_every)
+        state = sup.run(state, step_fn, data_fn, tcfg.n_steps,
+                        start_step=start_step)
+        history = sup.log
+        return state, history
+
+    t0 = time.time()
+    for step in range(start_step, start_step + tcfg.n_steps):
+        state, metrics = step_fn(state, data_fn(step))
+        if step % tcfg.log_every == 0 or step == start_step + tcfg.n_steps - 1:
+            rec = {"step": step, "loss": float(metrics["loss"]),
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "t": round(time.time() - t0, 2)}
+            history.append(rec)
+            log(f"step {rec['step']:5d}  loss {rec['loss']:.4f}  "
+                f"gnorm {rec['grad_norm']:.3f}  {rec['t']}s")
+    return state, history

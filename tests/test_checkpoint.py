@@ -1,0 +1,119 @@
+"""MSR checkpointing: roundtrips, failure paths, byte accounting (gamma)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.circulant import CodeSpec
+from repro.checkpoint.msr_checkpoint import MSRCheckpointer
+
+
+def make_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (37, 19), jnp.float32),
+                   "b": jnp.arange(11, dtype=jnp.int32)},
+        "opt": {"mu": jax.random.normal(k, (37, 19), jnp.float32) * 1e-3,
+                "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def assert_state_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture
+def ckpt(tmp_path):
+    return MSRCheckpointer(tmp_path, CodeSpec.make(4, 257))
+
+
+def test_save_restore_systematic(ckpt):
+    state = make_state()
+    ckpt.save(3, state)
+    got, report = ckpt.restore(state, 3)
+    assert_state_equal(got, state)
+    assert report.path == "systematic"
+    # systematic restore reads only the n data blocks = ~B bytes
+    n, s = ckpt.spec.n, None
+    assert report.bytes_read <= report.bytes_total_stored // 2 + 64
+
+
+def test_restore_latest_step(ckpt):
+    s1, s2 = make_state(1), make_state(2)
+    ckpt.save(1, s1)
+    ckpt.save(2, s2)
+    got, rep = ckpt.restore(s1)
+    assert rep.step == 2
+    assert_state_equal(got, s2)
+
+
+def test_single_failure_regeneration_gamma(ckpt):
+    """The paper's headline: repairing one node reads (k+1)/(2k) of B."""
+    state = make_state()
+    ckpt.save(5, state)
+    got, report = ckpt.restore(state, 5, failed_nodes=[3])
+    assert_state_equal(got, state)
+    assert report.path == "regenerate"
+    assert report.repaired_nodes == (3,)
+    # repair-only bandwidth (isolated):
+    b = ckpt.repair_node(5, 2)
+    k = ckpt.spec.k
+    n = ckpt.spec.n
+    manifest_block = report.bytes_total_stored // (2 * n)   # ~S bytes
+    ideal = (k + 1) * manifest_block
+    assert b <= ideal * 1.10, (b, ideal)       # within 10% (packing overhead)
+    assert b < 2 * k * manifest_block * 0.75   # strictly better than B
+
+
+def test_multi_failure_reconstruction(ckpt):
+    state = make_state()
+    ckpt.save(1, state)
+    got, report = ckpt.restore(state, 1, failed_nodes=[1, 4, 6])
+    assert_state_equal(got, state)
+    assert report.path == "reconstruct"
+    assert set(report.repaired_nodes) == {1, 4, 6}
+    # repaired files are valid: a fresh systematic restore succeeds
+    got2, rep2 = ckpt.restore(state, 1)
+    assert rep2.path == "systematic"
+    assert_state_equal(got2, state)
+
+
+def test_unrecoverable_raises(ckpt):
+    state = make_state()
+    ckpt.save(1, state)
+    with pytest.raises(RuntimeError):
+        ckpt.restore(state, 1, failed_nodes=[1, 2, 3, 4, 5])
+
+
+def test_every_single_node_repairable(tmp_path):
+    spec = CodeSpec.make(3, 257)
+    ckpt = MSRCheckpointer(tmp_path, spec)
+    state = make_state(4)
+    ckpt.save(2, state)
+    for node in range(1, spec.n + 1):
+        got, report = ckpt.restore(state, 2, failed_nodes=[node])
+        assert_state_equal(got, state)
+        assert report.path == "regenerate"
+
+
+def test_gc_keeps_last(tmp_path):
+    ckpt = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257), keep_last=2)
+    state = make_state()
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, state)
+    assert ckpt.steps() == [3, 4]
+
+
+def test_bit_exact_across_dtypes(tmp_path):
+    """bf16/f32/int mixtures survive the byte<->symbol mapping exactly."""
+    ckpt = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257))
+    state = {"a": jnp.asarray([[1.5, -2.25]], jnp.bfloat16),
+             "b": jnp.asarray([3.14159e-8, 1e30], jnp.float32),
+             "c": jnp.asarray([-5, 2**30], jnp.int32)}
+    ckpt.save(1, state)
+    got, _ = ckpt.restore(state, 1, failed_nodes=[2])
+    assert_state_equal(got, state)

@@ -1,0 +1,104 @@
+"""GF(p) arithmetic: field axioms (hypothesis), exactness envelope, linalg."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf
+
+PRIMES = [2, 3, 5, 7, 257]
+
+
+@given(st.integers(0, 10_000), st.integers(0, 10_000), st.integers(0, 10_000),
+       st.sampled_from(PRIMES))
+@settings(max_examples=60, deadline=None)
+def test_field_axioms(a, b, c, p):
+    add, mul = gf.add, gf.mul
+    assert int(add(add(a, b, p), c, p)) == int(add(a, add(b, c, p), p))
+    assert int(mul(mul(a, b, p), c, p)) == int(mul(a, mul(b, c, p), p))
+    assert int(mul(a, add(b, c, p), p)) == int(add(mul(a, b, p), mul(a, c, p), p))
+    assert int(add(a, gf.neg(a, p), p)) == 0
+
+
+@given(st.integers(1, 10_000), st.sampled_from(PRIMES))
+@settings(max_examples=60, deadline=None)
+def test_inverse(a, p):
+    if a % p == 0:
+        return
+    assert int(gf.mul(a, gf.inv(a, p), p)) == 1
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 40), st.sampled_from(PRIMES))
+@settings(max_examples=40, deadline=None)
+def test_pow_matches_python(x, e, p):
+    assert int(gf.pow_(x, e, p)) == pow(x % p, e, p)
+
+
+@pytest.mark.parametrize("p", [5, 257])
+@pytest.mark.parametrize("shape", [(3, 4, 5), (8, 128, 16), (1, 300, 2), (130, 200, 64)])
+def test_matmul_exact_vs_int64(p, shape):
+    m, k, n = shape
+    rng = np.random.default_rng(m * k * n + p)
+    a = rng.integers(0, p, size=(m, k))
+    b = rng.integers(0, p, size=(k, n))
+    want = (a.astype(np.int64) @ b.astype(np.int64)) % p
+    got = np.asarray(gf.matmul(jnp.asarray(a), jnp.asarray(b), p))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_matmul_fold_boundary_worst_case():
+    """All-(p-1) inputs at k just above the fold size must stay exact."""
+    p = 257
+    k = 300  # > _FOLD = 128 -> exercises the folded path with worst-case magnitudes
+    a = np.full((4, k), p - 1)
+    b = np.full((k, 8), p - 1)
+    want = (a.astype(np.int64) @ b.astype(np.int64)) % p
+    got = np.asarray(gf.matmul(jnp.asarray(a), jnp.asarray(b), p))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("p", [5, 257])
+@pytest.mark.parametrize("n", [1, 2, 5, 16])
+def test_gauss_inverse_roundtrip(p, n):
+    rng = np.random.default_rng(n + p)
+    for _ in range(5):
+        m = rng.integers(0, p, size=(n, n))
+        if gf.gauss_det(m, p) == 0:
+            continue
+        inv = gf.gauss_inverse(m, p)
+        eye = (m.astype(np.int64) @ inv.astype(np.int64)) % p
+        np.testing.assert_array_equal(eye, np.eye(n, dtype=np.int64) % p)
+
+
+def test_gauss_inverse_singular_raises():
+    m = np.array([[1, 2], [2, 4]])
+    with pytest.raises(ValueError):
+        gf.gauss_inverse(m, 5)
+
+
+def test_gauss_det_multiplicative():
+    p = 257
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, p, size=(6, 6))
+    b = rng.integers(0, p, size=(6, 6))
+    da, db = gf.gauss_det(a, p), gf.gauss_det(b, p)
+    dab = gf.gauss_det((a.astype(np.int64) @ b.astype(np.int64)) % p, p)
+    assert dab == (da * db) % p
+
+
+@given(st.binary(min_size=0, max_size=4096))
+@settings(max_examples=30, deadline=None)
+def test_bytes_symbols_roundtrip(payload):
+    sym = gf.bytes_to_symbols(payload)
+    assert gf.symbols_to_bytes(sym) == payload
+
+
+def test_solve_matches_inverse():
+    p = 257
+    rng = np.random.default_rng(1)
+    m = rng.integers(0, p, size=(8, 8))
+    while gf.gauss_det(m, p) == 0:
+        m = rng.integers(0, p, size=(8, 8))
+    rhs = rng.integers(0, p, size=(8, 3))
+    x = gf.solve(m, rhs, p)
+    np.testing.assert_array_equal((m.astype(np.int64) @ x) % p, rhs % p)

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, exact equality.
+
+(assert_allclose with rtol=0 == exact integer match; GF arithmetic is exact.)
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf
+from repro.core.circulant import CodeSpec
+from repro.core.msr import DoubleCirculantMSR
+from repro.kernels import ops
+from repro.kernels.gf_matmul import _fold_depth
+
+
+def rand(shape, p, seed):
+    return np.random.default_rng(seed).integers(0, p, size=shape, dtype=np.int64).astype(np.int32)
+
+
+# --------------------------------------------------------------- gf_matmul
+@pytest.mark.parametrize("p", [5, 257])
+@pytest.mark.parametrize("m,k,s", [
+    (4, 4, 128), (8, 8, 512), (6, 6, 1000),       # unaligned stream
+    (16, 16, 4096), (3, 300, 640),                # k > fold depth
+    (1, 7, 130), (128, 128, 256),
+])
+def test_gf_matmul_matches_oracle(p, m, k, s):
+    a = rand((m, k), p, seed=m * k + s)
+    b = rand((k, s), p, seed=m + k + s)
+    got = np.asarray(ops.gf_matmul(a, b, p))
+    want = np.asarray(ops.gf_matmul_ref(jnp.asarray(a), jnp.asarray(b), p))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    # and against int64 ground truth
+    np.testing.assert_array_equal(got, (a.astype(np.int64) @ b.astype(np.int64)) % p)
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int64, np.uint8, np.int16])
+def test_gf_matmul_input_dtypes(dtype):
+    p = 257
+    a = rand((4, 8), p, 0).astype(dtype)
+    b = rand((8, 256), p, 1).astype(dtype)
+    got = np.asarray(ops.gf_matmul(a, b, p))
+    np.testing.assert_array_equal(got, (a.astype(np.int64) @ b.astype(np.int64)) % p)
+
+
+def test_gf_matmul_worst_case_magnitudes():
+    """All-(p-1) entries across a fold boundary must stay exact."""
+    p = 257
+    for k in (127, 128, 129, 255, 256, 300):
+        a = np.full((2, k), p - 1, np.int32)
+        b = np.full((k, 384), p - 1, np.int32)
+        got = np.asarray(ops.gf_matmul(a, b, p))
+        want = (a.astype(np.int64) @ b.astype(np.int64)) % p
+        np.testing.assert_array_equal(got, want, err_msg=f"k={k}")
+
+
+def test_fold_depth_envelope():
+    assert _fold_depth(257) * 256 * 256 < 2**24
+    assert _fold_depth(2) == 128
+    assert _fold_depth(4099) >= 1
+
+
+@given(st.integers(1, 64), st.integers(1, 200), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_gf_matmul_property(m, k, seed):
+    p = 257
+    a = rand((m, k), p, seed)
+    b = rand((k, 320), p, seed + 1)
+    got = np.asarray(ops.gf_matmul(a, b, p))
+    np.testing.assert_array_equal(got, (a.astype(np.int64) @ b.astype(np.int64)) % p)
+
+
+# --------------------------------------------------------- circulant_encode
+@pytest.mark.parametrize("p", [5, 257])
+@pytest.mark.parametrize("k,s", [(1, 128), (2, 512), (3, 1000), (8, 4096), (16, 384), (64, 256)])
+def test_circulant_encode_matches_oracle(p, k, s):
+    rng = np.random.default_rng(k + s)
+    c = tuple(int(x) for x in rng.integers(1, p, size=k))
+    data = rand((2 * k, s), p, seed=k * s)
+    got = np.asarray(ops.circulant_encode(data, c, p))
+    want = np.asarray(ops.circulant_encode_ref(jnp.asarray(data), c, p))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_circulant_encode_matches_dense_matmul_encode():
+    """Kernel (structure-exploiting) == dense M^T matmul == core encode."""
+    for k, p in [(2, 257), (3, 5), (5, 257)]:
+        spec = CodeSpec.make(k, p)
+        code = DoubleCirculantMSR(spec)
+        data = rand((2 * k, 700), p, seed=k)
+        dense = np.asarray(code.encode(jnp.asarray(data)))
+        kern = np.asarray(ops.circulant_encode(data, spec.c, p))
+        np.testing.assert_array_equal(kern, dense)
+
+
+def test_circulant_encode_rejects_zero_coefficients():
+    with pytest.raises(ValueError):
+        ops.circulant_encode(np.zeros((4, 128), np.int32), (1, 0), 257)
+
+
+def test_circulant_encode_worst_case_fold():
+    p = 257
+    k = 130  # forces a fold inside the kernel accumulation
+    c = tuple([p - 1] * k)
+    data = np.full((2 * k, 256), p - 1, np.int32)
+    got = np.asarray(ops.circulant_encode(data, c, p))
+    want = np.asarray(ops.circulant_encode_ref(jnp.asarray(data), c, p))
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------ end-to-end via code
+def test_msr_with_kernel_backend_roundtrip():
+    """Full encode->regenerate->reconstruct using the Pallas backend."""
+    spec = CodeSpec.make(4, 257)
+    code = DoubleCirculantMSR(spec, matmul=ops.msr_matmul_backend(257))
+    data = jnp.asarray(rand((8, 640), 257, seed=9))
+    red = code.encode(data)
+    # regenerate node 3
+    plan = code.repair_plan(3)
+    a_new, r_new = code.regenerate(3, red[plan.prev_node - 1],
+                                   data[jnp.asarray(plan.data_indices)])
+    np.testing.assert_array_equal(np.asarray(a_new), np.asarray(data[2]))
+    np.testing.assert_array_equal(np.asarray(r_new), np.asarray(red[2]))
+    # reconstruct from nodes {2,4,6,8}
+    s = [2, 4, 6, 8]
+    idx = jnp.asarray([i - 1 for i in s])
+    got = code.reconstruct(s, data[idx], red[idx])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(data))

@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests on REDUCED configs (assignment requirement):
+one forward/train step on CPU asserting output shapes + finite values, plus
+gradient flow and prefill->decode consistency for every block family.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+from repro.models.frontend import mrope_positions, synth_embeddings
+
+SEQ = 32
+BATCH = 2
+
+
+def make_batch(cfg, key, seq=SEQ, batch=BATCH, labels=True):
+    ks = jax.random.split(key, 3)
+    out = {}
+    if cfg.embeds_as_input and not cfg.is_encoder_decoder:
+        out["inputs_embeds"] = synth_embeddings(ks[0], (batch, seq, cfg.d_model))
+    else:
+        out["tokens"] = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = synth_embeddings(ks[1], (batch, cfg.encoder_seq, cfg.d_model))
+    if cfg.mrope_sections:
+        out["positions"] = jnp.asarray(
+            mrope_positions(batch, seq, image_tokens=8, grid_hw=(2, 4)))
+    if labels:
+        out["labels"] = jax.random.randint(ks[2], (batch, seq), 0, cfg.vocab_size)
+    return out
+
+
+@pytest.fixture(scope="module")
+def arch_setup():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            model = Model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch] = (cfg, model, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch, arch_setup):
+    cfg, model, params = arch_setup(arch)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+    h, _, aux = model.forward(params, batch, "train", remat=False)
+    assert h.shape == (BATCH, SEQ, cfg.d_model)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
+    if cfg.n_experts:
+        assert float(metrics["aux"]) > 0  # router aux loss is live
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_grad_step_finite(arch, arch_setup):
+    cfg, model, params = arch_setup(arch)
+    batch = make_batch(cfg, jax.random.PRNGKey(2))
+    grads = jax.jit(jax.grad(lambda p: model.loss(p, batch)[0]))(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), arch
+    # at least the embedding (or input-proj) grads must be nonzero
+    total = sum(float(jnp.abs(g).sum()) for g in flat)
+    assert total > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_shapes(arch, arch_setup):
+    cfg, model, params = arch_setup(arch)
+    batch = make_batch(cfg, jax.random.PRNGKey(3), labels=False)
+    max_len = SEQ + 8
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len=max_len, q_chunk=16))(params, batch)
+    assert logits.shape == (BATCH, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache = jax.jit(
+        lambda p, c, t, pos: model.decode_step(p, c, t, pos, max_len=max_len))(
+        params, cache, tok, jnp.asarray(SEQ, jnp.int32))
+    assert logits2.shape == (BATCH, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_full_forward(arch, arch_setup):
+    """Teacher-forced consistency: decode_step(t_s at pos s) logits must match
+    a fresh full forward over s+1 tokens at the last position."""
+    cfg, model, params = arch_setup(arch)
+    if cfg.n_experts:
+        # Capacity dropping is chunk-context dependent (the s+1-token forward
+        # chunks dispatch differently than the s-token prefill), so exact
+        # cache consistency is only defined DROPLESS.  (At cf=1.25 the
+        # reduced top-2-of-4 config drops ~half the tokens; verified exact at
+        # cf=1e9.)  Production capacity semantics are covered by the aux-loss
+        # and moe unit tests.
+        cfg = dataclasses.replace(cfg, capacity_factor=1e9)
+        model = Model(cfg)
+    key = jax.random.PRNGKey(4)
+    full = make_batch(cfg, key, seq=SEQ + 1, labels=False)
+    if "tokens" not in full:
+        pytest.skip("embeds-input arch: decode consistency covered via text path")
+    prefix = {k: (v[..., :SEQ] if v.ndim == 2 else
+                  (v[..., :SEQ] if k == "positions" else v))
+              for k, v in full.items()}
+    if "positions" in full:
+        prefix["positions"] = full["positions"][..., :SEQ]
+    max_len = SEQ + 1
+    _, cache = model.prefill(params, prefix, max_len=max_len, q_chunk=16)
+    tok = full["tokens"][:, SEQ:SEQ + 1]
+    dec_logits, _ = model.decode_step(params, cache, tok,
+                                      jnp.asarray(SEQ, jnp.int32),
+                                      max_len=max_len)
+    h, _, _ = model.forward(params, full, "train", remat=False)
+    head = model.head(params).astype(h.dtype)
+    ref_logits = (h[:, -1:] @ head).astype(jnp.float32)
+    dec, ref = np.asarray(dec_logits), np.asarray(ref_logits)
+    # bf16 compute + different accumulation orders (chunkwise vs recurrent)
+    # leave sub-1% of elements outside a tight tolerance; structural bugs
+    # would disagree everywhere and flip the argmax.
+    np.testing.assert_array_equal(dec.argmax(-1), ref.argmax(-1), err_msg=arch)
+    close = np.isclose(dec, ref, rtol=0.15, atol=0.15)
+    assert close.mean() > 0.98, (arch, float(close.mean()))
+    assert np.abs(dec - ref).max() < 1.0, arch
+
+
+def test_window_attention_masks_past():
+    """A local-attn layer must not attend beyond its window: with ONE layer,
+    perturbing a token > window positions in the past must not change the
+    current position's output.  (With stacked layers the receptive field
+    legitimately grows by window-1 per layer.)"""
+    cfg = get_config("gemma3-27b").reduced(
+        n_layers=1, layer_pattern=("la",), window_size=8)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, SEQ), 0, cfg.vocab_size)
+    tok2 = tok.at[0, 2].set((tok[0, 2] + 7) % cfg.vocab_size)  # outside window of last pos
+    out1, _, _ = model.forward(params, {"tokens": tok}, "train", remat=False)
+    out2, _, _ = model.forward(params, {"tokens": tok2}, "train", remat=False)
+    np.testing.assert_allclose(np.asarray(out1[:, -1]).astype(np.float32),
+                               np.asarray(out2[:, -1]).astype(np.float32),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, 3]).astype(np.float32),
+                           np.asarray(out2[:, 3]).astype(np.float32))
+
+
+def test_causality():
+    """Perturbing a future token must not change past logits (every family)."""
+    for arch in ("qwen3-4b", "recurrentgemma-2b", "xlstm-1.3b", "granite-moe-1b-a400m"):
+        cfg = get_config(arch).reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (1, SEQ), 0, cfg.vocab_size)
+        tok2 = tok.at[0, SEQ - 1].set((tok[0, SEQ - 1] + 3) % cfg.vocab_size)
+        o1, _, _ = model.forward(params, {"tokens": tok}, "train", remat=False)
+        o2, _, _ = model.forward(params, {"tokens": tok2}, "train", remat=False)
+        np.testing.assert_allclose(
+            np.asarray(o1[:, : SEQ - 1]).astype(np.float32),
+            np.asarray(o2[:, : SEQ - 1]).astype(np.float32),
+            rtol=1e-4, atol=1e-4, err_msg=arch)
+
+
+def test_long_500k_eligibility_flags():
+    eligible = {a for a in ARCH_IDS if get_config(a).is_subquadratic()}
+    assert eligible == {"recurrentgemma-2b", "gemma3-27b", "xlstm-1.3b"}

@@ -1,0 +1,123 @@
+"""Sharding policy unit tests: spec selection, FSDP, layouts, divisibility."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.models import Model
+from repro.sharding import policy
+
+# a light stand-in mesh: policy only reads mesh.shape
+class FakeMesh:
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+POD = FakeMesh(pod=2, data=16, model=16)
+
+
+def leaf(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jax.numpy.float32)
+
+
+def test_attention_head_sharding_when_divisible():
+    # param_spec: TP rule only; param_specs adds FSDP on stack weights
+    spec = policy.param_spec(["stack", "cycles", "attn", "wq"],
+                             (36, 2560, 32, 128), MESH)
+    assert spec == P(None, None, "model", None)
+    ps = policy.param_specs(
+        {"stack": {"cycles": ({"attn": {"wq": leaf((36, 2560, 32, 128))}},)}},
+        MESH)
+    assert ps["stack"]["cycles"][0]["attn"]["wq"] == P(None, "data", "model", None)
+
+
+def test_attention_replicated_when_heads_dont_divide():
+    spec = policy.param_spec(["stack", "cycles", "attn", "wq"],
+                             (60, 7168, 56, 128), MESH)
+    # heads 56 % 16 != 0 -> no model shard; FSDP puts data on the largest dim
+    assert "model" not in str(spec)
+
+
+def test_moe_expert_parallelism():
+    spec = policy.param_spec(["stack", "cycles", "moe", "w_in"],
+                             (35, 128, 7168, 4864), MESH)
+    assert tuple(spec)[1] == "model"                # experts -> model
+
+
+def test_embed_vocab_sharding_and_fallback():
+    assert policy.param_spec(["embed"], (262144, 5376), MESH) == P("model", None)
+    # 51865 doesn't divide 16 -> replicated
+    assert policy.param_spec(["embed"], (51865, 1024), MESH) == P()
+
+
+def test_norms_replicated():
+    assert policy.param_spec(["stack", "cycles", "norm1", "scale"],
+                             (36, 2560), MESH) == P(None)
+
+
+def test_scan_resident_weights_never_fsdp():
+    spec = policy.param_spec(["stack", "cycles", "slstm", "r_zifo"],
+                             (6, 4, 4, 512, 512), MESH)
+    ps = policy.param_specs(
+        {"stack": {"cycles": ({"slstm": {"r_zifo": leaf((6, 4, 4, 512, 512))}},)}},
+        MESH)
+    got = ps["stack"]["cycles"][0]["slstm"]["r_zifo"]
+    assert "data" not in str(got)
+
+
+def test_choose_layout_per_arch():
+    mesh = MESH
+    train = SHAPES["train_4k"]
+    dp = {a for a in ("qwen3-4b", "yi-34b", "starcoder2-7b", "xlstm-1.3b",
+                      "recurrentgemma-2b", "granite-moe-1b-a400m",
+                      "whisper-medium", "gemma3-27b")
+          if policy.choose_layout(get_config(a), mesh, train) == "dp"}
+    assert "qwen3-4b" in dp and "yi-34b" in dp
+    assert policy.choose_layout(get_config("arctic-480b"), mesh, train) == "hybrid"
+    assert policy.choose_layout(get_config("qwen2-vl-72b"), mesh, train) == "hybrid"
+    # non-train shapes never use dp
+    assert policy.choose_layout(get_config("qwen3-4b"), mesh,
+                                SHAPES["decode_32k"]) == "hybrid"
+
+
+def test_batch_spec_layouts():
+    b = {"tokens": leaf((256, 4096))}
+    hy = policy.batch_spec(b, MESH, global_batch=256)
+    assert hy["tokens"] == P(("data",), None)
+    dp = policy.batch_spec(b, MESH, global_batch=256, layout="dp")
+    assert dp["tokens"] == P(("data", "model"), None)
+    # batch=1 cannot shard
+    one = policy.batch_spec({"tokens": leaf((1, 9))}, MESH, global_batch=1)
+    assert one["tokens"] == P()
+
+
+def test_cache_spec_kv_head_sharding():
+    cache = {"k": leaf((128, 32768, 16, 128))}
+    spec = policy.cache_spec(cache, MESH, batch=128)
+    assert spec["k"] == P(("data",), None, "model", None)
+    # kv heads not divisible -> head_dim
+    cache = {"k": leaf((128, 32768, 8, 128))}
+    spec = policy.cache_spec(cache, MESH, batch=128)
+    assert spec["k"] == P(("data",), None, None, "model")
+    # long-context: seq over data
+    cache = {"k": leaf((1, 524288, 1, 256))}
+    spec = policy.cache_spec(cache, MESH, batch=1, seq_shard=True)
+    assert spec["k"] == P(None, "data", None, "model")
+
+
+def test_activation_rules():
+    cfg = get_config("yi-34b")
+    r = policy.activation_rules(cfg, MESH, "train")
+    assert "attn_q" in r and r["residual"] == P(("data",), None, None)
+    r_dp = policy.activation_rules(cfg, MESH, "train", layout="dp")
+    assert set(r_dp) == {"residual"}
+    cfg2 = get_config("qwen3-4b")            # heads divide -> no attn hints
+    assert set(policy.activation_rules(cfg2, MESH, "train")) == {"residual"}
+
+
+def test_pod_axis_joins_batch():
+    b = {"tokens": leaf((256, 4096))}
+    spec = policy.batch_spec(b, POD, global_batch=256)
+    assert spec["tokens"] == P(("pod", "data"), None)
