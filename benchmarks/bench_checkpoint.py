@@ -1,0 +1,81 @@
+"""MSR checkpoint pipeline throughput + restore byte accounting.
+
+Measures, for one [n, k] code on a synthetic training state:
+  * streaming save throughput (encode in stream tiles + overlapped writes)
+  * restore throughput and BYTES READ for each of the three paths —
+    systematic (no failures), regenerate (1 failure, the paper's gamma,
+    eq. (7)), reconstruct (k alive) — so the bandwidth trajectory of the
+    paper's headline claim is tracked per PR in BENCH_checkpoint.json.
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint.msr_checkpoint import MSRCheckpointer
+from repro.core.circulant import CodeSpec
+
+
+def _make_state(total_bytes: int, seed=0):
+    rng = np.random.default_rng(seed)
+    n_f32 = total_bytes // 8
+    return {
+        "params": {"w": rng.normal(size=(n_f32,)).astype(np.float32)},
+        "opt": {"mu": rng.normal(size=(n_f32,)).astype(np.float32)},
+    }
+
+
+def run(ks=(4,), state_mb: float = 2.0, quiet=False):
+    rows = []
+    total_bytes = int(state_mb * 2**20)
+    for k in ks:
+        spec = CodeSpec.make(k, 257)
+        state = _make_state(total_bytes, seed=k)
+        with tempfile.TemporaryDirectory() as d:
+            ckpt = MSRCheckpointer(d, spec)
+            ckpt.save(0, state)              # warm-up: compile + touch disk
+            t0 = time.perf_counter()
+            ckpt.save(1, state)
+            t_save = time.perf_counter() - t0
+
+            restores = {}
+            for mode, failed in (("systematic", []),
+                                 ("regenerate", [2]),
+                                 ("reconstruct", [1, 3])):
+                t0 = time.perf_counter()
+                _, rep = ckpt.restore(state, 1, failed_nodes=failed)
+                dt = time.perf_counter() - t0
+                assert rep.path == mode, (rep.path, mode)
+                restores[mode] = {
+                    "s": round(dt, 4),
+                    "mbps": round(state_mb / dt, 1),
+                    "bytes_read": rep.bytes_read,
+                    "frac_of_stored": round(
+                        rep.bytes_read / rep.bytes_total_stored, 4),
+                }
+                # restoring rewrites the failed nodes; reset for the next mode
+                if failed:
+                    ckpt.save(1, state)
+
+            row = {
+                "k": k, "n": spec.n, "state_mb": state_mb,
+                "backend": ckpt.code.backend_name,
+                "save_s": round(t_save, 4),
+                "save_mbps": round(state_mb / t_save, 1),
+                "restore": restores,
+                # ideal symbol counts for reference (paper eq. (7), §III-B)
+                "gamma_regenerate_ideal": (k + 1) / (2 * k),
+                "gamma_reconstruct_ideal": 1.0,
+            }
+            rows.append(row)
+            if not quiet:
+                print(f"[ckpt] k={k:2d} n={spec.n:2d} [{row['backend']}]: "
+                      f"save {row['save_mbps']} MB/s; read frac "
+                      f"sys={restores['systematic']['frac_of_stored']} "
+                      f"regen={restores['regenerate']['frac_of_stored']} "
+                      f"recon={restores['reconstruct']['frac_of_stored']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

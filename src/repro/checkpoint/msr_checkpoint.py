@@ -7,9 +7,9 @@ in a real cluster each host writes only its own pair):
     step_000042/
       manifest.json            code spec, tree metadata, byte accounting
       node_01.a.npy            a_0   (raw systematic block: uncoded bytes)
-      node_01.r.npy            r_1   (circulant redundancy block)
+      node_01.r.npz            r_1   (circulant redundancy block, packed)
       ...
-      node_NN.{a,r}.npy
+      node_NN.a.npy / node_NN.r.npz
 
 Restore paths (all byte-metered, verified by benchmarks):
   * happy path (all nodes up): read ONLY the n data blocks — systematic, so
@@ -27,6 +27,7 @@ import dataclasses
 import json
 import pathlib
 import shutil
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional, Sequence
 
 import jax
@@ -35,6 +36,10 @@ import numpy as np
 from repro.core import gf, placement
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
+
+# Stream-axis tile (symbols) for the streaming encode: bounds the int32
+# intermediates on device and lets host file writes overlap device compute.
+SAVE_TILE_SYMBOLS = 1 << 20
 
 
 @dataclasses.dataclass
@@ -49,11 +54,15 @@ class RestoreReport:
 
 class MSRCheckpointer:
     def __init__(self, directory, spec: CodeSpec, *, matmul=None,
-                 keep_last: int = 3):
+                 backend: Optional[str] = None, keep_last: int = 3,
+                 save_tile_symbols: int = SAVE_TILE_SYMBOLS,
+                 io_workers: int = 4):
         self.dir = pathlib.Path(directory)
         self.spec = spec
-        self.code = DoubleCirculantMSR(spec, matmul=matmul)
+        self.code = DoubleCirculantMSR(spec, matmul=matmul, backend=backend)
         self.keep_last = keep_last
+        self.save_tile_symbols = max(1, save_tile_symbols)
+        self.io_workers = max(1, io_workers)
         self.dir.mkdir(parents=True, exist_ok=True)
 
     # ------------------------------------------------------------------ paths
@@ -61,28 +70,70 @@ class MSRCheckpointer:
         return self.dir / f"step_{step:06d}"
 
     def _node_files(self, step: int, i: int) -> tuple[pathlib.Path, pathlib.Path]:
+        """(data_path, redundancy_path) for node v_i at `step`.
+
+        The redundancy file is a plain ``node_XX.r.npz`` archive; np.savez
+        is always handed the full path (it only appends ``.npz`` when the
+        suffix is missing, which it never is here).
+        """
         d = self._step_dir(step)
-        return d / f"node_{i:02d}.a.npy", d / f"node_{i:02d}.r.npy.npz"
+        return d / f"node_{i:02d}.a.npy", d / f"node_{i:02d}.r.npz"
+
+    def _write_node_pair(self, a_path: pathlib.Path, r_path: pathlib.Path,
+                         a_block: np.ndarray, r_low: np.ndarray,
+                         r_hi: np.ndarray) -> None:
+        np.save(a_path, a_block.astype(np.uint8))
+        np.savez(r_path, low=r_low, hi=r_hi)
 
     def steps(self) -> list[int]:
         return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
 
     # ------------------------------------------------------------------- save
     def save(self, step: int, state: Any) -> dict:
+        """Streaming checkpoint save (DESIGN.md §3.3).
+
+        The redundancy encode runs as a depth-2 stream-tile pipeline: tile
+        t+1 is dispatched to the device while tile t's result lands in a
+        single preallocated host buffer (at most two tiles live on device,
+        no concatenate copy).  Every node file write goes through a thread
+        pool, so the n systematic np.save calls overlap the encode instead
+        of the seed's serial per-node loop; the packed redundancy writes
+        follow as soon as the last tile resolves.
+        """
         n = self.spec.n
         blocks, treedef, tspec = placement.pytree_to_blocks(state, n, self.spec.p)
-        red = np.asarray(self.code.encode(blocks))
         d = self._step_dir(step)
         tmp = d.with_suffix(".tmp")
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
-        for i in range(1, n + 1):
-            # systematic block: raw bytes; redundancy: packed GF(257)
-            np.save(tmp / f"node_{i:02d}.a.npy",
-                    blocks[i - 1].astype(np.uint8))
-            low, hi = gf.pack257(red[i - 1])
-            np.savez(str(tmp / f"node_{i:02d}.r.npy"), low=low, hi=hi)
+        s_total = blocks.shape[1]
+        tile = self.save_tile_symbols
+        with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
+            writes: list[Future] = []
+            # systematic blocks are raw bytes — no compute, write immediately
+            for i in range(1, n + 1):
+                writes.append(ex.submit(
+                    np.save, tmp / f"node_{i:02d}.a.npy",
+                    blocks[i - 1].astype(np.uint8)))
+            # depth-2 pipeline: force tile t only after dispatching t+1
+            red = np.empty((n, s_total), np.int32)
+            pending = None                  # (host slice, device tile)
+            for s0 in range(0, s_total, tile):
+                part = self.code.encode(blocks[:, s0:s0 + tile])
+                if pending is not None:
+                    red[:, pending[0]] = np.asarray(pending[1])
+                pending = (slice(s0, min(s0 + tile, s_total)), part)
+            if pending is not None:
+                red[:, pending[0]] = np.asarray(pending[1])
+            # vectorized pack over all nodes at once (no per-node loop)
+            low, his = gf.pack257_rows(red)
+            for i in range(1, n + 1):
+                writes.append(ex.submit(
+                    np.savez, tmp / f"node_{i:02d}.r.npz",
+                    low=low[i - 1], hi=his[i - 1]))
+            for w in writes:
+                w.result()                  # surface any I/O error
         manifest = {
             "step": step, "k": self.spec.k, "p": self.spec.p,
             "c": list(self.spec.c), "tree": tspec.to_json(),
@@ -144,9 +195,8 @@ class MSRCheckpointer:
             a_new, r_new = self.code.regenerate(f, r_prev, next_data)
             a_new, r_new = np.asarray(a_new), np.asarray(r_new)
             af, rf = self._node_files(step, f)
-            np.save(af, a_new.astype(np.uint8))
             low, hi = gf.pack257(r_new)
-            np.savez(rf.with_suffix(""), low=low, hi=hi)
+            self._write_node_pair(af, rf, a_new, low, hi)
             repaired.append(f)
             # assemble full data: the k helpers' blocks are already in hand
             data = np.zeros((n, tspec.block_symbols), np.int32)
@@ -168,9 +218,8 @@ class MSRCheckpointer:
                 red_all = np.asarray(self.code.encode(data))
                 for f in failed:
                     af, rf = self._node_files(step, f)
-                    np.save(af, data[f - 1].astype(np.uint8))
                     low, hi = gf.pack257(red_all[f - 1])
-                    np.savez(rf.with_suffix(""), low=low, hi=hi)
+                    self._write_node_pair(af, rf, data[f - 1], low, hi)
                     repaired.append(f)
             path = "reconstruct"
 
@@ -218,7 +267,6 @@ class MSRCheckpointer:
                               for j in plan.next_nodes])
         a_new, r_new = self.code.regenerate(node, r_prev, next_data)
         af, rf = self._node_files(step, node)
-        np.save(af, np.asarray(a_new).astype(np.uint8))
         low, hi = gf.pack257(np.asarray(r_new))
-        np.savez(rf.with_suffix(""), low=low, hi=hi)
+        self._write_node_pair(af, rf, np.asarray(a_new), low, hi)
         return bytes_read

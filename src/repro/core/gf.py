@@ -17,19 +17,23 @@ Everything here is pure JAX (jit/vmap/shard_map friendly).  Host-side helpers
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_P = 257
 
-# Max number of accumulation terms before an fp32 dot of GF(p) symbols can
-# lose exactness: k * (p-1)^2 < 2^24  =>  k <= 255 for p=257.  We fold the
-# modulus every _FOLD terms to stay far inside the envelope.
-_FOLD = 128
+# Max number of accumulation terms an int32 lane can hold before a `mod p`
+# fold is due: 32767 terms for p = 257 (the lazy mod-folding envelope,
+# DESIGN.md §3.2).  The bound lives in repro.kernels.envelope — the single
+# source of truth — imported lazily so core carries no module-level edge
+# into kernels.  The old fp32-dot bound (128 terms) lives in
+# repro.kernels.gf_matmul where the MXU path actually needs it.
+def _i32_chunk(p: int) -> int:
+    from repro.kernels.envelope import int32_lazy_terms, require_int32_envelope
+    require_int32_envelope(p)
+    return int32_lazy_terms(p)
 
 
 def _check_prime(p: int) -> None:
@@ -79,44 +83,29 @@ def inv(x, p: int = DEFAULT_P):
 # ---------------------------------------------------------------------------
 
 def matmul(a, b, p: int = DEFAULT_P, *, precision=None):
-    """(a @ b) mod p, exact.
+    """(a @ b) mod p, exact — portable int32 lanes with lazy mod-folding.
 
     a: (..., m, k) int32 symbols in [0, p)
     b: (..., k, n) int32 symbols in [0, p)
 
-    For p <= 257 the contraction runs through the fp32 (MXU) path with
-    mod-folds every _FOLD terms; for larger p falls back to int32 lanes.
+    Chunks the contraction by int32 headroom (~(2^31-1)/(p-1)^2 terms, 32767
+    for p = 257) instead of the fp32 bound (128 terms): for any realistic k
+    that is a single einsum and ONE `mod p` fold.  The MXU fp32 path lives
+    in repro.kernels (dispatch backend `jnp-f32` / `pallas`).
     """
+    del precision  # kept for API compat; the int32 path has no fp rounding
     a = jnp.asarray(a, jnp.int32) % p
     b = jnp.asarray(b, jnp.int32) % p
     k = a.shape[-1]
-    if (p - 1) ** 2 * min(k, _FOLD) < 2**24:
-        return _matmul_f32(a, b, p, precision)
-    # exact int32 path: k * (p-1)^2 may overflow int32, fold every chunk
-    chunk = max(1, (2**31 - 1) // ((p - 1) ** 2))
+    chunk = _i32_chunk(p)
+    if k <= chunk:
+        return jnp.einsum("...mk,...kn->...mn", a, b) % p
+    # fold the running sum every chunk: for p near the int32 ceiling the
+    # chunk count itself can be large, so unfolded < p partials could wrap
     out = None
     for s in range(0, k, chunk):
         part = jnp.einsum("...mk,...kn->...mn",
                           a[..., s : s + chunk], b[..., s : s + chunk, :]) % p
-        out = part if out is None else (out + part) % p
-    return out
-
-
-def _matmul_f32(a, b, p, precision):
-    k = a.shape[-1]
-    af = a.astype(jnp.float32)
-    bf = b.astype(jnp.float32)
-    if k <= _FOLD:
-        prod = jnp.einsum("...mk,...kn->...mn", af, bf,
-                          precision=precision or jax.lax.Precision.HIGHEST)
-        return (prod.astype(jnp.int32)) % p
-    # fold modulus every _FOLD terms to preserve fp32 exactness
-    out = None
-    for s in range(0, k, _FOLD):
-        prod = jnp.einsum("...mk,...kn->...mn",
-                          af[..., s : s + _FOLD], bf[..., s : s + _FOLD, :],
-                          precision=precision or jax.lax.Precision.HIGHEST)
-        part = (prod.astype(jnp.int32)) % p
         out = part if out is None else (out + part) % p
     return out
 
@@ -232,6 +221,32 @@ def unpack257(low: np.ndarray, hi: np.ndarray, shape=None) -> np.ndarray:
     return out.reshape(shape) if shape is not None else out
 
 
+def pack257_rows(sym: np.ndarray) -> tuple[np.ndarray, list[np.ndarray]]:
+    """Vectorized per-row pack257 for a (n, S) block matrix.
+
+    One pass over the whole matrix (no per-node Python loop): returns the
+    uint8 low bytes (n, S) and a list of n per-row index-of-256 arrays.
+    """
+    sym = np.asarray(sym)
+    if sym.ndim != 2:
+        raise ValueError(f"expected (n, S) block matrix, got {sym.shape}")
+    if sym.min(initial=0) < 0 or sym.max(initial=0) > 256:
+        raise ValueError("symbols out of GF(257) range")
+    low = (sym & 0xFF).astype(np.uint8)       # 256 -> 0, others unchanged
+    rows, cols = np.nonzero(sym == 256)
+    splits = np.searchsorted(rows, np.arange(1, sym.shape[0]))
+    his = np.split(cols.astype(np.int64), splits)
+    return low, his
+
+
+def unpack257_rows(low: np.ndarray, his: Sequence[np.ndarray]) -> np.ndarray:
+    """Inverse of pack257_rows."""
+    out = np.asarray(low).astype(np.int32)
+    for i, hi in enumerate(his):
+        out[i, hi] = 256
+    return out
+
+
 def packed_nbytes(sym: np.ndarray) -> int:
     low, hi = pack257(sym)
     return low.nbytes + hi.nbytes
@@ -241,5 +256,5 @@ __all__ = [
     "DEFAULT_P", "add", "sub", "mul", "neg", "pow_", "inv", "matmul",
     "matvec", "gauss_inverse", "gauss_det", "solve",
     "bytes_to_symbols", "symbols_to_bytes",
-    "pack257", "unpack257", "packed_nbytes",
+    "pack257", "unpack257", "pack257_rows", "unpack257_rows", "packed_nbytes",
 ]

@@ -49,15 +49,30 @@ class RepairPlan:
 class DoubleCirculantMSR:
     """The paper's code over GF(p), vectorized over block symbols.
 
-    `matmul` is pluggable so the Pallas kernel (repro.kernels.ops.gf_matmul)
-    can be injected for the encode/reconstruct hot paths.
+    Compute routes through the GF backend dispatch layer
+    (repro.kernels.dispatch, DESIGN.md §3): `backend` pins a registered
+    backend by name; `matmul` stays pluggable for a fully custom kernel
+    (a custom matmul also disables the structure-exploiting circulant
+    encode so every field op goes through the injected function).
     """
 
-    def __init__(self, spec: CodeSpec, matmul: MatmulFn | None = None):
+    def __init__(self, spec: CodeSpec, matmul: MatmulFn | None = None,
+                 backend: str | None = None):
         self.spec = spec
         self.k, self.n, self.p = spec.k, spec.n, spec.p
         self.c = np.asarray(spec.c, dtype=np.int32)
-        self._matmul = matmul or gf.matmul
+        self._custom_matmul = matmul is not None
+        if matmul is None:
+            from repro.kernels import dispatch
+            be = dispatch.get(backend) if backend else dispatch.select(
+                self.p, self.k)
+            self.backend_name = be.name
+            self._matmul = be.msr_matmul()
+            self._circulant = be.circulant_encode
+        else:
+            self.backend_name = "custom"
+            self._matmul = matmul
+            self._circulant = None
         self._m = spec.matrix_m()            # (n, n) M[j, i] = coef of a_j in r_{i+1}
         self._mt = np.ascontiguousarray(self._m.T)  # (n, n): r = M^T @ a
 
@@ -66,12 +81,16 @@ class DoubleCirculantMSR:
         """data: (n, S) data blocks -> (n, S) redundancy blocks.
 
         r[i] = (M^T @ a)[i]; M^T row i has exactly k nonzeros (the circulant
-        support), so dense matmul wastes 2x — the Pallas circulant kernel
-        exploits the structure; this reference path uses the dense form.
+        support), so the dispatched circulant kernel does k MACs/symbol where
+        the dense matmul does n — the paper's 2x "computer efficiency" win.
+        A custom-matmul code falls back to the dense form.
         """
         data = jnp.asarray(data, jnp.int32)
         if data.shape[0] != self.n:
             raise ValueError(f"expected {self.n} data blocks, got {data.shape[0]}")
+        if self._circulant is not None:
+            return self._circulant(data, tuple(int(x) for x in self.spec.c),
+                                   self.p)
         return self._matmul(jnp.asarray(self._mt), data, self.p)
 
     def node_storage(self, data: jnp.ndarray) -> list[tuple[jnp.ndarray, jnp.ndarray]]:

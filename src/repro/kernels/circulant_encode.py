@@ -12,7 +12,11 @@ this kernel does k = n/2 — half the work and half the VMEM traffic for the
 same result, which is exactly the structural win the paper's construction
 buys over a generic MDS encode.
 
-Exactness: same fp32/VPU envelope as gf_matmul (fold every <=128 terms).
+Exactness (lazy folding, DESIGN.md §3.2): every accumulated term is
+c_u * a_j <= (p-1)^2, so int32 holds ~(2^31-1)/(p-1)^2 terms — 32767 for
+p = 257 (envelope.int32_lazy_terms) — before a `mod p` fold is due.  The old schedule folded every
+128 terms (the fp32 dot envelope), which this elementwise accumulation
+never needed; for realistic k the kernel now folds exactly once.
 Validated on CPU via interpret=True against ref.circulant_encode_ref.
 """
 from __future__ import annotations
@@ -24,14 +28,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .gf_matmul import _fold_depth
+from .envelope import int32_lazy_terms, require_int32_envelope
 
 
 def _circulant_encode_kernel(a_ref, o_ref, *, c: tuple[int, ...], p: int):
     k = len(c)
     n = 2 * k
     a = a_ref[...]                                    # (n, BS) int32
-    depth = _fold_depth(p)
+    chunk = int32_lazy_terms(p)
     acc = jnp.zeros_like(a)
     pending = 0
     for u in range(1, k + 1):
@@ -41,7 +45,7 @@ def _circulant_encode_kernel(a_ref, o_ref, *, c: tuple[int, ...], p: int):
         rolled = jnp.concatenate([a[n - shift:], a[:n - shift]], axis=0) if shift else a
         acc = acc + c[u - 1] * rolled
         pending += 1
-        if pending == depth:                           # fold to stay exact
+        if pending == chunk:                           # int32 headroom spent
             acc = acc % p
             pending = 0
     o_ref[...] = acc % p
@@ -54,6 +58,7 @@ def circulant_encode(data: jnp.ndarray, c: tuple[int, ...], p: int = 257, *,
 
     c must be a static tuple (it parameterizes the compiled kernel).
     """
+    require_int32_envelope(p)
     c = tuple(int(x) % p for x in c)
     if any(x == 0 for x in c):
         raise ValueError("coefficients must be nonzero (paper §III-A)")

@@ -1,0 +1,287 @@
+"""GF(p) backend dispatch: a registry of exact compute implementations
+(DESIGN.md §3).
+
+Every hot path of the MSR layer reduces to three primitives over GF(p):
+
+    matmul(a, b, p)              (m, k) @ (k, s) mod p
+    circulant_encode(data, c, p) the paper's eq. (2), k MACs/symbol
+    axpy(y, alpha, x, p)         the regenerate-path scale+accumulate
+
+Each registered backend implements all three with *bit-exact* integer
+semantics; they differ only in how the arithmetic is scheduled:
+
+  * ``jnp-int32``         jit'd integer lanes with lazy mod-folding — a chunk
+                          of ~(2^31-1)/(p-1)^2 contraction terms (32767 for
+                          p = 257, envelope.int32_lazy_terms) accumulates in
+                          int32 before a single fold.  The fast exact path
+                          on CPU/GPU.
+  * ``jnp-f32``           einsum at HIGHEST precision (MXU-exact on TPU):
+                          fp32 chunk partials < 2^24, accumulated lazily in
+                          int32 (127 chunks per fold — see DESIGN.md §3.2).
+                          Falls back to integer lanes when (p-1)^2 > 2^24-1
+                          (no fp32 schedule is exact there).
+  * ``pallas``            native Pallas TPU kernels (VMEM-tiled, MXU dots).
+  * ``pallas-interpret``  the same kernels in interpret mode — validation
+                          only, never auto-selected (it is the slowest
+                          possible execution mode).
+
+Selection is automatic from ``(jax.default_backend(), p, k)`` via
+:func:`select`, overridable with the ``REPRO_GF_BACKEND`` environment
+variable or :func:`set_default_backend`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .envelope import (LAZY_F32_CHUNKS, MXU_FOLD_CAP, f32_exact_terms,
+                       int32_lazy_terms, require_int32_envelope)
+
+ENV_VAR = "REPRO_GF_BACKEND"
+
+# canonical name used throughout the docs/benchmarks
+int32_headroom_terms = int32_lazy_terms
+
+
+def fold_count(backend_name: str, p: int, k: int) -> int:
+    """Number of ``% p`` folds a k-term contraction costs on a backend.
+
+    The dispatch layer's headline saving: the int32 lazy path folds
+    ceil(k / 32767) times where the eager fp32 path folds ceil(k / 128).
+    Mirrors the implementations: `jnp-f32` falls back to integer lanes
+    when no fp32 schedule is exact; the Pallas kernels reject such p."""
+    if backend_name == "jnp-int32":
+        require_int32_envelope(p)
+        return -(-k // int32_lazy_terms(p))
+    if backend_name in ("jnp-f32", "pallas", "pallas-interpret"):
+        depth = f32_exact_terms(p)
+        if depth < 1:
+            if backend_name == "jnp-f32":               # int32 fallback
+                require_int32_envelope(p)
+                return -(-k // int32_lazy_terms(p))
+            raise ValueError(f"(p-1)^2 > 2^24-1: no exact fp32 schedule "
+                             f"for p={p} on {backend_name}")
+        if backend_name != "jnp-f32":      # the Pallas kernel caps at 128
+            depth = min(depth, MXU_FOLD_CAP)
+        chunks = -(-k // depth)
+        return -(-chunks // LAZY_F32_CHUNKS)
+    raise KeyError(backend_name)
+
+
+# ---------------------------------------------------------------------------
+# jnp-int32: integer lanes, lazy folding by int32 headroom
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def _matmul_i32(a, b, p: int):
+    require_int32_envelope(p)
+    a = jnp.asarray(a, jnp.int32) % p
+    b = jnp.asarray(b, jnp.int32) % p
+    k = a.shape[-1]
+    chunk = int32_lazy_terms(p)
+    if k <= chunk:
+        return jnp.einsum("...mk,...kn->...mn", a, b) % p
+    # fold the running sum every chunk: for p near the int32 ceiling the
+    # chunk count itself can be large, so unfolded < p partials could wrap
+    out = None
+    for s in range(0, k, chunk):
+        part = jnp.einsum("...mk,...kn->...mn",
+                          a[..., s:s + chunk], b[..., s:s + chunk, :]) % p
+        out = part if out is None else (out + part) % p
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("c", "p"))
+def _circulant_i32(data, c: tuple[int, ...], p: int):
+    require_int32_envelope(p)
+    data = jnp.asarray(data, jnp.int32) % p
+    k = len(c)
+    chunk = int32_lazy_terms(p)    # accumulates onto a post-fold residual
+    acc = jnp.zeros_like(data)
+    pending = 0
+    for u in range(1, k + 1):
+        acc = acc + c[u - 1] * jnp.roll(data, shift=k + u - 1, axis=0)
+        pending += 1
+        if pending == chunk:
+            acc = acc % p
+            pending = 0
+    return acc % p
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "p"))
+def _axpy_i32(y, alpha: int, x, p: int):
+    require_int32_envelope(p)             # guarantees (p-1) + (p-1)^2 < 2^31
+    y = jnp.asarray(y, jnp.int32) % p
+    x = jnp.asarray(x, jnp.int32) % p
+    return (y + (alpha % p) * x) % p
+
+
+# ---------------------------------------------------------------------------
+# jnp-f32: HIGHEST-precision einsum (MXU-exact), lazy int32 accumulation
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def _matmul_f32(a, b, p: int):
+    depth = f32_exact_terms(p)
+    if depth < 1:                  # a single product already rounds in fp32
+        return _matmul_i32(a, b, p)
+    a = jnp.asarray(a, jnp.int32) % p
+    b = jnp.asarray(b, jnp.int32) % p
+    k = a.shape[-1]
+    af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+    acc, pending = None, 0
+    for s in range(0, k, depth):
+        prod = jnp.einsum("...mk,...kn->...mn",
+                          af[..., s:s + depth], bf[..., s:s + depth, :],
+                          precision=jax.lax.Precision.HIGHEST)
+        part = prod.astype(jnp.int32)       # each partial < 2^24: exact
+        acc = part if acc is None else acc + part
+        pending += 1
+        if pending == LAZY_F32_CHUNKS:      # int32 headroom exhausted: fold
+            acc = acc % p
+            pending = 0
+    return acc % p
+
+
+def _circulant_f32(data, c: tuple[int, ...], p: int):
+    # term magnitudes match the int32 analysis; reuse the integer scheduler
+    return _circulant_i32(data, c, p)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GFBackend:
+    """One exact implementation of the three GF primitives."""
+    name: str
+    matmul: Callable      # (a, b, p) -> (m, s) int32
+    circulant_encode: Callable  # (data, c: tuple, p) -> (n, s) int32
+    axpy: Callable        # (y, alpha, x, p) -> int32
+    selectable: bool = True     # False: validation-only, never auto-picked
+
+    def msr_matmul(self):
+        """Adapter for DoubleCirculantMSR(..., matmul=...)."""
+        return lambda a, b, p: self.matmul(a, b, p)
+
+
+_REGISTRY: dict[str, GFBackend] = {}
+_default_override: Optional[str] = None
+
+
+def register(backend: GFBackend) -> GFBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get(name: str) -> GFBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown GF backend {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def registered_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Process-wide override (None restores automatic selection)."""
+    global _default_override
+    if name is not None:
+        get(name)
+    _default_override = name
+
+
+def select(p: int = 257, k: Optional[int] = None) -> GFBackend:
+    """Pick the fastest exact backend for this host from
+    ``(jax.default_backend(), p, k)``.
+
+    Priority: ``REPRO_GF_BACKEND`` env var > :func:`set_default_backend` >
+    platform rule.  Explicit pins may name validation-only backends; the
+    automatic rule only ever returns ``selectable`` ones.  Raises for p
+    outside every exact envelope (p > envelope.INT32_MAX_P).
+    """
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return get(env)
+    if _default_override:
+        return get(_default_override)
+    require_int32_envelope(p)      # int32 lanes are the widest exact path
+    platform = jax.default_backend()
+    if platform == "tpu" and f32_exact_terms(p) >= 8 and (k is None or k >= 2):
+        # MXU territory: the native kernel wins while fp32 chunks are deep
+        # enough to amortize the fold and the contraction is a real matmul
+        # (k == 1 degenerates to a scale — not worth an MXU pass); shallow
+        # or out-of-envelope fp32 depth falls back to integer lanes.
+        name = "pallas"
+    else:
+        name = "jnp-int32"
+    chosen = get(name)
+    assert chosen.selectable, name     # registry invariant for auto-picks
+    return chosen
+
+
+# ---------------------------------------------------------------------------
+# Backend instances.  The Pallas kernel modules (and jax.experimental.pallas)
+# are imported inside the call wrappers, on FIRST USE — CPU-only consumers
+# that stay on the jnp backends never pay the pallas import.
+# ---------------------------------------------------------------------------
+
+def _pallas(interpret: bool):
+    def matmul(a, b, p):
+        from .gf_matmul import gf_matmul as pk_matmul
+        return pk_matmul(a, b, p, interpret=interpret)
+
+    def circ(data, c, p):
+        from .circulant_encode import circulant_encode as pk_circ
+        return pk_circ(data, tuple(int(x) for x in c), p, interpret=interpret)
+
+    def axpy(y, alpha, x, p):
+        from .ref import gf_axpy_ref
+        return gf_axpy_ref(y, int(alpha), x, p)
+
+    return matmul, circ, axpy
+
+
+def _norm_c(fn):
+    @functools.wraps(fn)
+    def wrapped(data, c, p):
+        return fn(data, tuple(int(x) % p for x in c), p)
+    return wrapped
+
+
+register(GFBackend(
+    name="jnp-int32",
+    matmul=_matmul_i32,
+    circulant_encode=_norm_c(_circulant_i32),
+    axpy=lambda y, alpha, x, p: _axpy_i32(y, int(alpha), x, p),
+))
+
+register(GFBackend(
+    name="jnp-f32",
+    matmul=_matmul_f32,
+    circulant_encode=_norm_c(_circulant_f32),
+    axpy=lambda y, alpha, x, p: _axpy_i32(y, int(alpha), x, p),
+))
+
+_pm, _pc, _pa = _pallas(interpret=False)
+register(GFBackend(name="pallas", matmul=_pm, circulant_encode=_pc, axpy=_pa))
+
+_im, _ic, _ia = _pallas(interpret=True)
+register(GFBackend(name="pallas-interpret", matmul=_im, circulant_encode=_ic,
+                   axpy=_ia, selectable=False))
+
+
+__all__ = [
+    "GFBackend", "register", "get", "select", "registered_backends",
+    "set_default_backend", "int32_headroom_terms", "int32_lazy_terms",
+    "f32_exact_terms", "fold_count", "LAZY_F32_CHUNKS", "ENV_VAR",
+]

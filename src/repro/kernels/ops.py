@@ -1,55 +1,64 @@
-"""Public jit'd wrappers around the Pallas GF kernels.
+"""Public GF(p) compute entry points, backend-dispatched (DESIGN.md §3).
 
-`interpret` defaults to True off-TPU (this container is CPU-only; the kernels
-target TPU VMEM/MXU and are validated in interpret mode per DESIGN.md).
-On a TPU backend the same calls compile natively (interpret=False).
+Every call routes through the :mod:`repro.kernels.dispatch` registry: the
+fastest exact implementation for this host is chosen automatically from
+``(jax.default_backend(), p, k)`` — jit'd int32 lanes on CPU/GPU, native
+Pallas kernels on TPU — and can be pinned per call (``backend=``), per
+process (:func:`dispatch.set_default_backend`), or via the
+``REPRO_GF_BACKEND`` environment variable.
+
+``pallas-interpret`` (the seed repo's only execution mode on CPU, and the
+slowest possible one) remains registered for kernel validation but is never
+auto-selected.
 """
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from . import ref
-from .circulant_encode import circulant_encode as _circulant_encode
-from .gf_matmul import gf_matmul as _gf_matmul
+from . import dispatch, ref
 
 
-@functools.cache
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _resolve(backend: Optional[str], p: int, k: Optional[int]) -> dispatch.GFBackend:
+    if backend is None:
+        return dispatch.select(p, k)
+    return dispatch.get(backend)
 
 
-def gf_matmul(a, b, p: int = 257, *, block_s: int = 512,
-              interpret: bool | None = None) -> jnp.ndarray:
-    """Exact (a @ b) mod p — kernel-backed."""
-    if interpret is None:
-        interpret = _default_interpret()
-    return _gf_matmul(a, b, p, block_s=block_s, interpret=interpret)
+def gf_matmul(a, b, p: int = 257, *, backend: Optional[str] = None) -> jnp.ndarray:
+    """Exact (a @ b) mod p — dispatched to the fastest exact backend."""
+    a = jnp.asarray(a)
+    return _resolve(backend, p, a.shape[-1]).matmul(a, b, p)
 
 
-def circulant_encode(data, c, p: int = 257, *, block_s: int = 512,
-                     interpret: bool | None = None) -> jnp.ndarray:
-    """MSR redundancy blocks from data blocks — kernel-backed, coefficients
-    compile-time-specialized (embedded property)."""
-    if interpret is None:
-        interpret = _default_interpret()
-    return _circulant_encode(data, tuple(int(x) for x in c), p,
-                             block_s=block_s, interpret=interpret)
+def circulant_encode(data, c, p: int = 257, *,
+                     backend: Optional[str] = None) -> jnp.ndarray:
+    """MSR redundancy blocks from data blocks (paper eq. (2)) — dispatched;
+    coefficients are compile-time-specialized (embedded property)."""
+    c = tuple(int(x) for x in c)
+    if any(x % p == 0 for x in c):
+        raise ValueError("coefficients must be nonzero (paper §III-A)")
+    return _resolve(backend, p, len(c)).circulant_encode(data, c, p)
 
 
-def msr_matmul_backend(p: int = 257, *, block_s: int = 512,
-                       interpret: bool | None = None):
+def gf_axpy(y, alpha: int, x, p: int = 257, *,
+            backend: Optional[str] = None) -> jnp.ndarray:
+    """(y + alpha * x) mod p — the regenerate-path primitive, dispatched."""
+    return _resolve(backend, p, None).axpy(y, alpha, x, p)
+
+
+def msr_matmul_backend(p: int = 257, *, backend: Optional[str] = None):
     """A drop-in `matmul(a, b, p)` for DoubleCirculantMSR(..., matmul=...)."""
     def matmul(a, b, p_inner=p):
-        return gf_matmul(a, b, p_inner, block_s=block_s, interpret=interpret)
+        return gf_matmul(a, b, p_inner, backend=backend)
     return matmul
 
 
 # re-export oracles for test convenience
 gf_matmul_ref = ref.gf_matmul_ref
 circulant_encode_ref = ref.circulant_encode_ref
+gf_axpy_ref = ref.gf_axpy_ref
 
-__all__ = ["gf_matmul", "circulant_encode", "msr_matmul_backend",
-           "gf_matmul_ref", "circulant_encode_ref"]
+__all__ = ["gf_matmul", "circulant_encode", "gf_axpy", "msr_matmul_backend",
+           "gf_matmul_ref", "circulant_encode_ref", "gf_axpy_ref", "dispatch"]

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from .envelope import int32_lazy_terms, require_int32_envelope
+
 
 def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
     """(a @ b) mod p with exact integer accumulation.
@@ -12,10 +14,11 @@ def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
     float64-free int32 chunked accumulation (chunks keep partial sums within
     int32), matching repro.core.gf.matmul semantics.
     """
+    require_int32_envelope(p)
     a = jnp.asarray(a, jnp.int32) % p
     b = jnp.asarray(b, jnp.int32) % p
     k = a.shape[-1]
-    chunk = max(1, (2**31 - 1) // max((p - 1) ** 2, 1))
+    chunk = int32_lazy_terms(p)
     out = None
     for s0 in range(0, k, chunk):
         part = (a[:, s0:s0 + chunk] @ b[s0:s0 + chunk, :]) % p
@@ -29,20 +32,31 @@ def circulant_encode_ref(data: jnp.ndarray, c, p: int) -> jnp.ndarray:
     data: (n, s) int32; c: (k,) with n = 2k.  This is the paper's eq. (2) in
     circulant closed form — the oracle realizes it with explicit rolls.
     """
+    require_int32_envelope(p)
     data = jnp.asarray(data, jnp.int32) % p
     c = np.asarray(c, dtype=np.int64) % p
     k = c.shape[0]
     n = data.shape[0]
     assert n == 2 * k, (n, k)
+    # lazy mod-folding: each term is <= (p-1)^2, so int32 headroom admits
+    # int32_lazy_terms(p) un-folded terms (32767 for p = 257) — one fold
+    # for any realistic k instead of one per term.
+    chunk = int32_lazy_terms(p)
     out = jnp.zeros_like(data)
+    pending = 0
     for u in range(1, k + 1):
         # row j holds r_{j+1} (nodes are 1-indexed in the paper):
         # r_{j+1} = sum_u c_u data[(j+1-k-u) mod n]  =>  roll by k+u-1
         rolled = jnp.roll(data, shift=k + u - 1, axis=0)
-        out = (out + int(c[u - 1]) * rolled) % p
-    return out
+        out = out + int(c[u - 1]) * rolled
+        pending += 1
+        if pending == chunk:
+            out = out % p
+            pending = 0
+    return out % p
 
 
 def gf_axpy_ref(y: jnp.ndarray, alpha: int, x: jnp.ndarray, p: int) -> jnp.ndarray:
     """(y + alpha * x) mod p — the regenerate-path primitive."""
+    require_int32_envelope(p)
     return (jnp.asarray(y, jnp.int32) + (int(alpha) % p) * (jnp.asarray(x, jnp.int32) % p)) % p

@@ -16,7 +16,11 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+try:                                    # JAX >= 0.4.35 exports it at top level
+    from jax import shard_map
+except ImportError:                     # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 

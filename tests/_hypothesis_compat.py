@@ -1,0 +1,85 @@
+"""Hypothesis shim: use the real library when installed, else a minimal
+deterministic fallback so the suite collects and passes without it.
+
+The fallback implements only what this suite uses — ``given``, ``settings``
+and the ``integers`` / ``sampled_from`` / ``binary`` strategies — and runs
+each property test on a fixed, seeded pseudo-random example set (seeded by
+the test's qualified name, so failures reproduce exactly).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def binary(min_size: int = 0, max_size: int = 64) -> _Strategy:
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return bytes(rng.randrange(256) for _ in range(size))
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    class settings:  # noqa: N801 — mirrors hypothesis.settings
+        def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._max_examples = self.max_examples
+            return fn
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # strategy-provided params must not look like pytest fixtures:
+            # positional strategies fill the LAST len(arg_strategies) slots
+            # not named by keyword strategies (matching hypothesis, which
+            # right-aligns positional strategies against the signature)
+            kw_names = set(kw_strategies)
+            free = [q.name for q in params if q.name not in kw_names]
+            pos_names = free[len(free) - len(arg_strategies):]
+            fixture_params = [q for q in params
+                              if q.name not in kw_names
+                              and q.name not in pos_names]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = dict(zip(pos_names,
+                                     (s.example(rng) for s in arg_strategies)))
+                    drawn.update((k, s.example(rng))
+                                 for k, s in kw_strategies.items())
+                    fn(*args, **kwargs, **drawn)
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            return wrapper
+        return decorate
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

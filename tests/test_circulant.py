@@ -3,7 +3,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import circulant, gf
 
@@ -118,7 +118,7 @@ def test_lemma1_every_row_nonzero():
 
 
 @given(st.integers(2, 5), st.sampled_from([5, 7, 257]), st.integers(0, 10))
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=10, deadline=None)
 def test_codespec_make_validates(k, p, seed):
     try:
         spec = circulant.CodeSpec.make(k, p, seed=seed)

@@ -1,0 +1,208 @@
+"""GF backend dispatch layer: selection rules + bit-exact backend parity.
+
+Every registered backend must agree with the pure oracles
+(ref.gf_matmul_ref / ref.circulant_encode_ref / ref.gf_axpy_ref) across
+fields, code dimensions, and odd stream sizes (padding edge).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gf
+from repro.core.circulant import CodeSpec
+from repro.core.msr import DoubleCirculantMSR
+from repro.kernels import dispatch, ops, ref
+
+PARITY_BACKENDS = ["jnp-int32", "jnp-f32", "pallas-interpret"]
+# odd sizes exercise the Pallas padding path; 1 exercises the degenerate tile
+STREAMS = [1, 37, 257, 640]
+
+
+def rand(shape, p, seed):
+    return np.random.default_rng(seed).integers(
+        0, p, size=shape, dtype=np.int64).astype(np.int32)
+
+
+# ----------------------------------------------------------------- parity
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+@pytest.mark.parametrize("p", [2, 5, 257])
+@pytest.mark.parametrize("k", [2, 8])
+def test_matmul_parity(backend, p, k):
+    be = dispatch.get(backend)
+    for s in STREAMS:
+        a = rand((2 * k, 2 * k), p, seed=k + s)
+        b = rand((2 * k, s), p, seed=k * s + 1)
+        got = np.asarray(be.matmul(a, b, p))
+        want = np.asarray(ref.gf_matmul_ref(jnp.asarray(a), jnp.asarray(b), p))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{backend} p={p} k={k} s={s}")
+
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+@pytest.mark.parametrize("p", [2, 5, 257])
+@pytest.mark.parametrize("k", [2, 8])
+def test_circulant_parity(backend, p, k):
+    be = dispatch.get(backend)
+    rng = np.random.default_rng(p * k)
+    c = tuple(int(x) for x in rng.integers(1, p, size=k))
+    for s in STREAMS:
+        data = rand((2 * k, s), p, seed=p + k + s)
+        got = np.asarray(be.circulant_encode(data, c, p))
+        want = np.asarray(ref.circulant_encode_ref(jnp.asarray(data), c, p))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{backend} p={p} k={k} s={s}")
+
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_axpy_parity(backend):
+    be = dispatch.get(backend)
+    for p in (2, 5, 257):
+        y, x = rand((199,), p, 0), rand((199,), p, 1)
+        alpha = int(rand((), p, 2))
+        got = np.asarray(be.axpy(y, alpha, x, p))
+        want = np.asarray(ref.gf_axpy_ref(jnp.asarray(y), alpha,
+                                          jnp.asarray(x), p))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_lazy_fold_worst_case_magnitudes():
+    """All-(p-1) inputs across chunk/fold boundaries stay exact on every
+    backend — the lazy-folding envelope's edge (DESIGN.md §3.2)."""
+    p = 257
+    for backend in PARITY_BACKENDS:
+        be = dispatch.get(backend)
+        for k in (127, 128, 129, 255, 256, 300):
+            a = np.full((2, k), p - 1, np.int32)
+            b = np.full((k, 256), p - 1, np.int32)
+            got = np.asarray(be.matmul(a, b, p))
+            want = (a.astype(np.int64) @ b.astype(np.int64)) % p
+            np.testing.assert_array_equal(got, want,
+                                          err_msg=f"{backend} k={k}")
+
+
+def test_interpret_kernel_folds_with_tiny_chunk():
+    """A modulus with shallow fp32 chunks (depth 6) forces many in-kernel
+    folds; worst-case magnitudes across those boundaries must stay exact."""
+    p = 1621                             # (p-1)^2 * 6 < 2^24 < (p-1)^2 * 7
+    a = np.full((3, 25), p - 1, np.int32)
+    b = np.full((25, 130), p - 1, np.int32)
+    got = np.asarray(dispatch.get("pallas-interpret").matmul(a, b, p))
+    np.testing.assert_array_equal(got, (a.astype(np.int64) @ b.astype(np.int64)) % p)
+
+
+def test_fp32_envelope_boundary_p_too_large():
+    """(p-1)^2 > 2^24-1: a single product rounds in fp32, so the Pallas
+    kernels must REJECT such p, jnp-f32 must fall back to exact integer
+    lanes, and auto-selection must route to jnp-int32."""
+    p = 4099
+    # the exact pair that rounds in fp32: 4097*4097 is odd and > 2^24
+    a, b = np.asarray([[4097]], np.int32), np.asarray([[4097]], np.int32)
+    want = (4097 * 4097) % p
+    got = np.asarray(dispatch.get("jnp-f32").matmul(a, b, p))
+    assert int(got[0, 0]) == want, (int(got[0, 0]), want)
+    with pytest.raises(ValueError):
+        dispatch.get("pallas-interpret").matmul(a, b, p)
+    with pytest.raises(ValueError):
+        dispatch.fold_count("pallas", p, 8)
+    assert dispatch.fold_count("jnp-f32", p, 8) == \
+        dispatch.fold_count("jnp-int32", p, 8)
+    assert dispatch.select(p, 8).name == "jnp-int32"
+
+
+def test_int32_envelope_boundary_p_too_large():
+    """p > 46341: a SINGLE product overflows int32, so no backend in this
+    layer is exact — everything must reject loudly instead of silently
+    returning wrapped results (e.g. GF(65537))."""
+    from repro.kernels import envelope
+    assert envelope.int32_lazy_terms(envelope.INT32_MAX_P) >= 1
+    assert envelope.int32_lazy_terms(envelope.INT32_MAX_P + 1) < 1
+    p = 65537
+    a, b = rand((2, 4), p, 0), rand((4, 8), p, 1)
+    for name in ("jnp-int32", "jnp-f32"):
+        be = dispatch.get(name)
+        with pytest.raises(ValueError):
+            be.matmul(a, b, p)
+        with pytest.raises(ValueError):
+            be.axpy(a[0], 3, a[1], p)
+    with pytest.raises(ValueError):
+        dispatch.select(p, 2)
+    with pytest.raises(ValueError):
+        dispatch.fold_count("jnp-int32", p, 8)
+    with pytest.raises(ValueError):
+        gf.matmul(a, b, p)
+    with pytest.raises(ValueError):
+        ref.gf_matmul_ref(jnp.asarray(a), jnp.asarray(b), p)
+
+
+# -------------------------------------------------------------- selection
+def test_cpu_never_selects_interpret():
+    """Automatic selection must never pick the validation-only backend."""
+    for p in (2, 5, 257, 4099):
+        for k in (None, 2, 8, 256):
+            be = dispatch.select(p, k)
+            assert be.name != "pallas-interpret", (p, k)
+            assert be.selectable, (p, k)
+    if jax.default_backend() != "tpu":
+        assert dispatch.select(257, 8).name == "jnp-int32"
+
+
+def test_env_override(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_VAR, "jnp-f32")
+    assert dispatch.select(257, 8).name == "jnp-f32"
+    monkeypatch.setenv(dispatch.ENV_VAR, "no-such-backend")
+    with pytest.raises(KeyError):
+        dispatch.select(257, 8)
+
+
+def test_set_default_backend_override():
+    try:
+        dispatch.set_default_backend("jnp-f32")
+        assert dispatch.select(257, 8).name == "jnp-f32"
+    finally:
+        dispatch.set_default_backend(None)
+    with pytest.raises(KeyError):
+        dispatch.set_default_backend("bogus")
+
+
+def test_fold_count_accounting():
+    # fp32 chunks are 255 terms; int32 lanes fold every 32767 terms (the
+    # post-fold residual < p costs one term of the 32767 headroom)
+    assert dispatch.int32_headroom_terms(257) == 32767
+    assert dispatch.f32_exact_terms(257) == 255
+    assert dispatch.fold_count("jnp-int32", 257, 512) == 1
+    assert dispatch.fold_count("jnp-f32", 257, 512) == 1
+    assert dispatch.fold_count("jnp-int32", 257, 100_000) == 4
+    # lazy int32 accumulation: 127 fp32 chunks per fold; jnp-f32 chunks are
+    # 255 terms deep, the Pallas kernel clamps depth to the MXU-native 128
+    assert dispatch.fold_count("jnp-f32", 257, 255 * 127) == 1
+    assert dispatch.fold_count("jnp-f32", 257, 255 * 127 + 1) == 2
+    assert dispatch.fold_count("pallas", 257, 128 * 127) == 1
+    assert dispatch.fold_count("pallas", 257, 128 * 127 + 1) == 2
+
+
+# ------------------------------------------------------------- integration
+def test_msr_code_uses_dispatch_and_agrees():
+    spec = CodeSpec.make(3, 257)
+    auto = DoubleCirculantMSR(spec)
+    assert auto.backend_name in dispatch.registered_backends()
+    assert auto.backend_name != "pallas-interpret"
+    pinned = DoubleCirculantMSR(spec, backend="jnp-f32")
+    data = jnp.asarray(rand((6, 333), 257, seed=5))
+    np.testing.assert_array_equal(np.asarray(auto.encode(data)),
+                                  np.asarray(pinned.encode(data)))
+    # custom matmul still honoured (and disables the circulant fast path)
+    custom = DoubleCirculantMSR(spec, matmul=gf.matmul)
+    assert custom.backend_name == "custom"
+    np.testing.assert_array_equal(np.asarray(auto.encode(data)),
+                                  np.asarray(custom.encode(data)))
+
+
+def test_ops_backend_pinning():
+    a, b = rand((4, 8), 257, 0), rand((8, 129), 257, 1)
+    want = (a.astype(np.int64) @ b.astype(np.int64)) % 257
+    for backend in PARITY_BACKENDS:
+        np.testing.assert_array_equal(
+            np.asarray(ops.gf_matmul(a, b, 257, backend=backend)), want)

@@ -32,12 +32,20 @@ def run_subprocess(body: str):
     return res.stdout
 
 
+def _spec_literal(k, p):
+    """Search coefficients in THIS process (memoized) and inline the result,
+    so the subprocess skips the condition-(6) search it isn't testing."""
+    from repro.core.circulant import CodeSpec
+    spec = CodeSpec.make(k, p)
+    return f"CodeSpec(k={spec.k}, p={spec.p}, c={spec.c!r})"
+
+
 def test_ring_encode_matches_dense_oracle():
-    run_subprocess("""
+    run_subprocess(f"""
         from repro.core.circulant import CodeSpec
         from repro.core.ring import ring_encode, ring_encode_reference
         from repro.launch.mesh import make_storage_mesh
-        spec = CodeSpec.make(4, 257)                     # n = 8 nodes
+        spec = {_spec_literal(4, 257)}                   # n = 8 nodes
         mesh = make_storage_mesh(8)
         rng = np.random.default_rng(0)
         # full-range symbols: int32 wire
@@ -58,15 +66,20 @@ def test_ring_encode_matches_dense_oracle():
 
 
 def test_ring_encode_various_sizes():
+    from repro.core.circulant import CodeSpec
+    cases = []
+    for k, p, s in [(4, 257, 128), (4, 257, 1000), (4, 5, 64)]:
+        try:
+            CodeSpec.make(k, p)
+        except ValueError:
+            continue
+        cases.append(f"({_spec_literal(k, p)}, {s})")
     run_subprocess("""
         from repro.core.circulant import CodeSpec
         from repro.core.ring import ring_encode, ring_encode_reference
         from repro.launch.mesh import make_storage_mesh
-        for k, p, s in [(4, 257, 128), (4, 257, 1000), (4, 5, 64)]:
-            try:
-                spec = CodeSpec.make(k, p)
-            except ValueError:
-                continue
+        for spec, s in [%s]:
+            k, p = spec.k, spec.p
             mesh = make_storage_mesh(2 * k)
             rng = np.random.default_rng(k + s)
             data = rng.integers(0, p, size=(2 * k, s), dtype=np.int64).astype(np.int32)
@@ -75,7 +88,7 @@ def test_ring_encode_various_sizes():
             want = np.asarray(ring_encode_reference(jnp.asarray(data), spec))
             np.testing.assert_array_equal(got, want, err_msg=f"k={k} p={p} s={s}")
         print("sizes OK")
-    """)
+    """ % ", ".join(cases))
 
 
 def test_int8_ring_mean_close_to_true_mean():

@@ -1,7 +1,7 @@
 """GF(2^8) backend: field axioms, known AES values, matmul/inverse."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import gf256
 

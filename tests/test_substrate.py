@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.data import pipeline
@@ -150,8 +150,8 @@ def test_training_reduces_loss():
     cfg = get_config("paper-tiny-lm").reduced(
         n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
         d_ff=128, vocab_size=128, loss_chunk=32)
-    tcfg = TrainConfig(n_steps=100, global_batch=8, seq_len=32, log_every=99, seed=0)
-    opt = adamw.AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=100)
+    tcfg = TrainConfig(n_steps=150, global_batch=8, seq_len=32, log_every=149, seed=0)
+    opt = adamw.AdamWConfig(lr=1e-2, warmup_steps=10, total_steps=150)
     _, history = train(cfg, tcfg, opt)
     first, last = history[0]["loss"], history[-1]["loss"]
     assert last < first - 0.5, (first, last)
