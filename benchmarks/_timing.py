@@ -1,0 +1,21 @@
+"""Shared steady-state timing helper for the benchmark modules.
+
+One warm-up call (excluded: jit compile + first-touch), then best-of-N
+mean-of-reps wall time — best-of is robust to host jitter.  Blocks on the
+full result pytree so multi-output paths are timed end to end.
+"""
+import time
+
+import jax
+
+
+def timeit(fn, *args, reps=3, best_of=3):
+    jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(best_of):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / reps)
+    return min(times)

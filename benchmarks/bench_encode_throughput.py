@@ -15,27 +15,14 @@ reported.  On CPU the dispatched backend is `jnp-int32`; interpret-mode
 MB/s measures kernel *semantics*, not TPU performance (roofline.py covers
 the TPU story).
 """
-import time
-
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import timeit as _timeit
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
 from repro.core.ring import ring_link_traffic_blocks
 from repro.kernels import dispatch, ops
-
-
-def _timeit(fn, *args, reps=3, best_of=3):
-    fn(*args).block_until_ready()          # compile
-    times = []
-    for _ in range(best_of):
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            out = fn(*args)
-        out.block_until_ready()
-        times.append((time.perf_counter() - t0) / reps)
-    return min(times)                      # best-of: robust to host jitter
 
 
 def run(ks=(2, 8), stream_symbols: int = 1 << 16, *,

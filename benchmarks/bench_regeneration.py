@@ -3,56 +3,143 @@
 The paper's claim: double circulant MSR regeneration needs NO coefficient
 discovery, NO helper-side combining and NO linear-system solve — just 2k
 multiply-accumulates per symbol at the newcomer.  We compare:
-  * field-operation counts (modelled, both schemes), and
-  * measured wall time of our regenerate() vs a solve-based repair
-    (full any-k reconstruction of the lost node's blocks).
+  * field-operation counts (modelled, both schemes),
+  * measured wall time of the FUSED single-matmul regenerate (repair
+    engine, DESIGN.md §4) vs the pre-engine unfused three-round schedule
+    (`regenerate_reference`) vs a solve-based repair (full any-k
+    reconstruction of the lost node's blocks), and
+  * batched regeneration of all n nodes through `regenerate_batch`.
+
+Methodology matches bench_encode_throughput: the first call is excluded
+(jit warm-up), timings are best-of over repeated steady-state calls, and
+MB/s is reported over the helper download gamma = (k+1) * S bytes.
 """
+import functools
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import timeit
 from repro.core.baselines import embedded_repair_cost, solve_based_msr_repair_cost
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
 
+_timeit = functools.partial(timeit, reps=5, best_of=4)
 
-def run(ks=(2, 4, 8), block_symbols: int = 1 << 18, quiet=False):
+
+def _timeit_pair(fn_a, fn_b, reps=3, rounds=16, window_s=0.0, pause_s=1.0):
+    """Best-of timing of two alternatives in ALTERNATING rounds.
+
+    The fused-vs-unfused speedup is a ratio of two measurements; on shared
+    hosts whose capacity oscillates (burst quotas, noisy neighbours),
+    timing one path to completion and then the other skews the ratio by
+    whatever window each phase landed in.  Alternating short rounds gives
+    both paths a shot at every window, and best-of recovers each path's
+    steady-state nominal.  ``window_s > 0`` additionally spreads the
+    rounds (with ``pause_s`` cooldowns) across at least that much
+    wall-clock, so the samples span multiple capacity windows when the
+    oscillation period is longer than the raw sampling loop.
+    """
+    jax.block_until_ready(fn_a())          # warm-up: compile + first call
+    jax.block_until_ready(fn_b())
+    best_a = best_b = float("inf")
+    t_start = time.perf_counter()
+    done = 0
+    while done < rounds or (time.perf_counter() - t_start) < window_s:
+        for fn, which in ((fn_a, 0), (fn_b, 1)):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = fn()
+            jax.block_until_ready(out)
+            t = (time.perf_counter() - t0) / reps
+            if which == 0:
+                best_a = min(best_a, t)
+            else:
+                best_b = min(best_b, t)
+        done += 1
+        if (time.perf_counter() - t_start) < window_s:
+            time.sleep(pause_s)
+    return best_a, best_b
+
+
+def run(ks=(2, 4, 8), block_symbols: int = 1 << 18, quiet=False,
+        sample_window_s: float = 0.0):
     rows = []
     for k in ks:
         spec = CodeSpec.make(k, 257)
         code = DoubleCirculantMSR(spec)
         n = spec.n
         rng = np.random.default_rng(k)
-        data = jnp.asarray(rng.integers(0, 257, (n, block_symbols), dtype=np.int64), jnp.int32)
+        data = jnp.asarray(rng.integers(0, 257, (n, block_symbols),
+                                        dtype=np.int64), jnp.int32)
         red = code.encode(data)
         red.block_until_ready()
 
         plan = code.repair_plan(1)
         r_prev = red[plan.prev_node - 1]
         nxt = data[jnp.asarray(plan.data_indices)]
-        # embedded (paper) path
-        t0 = time.perf_counter()
-        a_new, r_new = code.regenerate(1, r_prev, nxt)
-        a_new.block_until_ready(); r_new.block_until_ready()
-        t_emb = time.perf_counter() - t0
-        # solve-based path: any-k reconstruction then re-encode lost pair
+        gamma_mb = (k + 1) * block_symbols / 2**20   # helper download bytes
+
+        # fused (engine) vs unfused (pre-engine reference) — bit-exact first
+        a_f, r_f = code.regenerate(1, r_prev, nxt)
+        a_u, r_u = code.regenerate_reference(1, r_prev, nxt)
+        np.testing.assert_array_equal(np.asarray(a_f), np.asarray(a_u))
+        np.testing.assert_array_equal(np.asarray(r_f), np.asarray(r_u))
+        np.testing.assert_array_equal(np.asarray(a_f), np.asarray(data[0]))
+        # time the engine's native stacked API — the restore hot path
+        # (_regenerate_tiled) consumes the (2, S) stack directly; the
+        # tuple-returning `regenerate` adds two per-call row-slice ops
+        t_fused, t_unfused = _timeit_pair(
+            lambda: code.repair.regenerate_stacked(1, r_prev, nxt),
+            lambda: code.regenerate_reference(1, r_prev, nxt),
+            window_s=sample_window_s)
+
+        # batched: all n nodes regenerated through the vmapped engine
+        r_prevs = red[jnp.asarray([code.repair_plan(i).prev_node - 1
+                                   for i in range(1, n + 1)])]
+        next_all = jnp.stack([data[jnp.asarray(code.repair_plan(i).data_indices)]
+                              for i in range(1, n + 1)])
+        batch = code.regenerate_batch(list(range(1, n + 1)), r_prevs, next_all)
+        np.testing.assert_array_equal(np.asarray(batch[:, 0]), np.asarray(data))
+        t_batch = _timeit(lambda: code.regenerate_batch(
+            list(range(1, n + 1)), r_prevs, next_all))
+
+        # solve-based path: any-k reconstruction then re-encode lost pair.
+        # steady = decode inverse served from the LRU cache; cold = a fresh
+        # subset after the kernels are compiled (measured last, so it prices
+        # the per-subset Gaussian inverse, not one-time jit compilation).
         use = list(range(2, k + 2))
         idx = jnp.asarray([i - 1 for i in use])
-        t0 = time.perf_counter()
+
+        def solve_repair():
+            full = code.reconstruct(use, data[idx], red[idx])
+            return code.encode(full)
+
         full = code.reconstruct(use, data[idx], red[idx])
-        red2 = code.encode(full)
-        full.block_until_ready(); red2.block_until_ready()
-        t_solve = time.perf_counter() - t0
-        np.testing.assert_array_equal(np.asarray(full[0]), np.asarray(data[0]))
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(data))
+        t_solve = _timeit(solve_repair)
+        code.repair.decode_cache.clear()
+        t0 = time.perf_counter()
+        solve_repair().block_until_ready()
+        t_solve_cold = time.perf_counter() - t0
 
         emb = embedded_repair_cost(k, block_symbols)
         slv = solve_based_msr_repair_cost(k, block_symbols)
         rows.append({
             "k": k, "n": n, "block_symbols": block_symbols,
-            "t_embedded_s": round(t_emb, 4),
+            "gamma_mb": round(gamma_mb, 2),
+            "t_embedded_s": round(t_fused, 4),
+            "t_embedded_unfused_s": round(t_unfused, 4),
+            "t_batch_all_n_s": round(t_batch, 4),
             "t_solve_based_s": round(t_solve, 4),
-            "speedup": round(t_solve / max(t_emb, 1e-9), 2),
+            "t_solve_based_cold_s": round(t_solve_cold, 4),
+            "embedded_mbps": round(gamma_mb / max(t_fused, 1e-9), 1),
+            "embedded_unfused_mbps": round(gamma_mb / max(t_unfused, 1e-9), 1),
+            "batch_mbps": round(n * gamma_mb / max(t_batch, 1e-9), 1),
+            "speedup_fused_vs_unfused": round(t_unfused / max(t_fused, 1e-9), 2),
+            "speedup": round(t_solve / max(t_fused, 1e-9), 2),
             "ops_embedded_stream": emb.stream_ops,
             "ops_solve_stream": slv.stream_ops + slv.helper_combine_ops,
             "coeff_solve_ops_embedded": emb.coefficient_solve_ops,
@@ -60,8 +147,10 @@ def run(ks=(2, 4, 8), block_symbols: int = 1 << 18, quiet=False):
         })
         if not quiet:
             r = rows[-1]
-            print(f"[regen] k={k:3d}: embedded {r['t_embedded_s']}s vs "
-                  f"solve-based {r['t_solve_based_s']}s  (x{r['speedup']})  "
+            print(f"[regen] k={k:3d}: fused {r['t_embedded_s']}s "
+                  f"({r['embedded_mbps']} MB/s, {r['speedup_fused_vs_unfused']}x "
+                  f"vs unfused) batch {r['batch_mbps']} MB/s  "
+                  f"solve-based {r['t_solve_based_s']}s (x{r['speedup']})  "
                   f"coeff-ops {r['coeff_solve_ops_embedded']} vs "
                   f"{r['coeff_solve_ops_solve_based']}")
     return rows

@@ -6,15 +6,18 @@ Columns per [n=2k, k]:
   * gamma_ec       — classical erasure coding repair: B (full reconstruction)
   * gamma_repl     — replication: B (read one replica ... of the whole file)
   * storage_msr    — per-node alpha = B/k (MSR point) vs replication B
+plus MB/s throughput for the save, the repair (steady-state, second call)
+and the full-step scrub pass (batched engine, DESIGN.md §4).
 Also validates measured ~= bound (the paper's optimality claim).
 """
+import json
+import pathlib
 import tempfile
 import time
 
 import numpy as np
 
-from repro.core import gf
-from repro.core.baselines import ReplicationScheme, RSCode
+from repro.core.baselines import ReplicationScheme
 from repro.core.circulant import CodeSpec
 from repro.checkpoint.msr_checkpoint import MSRCheckpointer
 
@@ -36,14 +39,18 @@ def run(file_bytes: int = 1 << 20, ks=(2, 3, 4, 8), quiet=False):
             t0 = time.perf_counter()
             ck.save(0, state)
             t_enc = time.perf_counter() - t0
+            measured = ck.repair_node(0, node=1)   # warm-up: compile + touch
             t0 = time.perf_counter()
             measured = ck.repair_node(0, node=1)
             t_rep = time.perf_counter() - t0
-            # B in stored bytes = n * S (packed ~1 B/symbol)
-            import json, pathlib
-            man = json.loads((pathlib.Path(d) / "step_000000" / "manifest.json").read_text())
-            import json as _j
-            tree = _j.loads(man["tree"])
+            ck.scrub(0)                        # warm-up: compile batch kernel
+            t0 = time.perf_counter()
+            scrub = ck.scrub(0)
+            t_scrub = time.perf_counter() - t0
+            assert scrub.clean, scrub
+            man = json.loads((pathlib.Path(d) / "step_000000" /
+                              "manifest.json").read_text())
+            tree = json.loads(man["tree"])
             s_block = tree["block_symbols"]
         b = 2 * k * s_block
         gamma_eq7 = (k + 1) * b // (2 * k)
@@ -60,12 +67,17 @@ def run(file_bytes: int = 1 << 20, ks=(2, 3, 4, 8), quiet=False):
             "alpha_repl": b,
             "encode_s": round(t_enc, 4),
             "repair_s": round(t_rep, 4),
+            "scrub_s": round(t_scrub, 4),
+            "save_mbps": round(b / 2**20 / max(t_enc, 1e-9), 1),
+            "repair_mbps": round(measured / 2**20 / max(t_rep, 1e-9), 1),
+            "scrub_mbps": round(scrub.bytes_read / 2**20 / max(t_scrub, 1e-9), 1),
         })
         if not quiet:
             r = rows[-1]
             print(f"[repair] k={k:3d} n={2*k:3d}  gamma={r['gamma_msr_measured']:>10d}B "
                   f"bound={r['gamma_eq7']:>10d}B (x{r['gamma_ratio']:.3f})  "
-                  f"EC={r['gamma_ec']:>10d}B  saving={r['saving_vs_ec']:.1%}")
+                  f"EC={r['gamma_ec']:>10d}B  saving={r['saving_vs_ec']:.1%}  "
+                  f"repair {r['repair_mbps']} MB/s  scrub {r['scrub_mbps']} MB/s")
     return rows
 
 

@@ -1,9 +1,11 @@
-"""Benchmark harness: one module per paper table/figure (DESIGN.md §6)
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §7)
 plus the roofline report over the dry-run artifacts.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--quiet]
 
-Prints ``name,us_per_call,derived`` CSV rows at the end.
+Emits the repo-root perf-trajectory files BENCH_encode.json,
+BENCH_checkpoint.json and BENCH_repair.json, and prints
+``name,us_per_call,derived`` CSV rows at the end.
 """
 import argparse
 import json
@@ -24,23 +26,48 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-row prints (CI smoke mode)")
     args = ap.parse_args()
+    quiet = args.quiet
     OUT.mkdir(exist_ok=True)
     csv_rows = [("name", "us_per_call", "derived")]
 
+    # the regeneration timing section runs FIRST: its fused-vs-unfused
+    # ratio is the most contention-sensitive number in the suite (the fused
+    # path parallelizes, the unfused path is dispatch-bound), so it gets
+    # the freshest CPU budget on throttled/burstable hosts
+    print("== paper §IV: regeneration complexity =====================")
+    # the 45 s sampling window spreads the paired fused/unfused rounds
+    # across shared-host capacity oscillations (see _timeit_pair)
+    rows_regen = bench_regeneration.run(
+        ks=(2, 4) if args.fast else (2, 4, 8),
+        block_symbols=(1 << 14 if args.fast else 1 << 18), quiet=quiet,
+        sample_window_s=(0.0 if args.fast else 45.0))
+    (OUT / "regeneration.json").write_text(json.dumps(rows_regen, indent=1))
+    csv_rows.append(("regeneration",
+                     f"{rows_regen[-1]['t_embedded_s']*1e6:.0f}",
+                     f"fused_vs_unfused={rows_regen[-1]['speedup_fused_vs_unfused']}x;"
+                     f"speedup_vs_solve={rows_regen[-1]['speedup']}"))
+
     print("== paper §IV eq.(7): repair bandwidth =====================")
     t0 = time.perf_counter()
-    rows = bench_repair_bandwidth.run(
+    rows_bw = bench_repair_bandwidth.run(
         file_bytes=(1 << 18 if args.fast else 1 << 20),
-        ks=(2, 3, 4) if args.fast else (2, 3, 4, 8))
-    (OUT / "repair_bandwidth.json").write_text(json.dumps(rows, indent=1))
+        ks=(2, 3, 4) if args.fast else (2, 3, 4, 8), quiet=quiet)
+    (OUT / "repair_bandwidth.json").write_text(json.dumps(rows_bw, indent=1))
+    # repair-side perf trajectory, tracked like encode/checkpoint: the
+    # fused-engine regeneration rows plus the measured repair bandwidth
+    (REPO_ROOT / "BENCH_repair.json").write_text(json.dumps(
+        {"regeneration": rows_regen, "repair_bandwidth": rows_bw}, indent=1))
     csv_rows.append(("repair_bandwidth",
-                     f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
-                     f"saving_vs_ec={rows[-1]['saving_vs_ec']:.3f}"))
+                     f"{(time.perf_counter()-t0)*1e6/len(rows_bw):.0f}",
+                     f"saving_vs_ec={rows_bw[-1]['saving_vs_ec']:.3f}"))
 
     print("== paper §IV-A: field size requirement ====================")
     t0 = time.perf_counter()
-    rows = bench_field_size.run(ks=(2, 3) if args.fast else (2, 3, 4, 5))
+    rows = bench_field_size.run(ks=(2, 3) if args.fast else (2, 3, 4, 5),
+                                quiet=quiet)
     if not args.fast:
         scaling = bench_field_size.scaling_limit()
         (OUT / "field_scaling.json").write_text(json.dumps(scaling, indent=1))
@@ -49,23 +76,13 @@ def main() -> None:
                      f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
                      f"min_field_k2={rows[0]['min_field']}"))
 
-    print("== paper §IV: regeneration complexity =====================")
-    t0 = time.perf_counter()
-    rows = bench_regeneration.run(
-        ks=(2, 4) if args.fast else (2, 4, 8),
-        block_symbols=(1 << 14 if args.fast else 1 << 18))
-    (OUT / "regeneration.json").write_text(json.dumps(rows, indent=1))
-    csv_rows.append(("regeneration",
-                     f"{rows[-1]['t_embedded_s']*1e6:.0f}",
-                     f"speedup_vs_solve={rows[-1]['speedup']}"))
-
     print("== paper §IV: encode throughput (dispatch backends) =======")
     t0 = time.perf_counter()
     # stream >= 2^14 symbols: below that, per-call dispatch overhead
     # dominates and the MB/s trajectory numbers are meaningless
     rows = bench_encode_throughput.run(
         ks=(2, 8),
-        stream_symbols=(1 << 14 if args.fast else 1 << 16))
+        stream_symbols=(1 << 14 if args.fast else 1 << 16), quiet=quiet)
     (OUT / "encode_throughput.json").write_text(json.dumps(rows, indent=1))
     (REPO_ROOT / "BENCH_encode.json").write_text(json.dumps(rows, indent=1))
     csv_rows.append(("encode_throughput",
@@ -77,7 +94,7 @@ def main() -> None:
     t0 = time.perf_counter()
     rows = bench_checkpoint.run(
         ks=(4,) if args.fast else (4, 8),
-        state_mb=(1.0 if args.fast else 4.0))
+        state_mb=(1.0 if args.fast else 4.0), quiet=quiet)
     (OUT / "checkpoint.json").write_text(json.dumps(rows, indent=1))
     (REPO_ROOT / "BENCH_checkpoint.json").write_text(json.dumps(rows, indent=1))
     csv_rows.append(("checkpoint",
@@ -87,7 +104,7 @@ def main() -> None:
 
     print("== roofline (dry-run artifacts) ===========================")
     t0 = time.perf_counter()
-    rows = roofline.run()
+    rows = roofline.run(quiet=quiet)
     if rows:
         (OUT / "roofline.json").write_text(json.dumps(rows, indent=1))
         worst = min(rows, key=lambda r: r["projected_mfu"])

@@ -20,6 +20,13 @@ Restore paths (all byte-metered, verified by benchmarks):
   * <= k failures ... as long as k nodes survive: any-k reconstruction
     (2 blocks from each of k nodes = B bytes + a GF solve);
   * > n-k failures: unrecoverable (raises).
+
+Restore is symmetric with the streaming save (DESIGN.md §4): node reads go
+through a thread pool, the regenerate/reconstruct decode runs as a depth-2
+stream-tile pipeline (tiles bounded by ``save_tile_symbols``) through the
+fused repair engine, multi-failure repair produces all lost pairs from one
+decode matmul, and ``scrub(step)`` is a degraded-read pass that re-derives
+every node pair through the batched engine and flags inconsistencies.
 """
 from __future__ import annotations
 
@@ -42,6 +49,22 @@ from repro.core.msr import DoubleCirculantMSR
 SAVE_TILE_SYMBOLS = 1 << 20
 
 
+def _stream_tiles(s_total: int, tile: int, compute, consume) -> None:
+    """Depth-2 stream-tile pipeline (DESIGN.md §3.3/§4): dispatch tile t+1
+    to the device before consuming tile t's result on the host, so at most
+    two tiles are in flight.  ``compute(sl)`` returns the device result for
+    stream slice ``sl``; ``consume(sl, result)`` lands it host-side."""
+    pending = None
+    for s0 in range(0, s_total, tile):
+        sl = slice(s0, min(s0 + tile, s_total))
+        part = compute(sl)
+        if pending is not None:
+            consume(*pending)
+        pending = (sl, part)
+    if pending is not None:
+        consume(*pending)
+
+
 @dataclasses.dataclass
 class RestoreReport:
     step: int
@@ -50,6 +73,26 @@ class RestoreReport:
     bytes_read: int
     bytes_total_stored: int
     repaired_nodes: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class ScrubReport:
+    """Result of a degraded-read verification pass (DESIGN.md §4).
+
+    A node appears in ``mismatched_nodes`` when its re-derived pair
+    (regenerated from r_{i-1} + the next k data blocks through the batched
+    repair engine) disagrees with the stored pair.  A single corrupt block
+    flags its own node and can flag the neighbours whose regeneration
+    consumed it — the flagged set localizes, not convicts.
+    """
+    step: int
+    nodes_checked: int
+    mismatched_nodes: tuple[int, ...]
+    bytes_read: int
+
+    @property
+    def clean(self) -> bool:
+        return not self.mismatched_nodes
 
 
 class MSRCheckpointer:
@@ -118,14 +161,10 @@ class MSRCheckpointer:
                     blocks[i - 1].astype(np.uint8)))
             # depth-2 pipeline: force tile t only after dispatching t+1
             red = np.empty((n, s_total), np.int32)
-            pending = None                  # (host slice, device tile)
-            for s0 in range(0, s_total, tile):
-                part = self.code.encode(blocks[:, s0:s0 + tile])
-                if pending is not None:
-                    red[:, pending[0]] = np.asarray(pending[1])
-                pending = (slice(s0, min(s0 + tile, s_total)), part)
-            if pending is not None:
-                red[:, pending[0]] = np.asarray(pending[1])
+            _stream_tiles(s_total, tile,
+                          lambda sl: self.code.encode(blocks[:, sl]),
+                          lambda sl, part: red.__setitem__(
+                              (slice(None), sl), np.asarray(part)))
             # vectorized pack over all nodes at once (no per-node loop)
             low, his = gf.pack257_rows(red)
             for i in range(1, n + 1):
@@ -150,13 +189,58 @@ class MSRCheckpointer:
         for s in steps[: -self.keep_last]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
+    # ------------------------------------------------------------- block I/O
+    def _read_block(self, path: pathlib.Path) -> tuple[np.ndarray, int]:
+        """One node file -> (int32 symbol block, bytes read).
+
+        ``.npz`` is a packed redundancy block (``gf.pack257``), anything
+        else a raw systematic byte block.  Shared by restore, repair_node
+        and scrub so the byte meters can't drift apart.
+        """
+        if path.suffix == ".npz":
+            z = np.load(path)
+            low, hi = z["low"], z["hi"]
+            return gf.unpack257(low, hi), low.nbytes + hi.nbytes
+        arr = np.load(path)
+        return arr.astype(np.int32), arr.nbytes
+
+    # ---------------------------------------------------- tiled decode stages
+    def _regenerate_tiled(self, node: int, r_prev: np.ndarray,
+                          next_data: np.ndarray) -> np.ndarray:
+        """Depth-2 stream-tile pipeline over the fused regenerate matmul:
+        tile t+1 is dispatched while tile t's (2, T) result lands in the
+        preallocated host pair buffer (mirrors the streaming save)."""
+        out = np.empty((2, r_prev.shape[-1]), np.int32)
+        _stream_tiles(r_prev.shape[-1], self.save_tile_symbols,
+                      lambda sl: self.code.repair.regenerate_stacked(
+                          node, r_prev[sl], next_data[:, sl]),
+                      lambda sl, part: out.__setitem__(
+                          (slice(None), sl), np.asarray(part)))
+        return out
+
+    def _decode_tiled(self, mat: np.ndarray, downloads: np.ndarray) -> np.ndarray:
+        """Depth-2 stream-tile pipeline for (mat @ downloads) mod p — the
+        any-k decode (and, with repair rows stacked, the lost-pair
+        re-encode) through the dispatched backend."""
+        out = np.empty((mat.shape[0], downloads.shape[-1]), np.int32)
+        _stream_tiles(downloads.shape[-1], self.save_tile_symbols,
+                      lambda sl: self.code.repair.apply(mat, downloads[:, sl]),
+                      lambda sl, part: out.__setitem__(
+                          (slice(None), sl), np.asarray(part)))
+        return out
+
     # ---------------------------------------------------------------- restore
     def restore(self, template: Any, step: Optional[int] = None,
                 failed_nodes: Sequence[int] = (), *, repair: bool = True,
                 ) -> tuple[Any, RestoreReport]:
         """Rebuild the pytree.  `failed_nodes` simulates dead hosts (their
         files are treated as unreadable; with repair=True the missing pair is
-        rebuilt and re-written — the newcomer protocol)."""
+        rebuilt and re-written — the newcomer protocol).
+
+        Symmetric with the streaming save: node reads overlap through the
+        thread pool, and the regenerate/reconstruct compute runs as a
+        depth-2 stream-tile pipeline through the fused repair engine.
+        """
         if step is None:
             step = self.steps()[-1]
         d = self._step_dir(step)
@@ -171,57 +255,73 @@ class MSRCheckpointer:
         bytes_read = 0
         repaired: list[int] = []
 
-        def read(path: pathlib.Path) -> np.ndarray:
-            nonlocal bytes_read
-            if path.suffix == ".npz":                 # packed redundancy
-                z = np.load(path)
-                low, hi = z["low"], z["hi"]
-                bytes_read += low.nbytes + hi.nbytes
-                return gf.unpack257(low, hi)
-            arr = np.load(path)
-            bytes_read += arr.nbytes
-            return arr.astype(np.int32)
+        with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
+            def read_async(path: pathlib.Path) -> Future:
+                return ex.submit(self._read_block, path)
 
-        if not failed:
-            data = np.stack([read(self._node_files(step, i)[0])
-                             for i in range(1, n + 1)])
-            path = "systematic"
-        elif len(failed) == 1 and repair:
-            f = failed[0]
-            plan = self.code.repair_plan(f)
-            r_prev = read(self._node_files(step, plan.prev_node)[1])
-            next_data = np.stack([read(self._node_files(step, j)[0])
-                                  for j in plan.next_nodes])
-            a_new, r_new = self.code.regenerate(f, r_prev, next_data)
-            a_new, r_new = np.asarray(a_new), np.asarray(r_new)
-            af, rf = self._node_files(step, f)
-            low, hi = gf.pack257(r_new)
-            self._write_node_pair(af, rf, a_new, low, hi)
-            repaired.append(f)
-            # assemble full data: the k helpers' blocks are already in hand
-            data = np.zeros((n, tspec.block_symbols), np.int32)
-            have = dict(zip(plan.data_indices, next_data))
-            have[f - 1] = a_new
-            for i in range(1, n + 1):
-                idx = i - 1
-                if idx in have:
-                    data[idx] = have[idx]
+            def result(fut: Future) -> np.ndarray:
+                nonlocal bytes_read
+                arr, nbytes = fut.result()
+                bytes_read += nbytes
+                return arr
+
+            if not failed:
+                futs = [read_async(self._node_files(step, i)[0])
+                        for i in range(1, n + 1)]
+                data = np.stack([result(f) for f in futs])
+                path = "systematic"
+            elif len(failed) == 1 and repair:
+                f = failed[0]
+                plan = self.code.repair_plan(f)
+                fut_prev = read_async(self._node_files(step, plan.prev_node)[1])
+                futs_help = [read_async(self._node_files(step, j)[0])
+                             for j in plan.next_nodes]
+                # the non-helper blocks are needed for the full restore
+                # anyway — their reads overlap the regenerate compute
+                rest = [i for i in range(1, n + 1)
+                        if i != f and (i - 1) not in plan.data_indices]
+                futs_rest = {i: read_async(self._node_files(step, i)[0])
+                             for i in rest}
+                r_prev = result(fut_prev)
+                next_data = np.stack([result(x) for x in futs_help])
+                pair = self._regenerate_tiled(f, r_prev, next_data)
+                a_new, r_new = pair[0], pair[1]
+                af, rf = self._node_files(step, f)
+                low, hi = gf.pack257(r_new)
+                write = ex.submit(self._write_node_pair, af, rf, a_new, low, hi)
+                repaired.append(f)
+                data = np.zeros((n, tspec.block_symbols), np.int32)
+                have = dict(zip(plan.data_indices, next_data))
+                have[f - 1] = a_new
+                for i in range(1, n + 1):
+                    idx = i - 1
+                    data[idx] = have[idx] if idx in have else result(futs_rest[i])
+                write.result()
+                path = "regenerate"
+            else:
+                use = alive[:k]                      # sorted by construction
+                futs = [read_async(self._node_files(step, i)[0]) for i in use]
+                futs += [read_async(self._node_files(step, i)[1]) for i in use]
+                downloads = np.stack([result(x) for x in futs])   # (2k, S)
+                if repair and failed:
+                    # one decode matmul yields the data AND every lost pair
+                    mat = self.code.repair.decode_repair_matrix(
+                        tuple(use), failed)
+                    data, red_f = self.code.repair.split_decode_output(
+                        self._decode_tiled(mat, downloads))
+                    writes = []
+                    for j, fl in enumerate(failed):
+                        af, rf = self._node_files(step, fl)
+                        low, hi = gf.pack257(red_f[j])
+                        writes.append(ex.submit(self._write_node_pair, af, rf,
+                                                data[fl - 1], low, hi))
+                        repaired.append(fl)
+                    for w in writes:
+                        w.result()
                 else:
-                    data[idx] = read(self._node_files(step, i)[0])
-            path = "regenerate"
-        else:
-            use = alive[:k]
-            data_blocks = np.stack([read(self._node_files(step, i)[0]) for i in use])
-            red_blocks = np.stack([read(self._node_files(step, i)[1]) for i in use])
-            data = np.asarray(self.code.reconstruct(use, data_blocks, red_blocks))
-            if repair:
-                red_all = np.asarray(self.code.encode(data))
-                for f in failed:
-                    af, rf = self._node_files(step, f)
-                    low, hi = gf.pack257(red_all[f - 1])
-                    self._write_node_pair(af, rf, data[f - 1], low, hi)
-                    repaired.append(f)
-            path = "reconstruct"
+                    mat = self.code.repair.decode_matrix(tuple(use))
+                    data = self._decode_tiled(mat, downloads)
+                path = "reconstruct"
 
         treedef = jax.tree_util.tree_structure(template)
         state = placement.blocks_to_pytree(data.astype(np.int32), treedef, tspec)
@@ -248,25 +348,72 @@ class MSRCheckpointer:
 
     def repair_node(self, step: int, node: int) -> int:
         """The newcomer protocol in isolation: rebuild node's (a, r) pair
-        from d = k+1 reads.  Returns bytes read (the measured gamma)."""
+        from d = k+1 reads (thread-pooled, fused tiled regenerate).
+        Returns bytes read (the measured gamma)."""
         plan = self.code.repair_plan(node)
         bytes_read = 0
-
-        def read(path):
-            nonlocal bytes_read
-            if path.suffix == ".npz":
-                z = np.load(path)
-                bytes_read += z["low"].nbytes + z["hi"].nbytes
-                return gf.unpack257(z["low"], z["hi"])
-            arr = np.load(path)
-            bytes_read += arr.nbytes
-            return arr.astype(np.int32)
-
-        r_prev = read(self._node_files(step, plan.prev_node)[1])
-        next_data = np.stack([read(self._node_files(step, j)[0])
-                              for j in plan.next_nodes])
-        a_new, r_new = self.code.regenerate(node, r_prev, next_data)
+        with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
+            fut_prev = ex.submit(self._read_block,
+                                 self._node_files(step, plan.prev_node)[1])
+            futs = [ex.submit(self._read_block, self._node_files(step, j)[0])
+                    for j in plan.next_nodes]
+            r_prev, nbytes = fut_prev.result()
+            bytes_read += nbytes
+            helpers = []
+            for f in futs:
+                arr, nbytes = f.result()
+                bytes_read += nbytes
+                helpers.append(arr)
+        pair = self._regenerate_tiled(node, r_prev, np.stack(helpers))
         af, rf = self._node_files(step, node)
-        low, hi = gf.pack257(np.asarray(r_new))
-        self._write_node_pair(af, rf, np.asarray(a_new), low, hi)
+        low, hi = gf.pack257(pair[1])
+        self._write_node_pair(af, rf, pair[0], low, hi)
         return bytes_read
+
+    # ------------------------------------------------------------------ scrub
+    def scrub(self, step: int) -> ScrubReport:
+        """Degraded-read verification pass over one checkpoint step.
+
+        Reads EVERY node pair and re-derives each one from its d = k+1
+        helpers through the batched fused engine (stream-tiled), comparing
+        bit-exactly against what is stored.  Run it after suspected partial
+        writes or on cold archives before trusting a restore — a clean
+        scrub certifies that every single-node repair of this step would
+        succeed bit-exactly.  Cost: 2B bytes read + n fused tile matmuls;
+        see DESIGN.md §4 for when to schedule it.
+        """
+        n, k = self.spec.n, self.spec.k
+        bytes_read = 0
+        with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
+            futs_a = [ex.submit(self._read_block, self._node_files(step, i)[0])
+                      for i in range(1, n + 1)]
+            futs_r = [ex.submit(self._read_block, self._node_files(step, i)[1])
+                      for i in range(1, n + 1)]
+            rows_a, rows_r = [], []
+            for futs, rows in ((futs_a, rows_a), (futs_r, rows_r)):
+                for f in futs:
+                    arr, nbytes = f.result()
+                    bytes_read += nbytes
+                    rows.append(arr)
+        data, red = np.stack(rows_a), np.stack(rows_r)
+        nodes = list(range(1, n + 1))
+        prev = np.asarray([self.code.repair_plan(i).prev_node - 1
+                           for i in nodes])
+        helper_idx = np.asarray([self.code.repair_plan(i).data_indices
+                                 for i in nodes])                  # (n, k)
+        mismatched: set[int] = set()
+
+        def flag(sl: slice, out) -> None:
+            out = np.asarray(out)
+            bad = ((out[:, 0] != data[:, sl]).any(axis=1)
+                   | (out[:, 1] != red[:, sl]).any(axis=1))
+            mismatched.update(int(x) + 1 for x in np.nonzero(bad)[0])
+
+        # depth-2: compare tile t while t+1 computes
+        _stream_tiles(data.shape[1], self.save_tile_symbols,
+                      lambda sl: self.code.regenerate_batch(
+                          nodes, red[:, sl][prev], data[:, sl][helper_idx]),
+                      flag)
+        return ScrubReport(step=step, nodes_checked=n,
+                           mismatched_nodes=tuple(sorted(mismatched)),
+                           bytes_read=bytes_read)

@@ -82,7 +82,7 @@ class ModelConfig:
         return self.n_layers // cl, self.n_layers % cl
 
     def is_subquadratic(self) -> bool:
-        """Eligible for long_500k (DESIGN.md §4): no block attends globally,
+        """Eligible for long_500k (DESIGN.md §5): no block attends globally,
         or global blocks are a small minority of a local/recurrent design."""
         kinds = set(self.expanded_pattern())
         if kinds <= {"la", "rg", "ml", "sl"}:

@@ -36,7 +36,7 @@ def get_shape(name: str) -> ShapeConfig:
 def cells() -> list[tuple[str, str]]:
     """All assigned (arch x shape) dry-run cells, with skip rules applied.
 
-    Skips (recorded in DESIGN.md §4): long_500k for pure-full-attention archs.
+    Skips (recorded in DESIGN.md §5): long_500k for pure-full-attention archs.
     Whisper has a decoder, so decode shapes run (backbone exercise).
     """
     out = []
@@ -55,5 +55,5 @@ def skipped_cells() -> list[tuple[str, str, str]]:
         cfg = get_config(arch)
         if not cfg.is_subquadratic():
             out.append((arch, "long_500k",
-                        "pure full attention — sub-quadratic required (DESIGN.md §4)"))
+                        "pure full attention — sub-quadratic required (DESIGN.md §5)"))
     return out

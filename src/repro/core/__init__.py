@@ -4,6 +4,7 @@ Gastón & Pujol (2010): systematic [n=2k, k] Minimum Storage Regenerating
 codes with d = k+1 determined helpers and precalculated (embedded)
 coefficients, built from a double circulant generator A = (I | M).
 """
-from . import gf, circulant, msr, baselines, placement  # noqa: F401
+from . import gf, circulant, msr, baselines, placement, repair  # noqa: F401
 from .circulant import CodeSpec, check_condition6, find_coefficients, min_field_size  # noqa: F401
 from .msr import DoubleCirculantMSR, RepairPlan, encode_file, reconstruct_file  # noqa: F401
+from .repair import DecodeInverseCache, RepairEngine, build_repair_matrix  # noqa: F401

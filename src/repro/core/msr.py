@@ -27,6 +27,7 @@ import numpy as np
 
 from . import gf
 from .circulant import CodeSpec, redundancy_support
+from .repair import RepairEngine
 
 MatmulFn = Callable[..., jnp.ndarray]  # (A, B, p) -> (A @ B) mod p
 
@@ -57,7 +58,8 @@ class DoubleCirculantMSR:
     """
 
     def __init__(self, spec: CodeSpec, matmul: MatmulFn | None = None,
-                 backend: str | None = None):
+                 backend: str | None = None,
+                 inverse_cache_size: int = 128):
         self.spec = spec
         self.k, self.n, self.p = spec.k, spec.n, spec.p
         self.c = np.asarray(spec.c, dtype=np.int32)
@@ -69,12 +71,20 @@ class DoubleCirculantMSR:
             self.backend_name = be.name
             self._matmul = be.msr_matmul()
             self._circulant = be.circulant_encode
+            engine_mm = be.matmul            # module-level singleton: the
+                                             # engine's jit cache is shared
         else:
             self.backend_name = "custom"
             self._matmul = matmul
             self._circulant = None
+            engine_mm = matmul
         self._m = spec.matrix_m()            # (n, n) M[j, i] = coef of a_j in r_{i+1}
         self._mt = np.ascontiguousarray(self._m.T)  # (n, n): r = M^T @ a
+        # fused decode-side engine (DESIGN.md §4): repair matrix precomputed
+        # here, reconstruction inverses LRU-cached across calls
+        self.repair = RepairEngine(spec, engine_mm,
+                                   jittable=not self._custom_matmul,
+                                   inverse_cache_size=inverse_cache_size)
 
     # ---------------------------------------------------------------- encode
     def encode(self, data: jnp.ndarray) -> jnp.ndarray:
@@ -108,22 +118,22 @@ class DoubleCirculantMSR:
         Returns the full (n, S) data block matrix.
 
         Downloads 2k blocks of S symbols = B symbols total: gamma = B.
+
+        The system inverse is LRU-cached by the sorted node subset
+        (``self.repair.decode_cache``): repeated reconstructions — restore
+        loops, scrubs — cost one ``gf.gauss_inverse`` per subset, not per
+        call, and any ordering of the same k nodes shares the entry.
         """
-        node_ids = list(node_ids)
-        if len(set(node_ids)) != self.k:
-            raise ValueError(f"need k={self.k} distinct nodes, got {node_ids}")
-        a_cols = [i - 1 for i in node_ids]              # I columns
-        r_cols = [i - 1 for i in node_ids]              # M columns
-        # System: stack of rows [I^s | M^s]^T applied to a  ==  downloads
-        sys_mat = np.concatenate(
-            [np.eye(self.n, dtype=np.int64)[:, a_cols], self._m[:, r_cols]],
-            axis=1,
-        ).T % self.p                                     # (2k, n) = (n, n)
-        downloads = jnp.concatenate(
-            [jnp.asarray(data_blocks, jnp.int32), jnp.asarray(red_blocks, jnp.int32)], axis=0
-        )                                                # (2k, S)
-        inv = gf.gauss_inverse(sys_mat, self.p)          # host-side tiny solve
-        return self._matmul(jnp.asarray(inv), downloads, self.p)
+        return self.repair.reconstruct(node_ids, data_blocks, red_blocks)
+
+    def reconstruct_with_repair(self, node_ids: Sequence[int], data_blocks,
+                                red_blocks, failed: Sequence[int],
+                                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Multi-failure repair: full data AND every failed node's
+        redundancy block from ONE decode matmul (DESIGN.md §4).
+        ``node_ids`` must be sorted."""
+        return self.repair.reconstruct_with_repair(node_ids, data_blocks,
+                                                   red_blocks, failed)
 
     def systematic_read(self, data: jnp.ndarray) -> jnp.ndarray:
         """Systematic reconstruction (paper §III-B): connect to all n nodes,
@@ -153,7 +163,28 @@ class DoubleCirculantMSR:
 
         Download = (k+1) * S symbols = (k+1) B / (2k): eq. (7), the MSR
         minimum for d = k+1.
+
+        Fused path (DESIGN.md §4): the scalar solve, the correction and the
+        re-encode fold into ONE (2, k+1) repair-matrix matmul over the
+        stacked helpers — ``regenerate_reference`` keeps the unfused
+        three-round schedule as the bit-exactness oracle.
         """
+        return self.repair.regenerate(i, r_prev, next_data)
+
+    def regenerate_batch(self, nodes: Sequence[int], r_prevs, next_data, *,
+                         tile_symbols: int | None = None) -> jnp.ndarray:
+        """Batched fused regeneration (vmapped over failed nodes, stream
+        axis tiled): (F, S) r_prevs + (F, k, S) helpers -> (F, 2, S)
+        [a_lost; r_new] stacks.  See RepairEngine.regenerate_batch."""
+        return self.repair.regenerate_batch(nodes, r_prevs, next_data,
+                                            tile_symbols=tile_symbols)
+
+    def regenerate_reference(self, i: int, r_prev: jnp.ndarray,
+                             next_data: jnp.ndarray,
+                             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """The unfused pre-engine newcomer schedule: two small matmuls plus
+        host-side elementwise correction.  Kept as the reference the fused
+        single-matmul path is verified (and benchmarked) against."""
         k, n, p = self.k, self.n, self.p
         r_prev = jnp.asarray(r_prev, jnp.int32)
         next_data = jnp.asarray(next_data, jnp.int32)

@@ -1,0 +1,325 @@
+"""Fused batched repair engine (DESIGN.md §4).
+
+The decode-side counterpart of the encode dispatch layer: everything a
+repairing / reconstructing reader does is reduced to **one GF matmul per
+request** through the dispatched backend, with all tiny host-side linear
+algebra precomputed (repair matrices) or cached (reconstruction inverses).
+
+Regeneration (paper §III-C).  The reference path solves the newcomer's
+scalar equation in three device rounds: a (1, k-1) matmul for the partial
+sum, an elementwise ``(r_prev - partial) * c_k^{-1} mod p`` correction, and
+a second (1, k) matmul for the re-encoded redundancy.  But the whole
+newcomer computation is *linear* in the d = k+1 downloaded helper blocks,
+so it folds into a single (2, k+1) **repair matrix** R applied to the
+stacked helper matrix H = [r_{i-1}; a_{i+1}; ...; a_{i+k}]:
+
+    [a_lost; r_new] = R @ H  mod p,          R =
+      row 0 (decode):    [c_k^{-1},  -c_k^{-1} c_{k-1}, ..., -c_k^{-1} c_1, 0]
+      row 1 (re-encode): [0,          c_k,  c_{k-1},     ...,          c_1]
+
+Because the construction is circulant, R is the SAME for every node v_i —
+helper blocks are always indexed relative to i (the embedded property made
+compute-static: no per-node matrices, no coefficient discovery, one fused
+matmul reusing the backend's lazy mod-folding envelope).
+
+Reconstruction (paper §III-B).  The 2k x 2k system matrix depends only on
+WHICH k nodes are read, not the read order, so inverses are cached in an
+LRU keyed by the sorted node subset — there are only C(2k, k) of them and
+restore loops / scrubs hit the same subsets over and over.  Multi-failure
+repair stacks the re-encode rows of the failed nodes under the inverse so
+full data AND every lost redundancy block come out of one decode matmul.
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gf
+from .circulant import CodeSpec
+
+MatmulFn = Callable[..., jnp.ndarray]  # (A, B, p) -> (A @ B) mod p
+
+
+def build_repair_matrix(spec: CodeSpec) -> np.ndarray:
+    """The (2, k+1) fused repair matrix R (one per code, see module doc).
+
+    Column 0 multiplies r_{i-1}; column 1+j multiplies the j-th helper data
+    block a_{(i+j) mod n} (plan order, j = 0..k-1).  Row 0 recovers the
+    lost data block a_{i-1}, row 1 re-encodes the lost redundancy r_i.
+    ``repair_matrix(i)`` below returns this same R for every i: the
+    circulant structure makes the repair matrix node-invariant.
+    """
+    k, p = spec.k, spec.p
+    c = np.asarray(spec.c, dtype=np.int64) % p
+    ck_inv = pow(int(c[-1]), p - 2, p)
+    r = np.zeros((2, k + 1), dtype=np.int64)
+    # r_{i-1} = c_k a_{i-1} + sum_{u=1..k-1} c_u a_{(i-1+k-u) mod n}; the
+    # u-th term is helper column 1 + (k-u-1), so
+    #   a_{i-1} = c_k^{-1} r_{i-1} - sum_u c_k^{-1} c_u a_{(i-1+k-u)}.
+    r[0, 0] = ck_inv
+    for j in range(k - 1):                      # j = k-u-1  <->  u = k-1-j
+        r[0, 1 + j] = (-ck_inv * c[k - 2 - j]) % p
+    # r_i = sum_{u=1..k} c_u a_{(i-1+k+1-u) mod n}: helper column 1 + (k-u).
+    for j in range(k):                          # j = k-u    <->  u = k-j
+        r[1, 1 + j] = c[k - 1 - j]
+    return (r % p).astype(np.int32)
+
+
+# Module-level jitted kernels with the backend matmul as a *static* argument:
+# backend matmuls are module-level singletons, so the jit cache is shared
+# across every engine instance (no per-code recompilation).
+#
+# Algebraically this is R @ [r_prev; next_data]; the r_prev column is peeled
+# out of the dispatched matmul into a row-0 scale-accumulate epilogue (the
+# backend axpy primitive's semantics — R[1, 0] is 0, so only the decode row
+# touches r_prev) because XLA's CPU int32 einsum degrades badly at tiny odd
+# contraction depths and the in-jit stack of the (k+1, S) helper matrix
+# costs a full extra memory pass.  Exactness: the matmul output is < p and
+# the epilogue term is <= (p-1)^2, so the sum stays inside the int32
+# envelope (kernels/envelope.py guarantees (p-1) + (p-1)^2 < 2^31) before
+# the single fold.
+
+@functools.partial(jax.jit, static_argnames=("mm", "p"))
+def _fused_regenerate(mm, rmat, r_prev, next_data, p: int):
+    part = mm(rmat[:, 1:], next_data, p)                 # (2, S), < p
+    return part.at[0].set((part[0] + rmat[0, 0] * r_prev) % p)
+
+
+@functools.partial(jax.jit, static_argnames=("mm", "p"))
+def _fused_regenerate_vmapped(mm, rmat, r_prevs, next_data, p: int):
+    def one(rp, nd):
+        part = mm(rmat[:, 1:], nd, p)
+        return part.at[0].set((part[0] + rmat[0, 0] * rp) % p)
+    return jax.vmap(one)(r_prevs, next_data)             # (F, 2, S)
+
+
+class DecodeCacheInfo(NamedTuple):
+    hits: int
+    misses: int
+    size: int
+    maxsize: int
+
+
+class DecodeInverseCache:
+    """LRU of reconstruction inverses keyed by the sorted k-node subset.
+
+    The any-k system matrix [I^s | M^s]^T is determined by the *set* of
+    nodes read; there are only C(2k, k) subsets (12870 at k = 8) and real
+    restore/scrub traffic reuses a handful, so the O(n^3) host-side
+    ``gf.gauss_inverse`` runs once per subset instead of once per call.
+    """
+
+    def __init__(self, spec: CodeSpec, maxsize: int = 128):
+        self.spec = spec
+        self.k, self.n, self.p = spec.k, spec.n, spec.p
+        self._m = spec.matrix_m()               # (n, n)
+        self.maxsize = max(1, maxsize)
+        self._entries: OrderedDict[tuple[int, ...], np.ndarray] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def system_matrix(self, subset: tuple[int, ...]) -> np.ndarray:
+        """[I columns | M columns]^T for the (sorted) subset — (2k, n)."""
+        cols = [i - 1 for i in subset]
+        return np.concatenate(
+            [np.eye(self.n, dtype=np.int64)[:, cols], self._m[:, cols]],
+            axis=1,
+        ).T % self.p
+
+    def inverse(self, subset: Sequence[int]) -> np.ndarray:
+        """Cached (n, n) inverse of the subset's system matrix."""
+        key = tuple(subset)
+        if sorted(set(key)) != list(key) or len(key) != self.k:
+            raise ValueError(f"need a sorted set of k={self.k} distinct "
+                             f"nodes, got {key}")
+        hit = self._entries.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return hit
+        self.misses += 1
+        inv = gf.gauss_inverse(self.system_matrix(key), self.p)
+        self._entries[key] = inv
+        if len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return inv
+
+    def cache_info(self) -> DecodeCacheInfo:
+        return DecodeCacheInfo(self.hits, self.misses, len(self._entries),
+                               self.maxsize)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+class RepairEngine:
+    """Fused decode-side compute for one code: all repair/reconstruct
+    requests reduce to a single dispatched GF matmul (DESIGN.md §4).
+
+    ``jittable=False`` (custom injected matmuls) keeps every field op
+    routed through the injected function and skips the jit fusion — the
+    helper stack is built eagerly and the single matmul still applies.
+    """
+
+    def __init__(self, spec: CodeSpec, matmul: MatmulFn, *,
+                 jittable: bool = True, inverse_cache_size: int = 128):
+        self.spec = spec
+        self.k, self.n, self.p = spec.k, spec.n, spec.p
+        self._mm = matmul
+        self._jittable = jittable
+        self._mt = np.ascontiguousarray(spec.matrix_m().T)   # (n, n)
+        self._rmat_np = build_repair_matrix(spec)
+        self._rmat = jnp.asarray(self._rmat_np)
+        self.decode_cache = DecodeInverseCache(spec, maxsize=inverse_cache_size)
+        self._batch_vmap_ok = jittable
+
+    # ------------------------------------------------------------ regenerate
+    def repair_matrix(self, i: int | None = None) -> np.ndarray:
+        """R for node v_i — identical for every i (circulant invariance)."""
+        if i is not None and not 1 <= i <= self.n:
+            raise ValueError(f"node {i} out of range 1..{self.n}")
+        return self._rmat_np
+
+    def apply(self, mat, blocks) -> jnp.ndarray:
+        """(mat @ blocks) mod p through the dispatched backend."""
+        return self._mm(jnp.asarray(mat, jnp.int32),
+                        jnp.asarray(blocks, jnp.int32), self.p)
+
+    def regenerate_stacked(self, i: int, r_prev, next_data) -> jnp.ndarray:
+        """Fused newcomer compute: one (2, k+1) repair-matrix application
+        in a single jitted dispatch (matmul + axpy-epilogue, see the
+        kernel comment above; custom matmuls get the literal stacked
+        (2, k+1) @ (k+1, S) product).
+
+        Returns the (2, S) stack [a_{i-1}; r_i] — bit-exactly the lost
+        node's pair (row 0 = data block, row 1 = redundancy block).
+        """
+        r_prev = jnp.asarray(r_prev, jnp.int32)
+        next_data = jnp.asarray(next_data, jnp.int32)
+        if next_data.shape[0] != self.k:
+            raise ValueError(f"expected {self.k} helper data blocks, "
+                             f"got {next_data.shape[0]}")
+        if self._jittable:
+            return _fused_regenerate(self._mm, self._rmat, r_prev,
+                                     next_data, self.p)
+        helpers = jnp.concatenate([r_prev[None, :], next_data], axis=0)
+        return self._mm(self._rmat, helpers, self.p)
+
+    def regenerate(self, i: int, r_prev, next_data) -> tuple[jnp.ndarray, jnp.ndarray]:
+        out = self.regenerate_stacked(i, r_prev, next_data)
+        return out[0], out[1]
+
+    def regenerate_batch(self, nodes: Sequence[int], r_prevs, next_data, *,
+                         tile_symbols: int | None = None) -> jnp.ndarray:
+        """Batched fused regeneration, vmapped over failed nodes.
+
+        r_prevs: (F, S) — r_{i-1} per failed node, plan order.
+        next_data: (F, k, S) — the k helper data blocks per failed node.
+        Returns (F, 2, S): [a_lost; r_new] per node.
+
+        The stream axis is processed in ``tile_symbols`` tiles (bounds the
+        device working set; XLA pipelines the per-tile dispatches).  The
+        node axis is vmapped through the backend matmul; backends whose
+        kernels don't trace under vmap fall back to per-node dispatch.
+        """
+        r_prevs = jnp.asarray(r_prevs, jnp.int32)
+        next_data = jnp.asarray(next_data, jnp.int32)
+        f = len(nodes)
+        if r_prevs.shape[0] != f or next_data.shape[:2] != (f, self.k):
+            raise ValueError(f"helper shapes {r_prevs.shape}/{next_data.shape}"
+                             f" do not match {f} nodes, k={self.k}")
+        s = r_prevs.shape[-1]
+        tile = s if tile_symbols is None else max(1, tile_symbols)
+        parts = []
+        for s0 in range(0, s, tile):
+            parts.append(self._regen_tile_batch(
+                nodes, r_prevs[:, s0:s0 + tile],
+                next_data[:, :, s0:s0 + tile]))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+    def _regen_tile_batch(self, nodes, r_prevs, next_data) -> jnp.ndarray:
+        if self._batch_vmap_ok:
+            try:
+                return _fused_regenerate_vmapped(self._mm, self._rmat,
+                                                 r_prevs, next_data, self.p)
+            except NotImplementedError:   # trace-time: a primitive in the
+                self._batch_vmap_ok = False   # backend has no batching rule
+        return jnp.stack([self.regenerate_stacked(i, r_prevs[f], next_data[f])
+                          for f, i in enumerate(nodes)])
+
+    # ----------------------------------------------------------- reconstruct
+    def decode_matrix(self, subset: Sequence[int]) -> np.ndarray:
+        """Cached (n, n) any-k decode matrix for a sorted node subset."""
+        return self.decode_cache.inverse(tuple(subset))
+
+    def decode_repair_matrix(self, subset: Sequence[int],
+                             failed: Sequence[int]) -> np.ndarray:
+        """(n + F, n) combined decode + re-encode matrix.
+
+        Rows 0..n-1 recover the full data matrix; row n + j re-encodes the
+        redundancy block of ``failed[j]`` (r_f = M^T[f-1] @ data), so a
+        multi-failure repair produces ALL lost pairs from one matmul with
+        the downloads.  The tiny (F, n) @ (n, n) host product rides on the
+        cached inverse.
+        """
+        inv = self.decode_cache.inverse(tuple(subset))
+        rows = np.asarray([self._mt[f - 1] for f in failed], dtype=np.int64)
+        red_rows = (rows @ inv.astype(np.int64)) % self.p
+        return np.concatenate([inv.astype(np.int64), red_rows],
+                              axis=0).astype(np.int32)
+
+    def split_decode_output(self, out):
+        """Split a ``decode_repair_matrix`` product into
+        (data (n, S), failed_red (F, S)) — the single source of truth for
+        the combined matrix's row layout (callers that tile the product
+        themselves must not hand-roll this split)."""
+        return out[: self.n], out[self.n:]
+
+    def reconstruct(self, node_ids: Sequence[int], data_blocks,
+                    red_blocks) -> jnp.ndarray:
+        """Any-k reconstruction via the cached inverse (paper §III-B).
+
+        ``node_ids`` may arrive in any order: rows are permuted to the
+        sorted subset so every ordering of the same k nodes shares one
+        cache entry (and one ``gf.gauss_inverse``).
+        """
+        ids = [int(x) for x in node_ids]
+        if len(set(ids)) != self.k:
+            raise ValueError(f"need k={self.k} distinct nodes, got {ids}")
+        order = sorted(range(self.k), key=lambda j: ids[j])
+        subset = tuple(ids[j] for j in order)
+        data_blocks = jnp.asarray(data_blocks, jnp.int32)
+        red_blocks = jnp.asarray(red_blocks, jnp.int32)
+        if order != list(range(self.k)):
+            sel = jnp.asarray(order)
+            data_blocks, red_blocks = data_blocks[sel], red_blocks[sel]
+        downloads = jnp.concatenate([data_blocks, red_blocks], axis=0)
+        return self.apply(self.decode_matrix(subset), downloads)
+
+    def reconstruct_with_repair(self, node_ids: Sequence[int], data_blocks,
+                                red_blocks, failed: Sequence[int],
+                                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """One-matmul multi-failure repair: full data AND the failed nodes'
+        redundancy blocks from a single decode matmul.
+
+        Returns (data (n, S), failed_red (F, S)) with failed_red rows in
+        ``failed`` order.  ``node_ids`` must be sorted (restore reads the
+        surviving nodes in id order).
+        """
+        subset = tuple(int(x) for x in node_ids)
+        downloads = jnp.concatenate([jnp.asarray(data_blocks, jnp.int32),
+                                     jnp.asarray(red_blocks, jnp.int32)],
+                                    axis=0)
+        mat = self.decode_repair_matrix(subset, failed)
+        return self.split_decode_output(self.apply(mat, downloads))
+
+
+__all__ = ["RepairEngine", "DecodeInverseCache", "DecodeCacheInfo",
+           "build_repair_matrix"]

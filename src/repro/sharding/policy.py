@@ -1,5 +1,5 @@
 """Sharding policy: PartitionSpec rules per (param path x shape) and per
-batch/cache kind, for the production meshes (DESIGN.md §5).
+batch/cache kind, for the production meshes (DESIGN.md §6).
 
 Philosophy: sharding never changes semantics under GSPMD — only layout and
 collective traffic — so every rule has a divisibility-checked preference
@@ -239,7 +239,7 @@ def param_specs(params_shapes: Any, mesh: Mesh, *, fsdp: bool = True,
 
 def activation_rules(cfg, mesh: Mesh, kind: str,
                      layout: str = "hybrid") -> dict[str, P]:
-    """Activation sharding hints (DESIGN.md §5).
+    """Activation sharding hints (DESIGN.md §6).
 
     * residual: pin the residual stream to batch-over-(pod,data) at every
       block boundary.  REQUIRED with FSDP: without it GSPMD lets the

@@ -89,6 +89,74 @@ def test_unrecoverable_raises(ckpt):
         ckpt.restore(state, 1, failed_nodes=[1, 2, 3, 4, 5])
 
 
+@pytest.mark.parametrize("n_failed", [2, 3, 4])   # k=4, n=8: up to n-k
+def test_multi_failure_repair_and_rewrite(ckpt, n_failed):
+    """2..n-k failures: one decode matmul rebuilds data AND every lost
+    pair; the repaired files are physically rewritten (newcomer protocol)."""
+    state = make_state(n_failed)
+    ckpt.save(1, state)
+    failed = list(range(2, 2 + n_failed))
+    # dead hosts: their files are gone, not just ignored
+    for f in failed:
+        for path in ckpt._node_files(1, f):
+            path.unlink()
+    got, report = ckpt.restore(state, 1, failed_nodes=failed)
+    assert_state_equal(got, state)
+    assert report.path == "reconstruct"
+    assert report.repaired_nodes == tuple(failed)
+    for f in failed:
+        for path in ckpt._node_files(1, f):
+            assert path.exists()
+    # the rewritten step is fully consistent again
+    assert ckpt.scrub(1).clean
+    got2, rep2 = ckpt.restore(state, 1)
+    assert rep2.path == "systematic"
+    assert_state_equal(got2, state)
+
+
+def test_multi_failure_no_repair(ckpt):
+    """repair=False: degraded read only — state comes back, nothing is
+    rewritten."""
+    state = make_state(9)
+    ckpt.save(1, state)
+    failed = [3, 7]
+    for f in failed:
+        for path in ckpt._node_files(1, f):
+            path.unlink()
+    got, report = ckpt.restore(state, 1, failed_nodes=failed, repair=False)
+    assert_state_equal(got, state)
+    assert report.path == "reconstruct"
+    assert report.repaired_nodes == ()
+    for f in failed:
+        for path in ckpt._node_files(1, f):
+            assert not path.exists()
+
+
+def test_scrub_clean_then_flags_corruption(ckpt):
+    state = make_state(11)
+    ckpt.save(1, state)
+    report = ckpt.scrub(1)
+    assert report.clean and report.mismatched_nodes == ()
+    assert report.nodes_checked == ckpt.spec.n
+    # scrub reads every pair: ~2B bytes (within packing overhead)
+    _, rep = ckpt.restore(state, 1)
+    assert report.bytes_read >= 2 * rep.bytes_read
+    # flip one symbol of node 5's redundancy block on disk
+    from repro.core import gf
+    _, rf = ckpt._node_files(1, 5)
+    z = np.load(rf)
+    r = gf.unpack257(z["low"], z["hi"])
+    r[0] = (r[0] + 1) % 257
+    low, hi = gf.pack257(r)
+    np.savez(rf, low=low, hi=hi)
+    report2 = ckpt.scrub(1)
+    assert not report2.clean
+    assert 5 in report2.mismatched_nodes
+    # the flagged node is repairable in place; scrub comes back clean
+    ckpt.repair_node(1, 5)
+    assert ckpt.scrub(1).clean
+
+
 def test_every_single_node_repairable(tmp_path):
     spec = CodeSpec.make(3, 257)
     ckpt = MSRCheckpointer(tmp_path, spec)

@@ -2,7 +2,7 @@
 
 These need >1 device, so they run in a SUBPROCESS with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main test process
-keeps the host's single device, per DESIGN.md §7).
+keeps the host's single device, per DESIGN.md §8).
 """
 import os
 import subprocess
