@@ -1,0 +1,97 @@
+"""Cluster scenario battery: repair traffic, degraded-read latency,
+availability (DESIGN.md §9).
+
+Runs every standard scenario (single/multi node loss, latent corruption +
+scrub, straggler, rack-correlated failure, rolling restart) through the
+event-driven simulator at a real block size and reports, per scenario:
+
+  * repair MB moved vs the classical-RS re-download baseline (ratio);
+  * degraded-read wall latency — the MEASURED time of the one-row
+    cached-inverse decode, cold (first read of an outage: includes the
+    host `gf.gauss_inverse`) and steady (LRU hit: one dispatched matmul);
+  * availability and the degraded-read fraction under the scenario's
+    client traffic;
+  * the bit-exactness verdict of the post-scenario cluster state.
+
+Emits the repo-root perf-trajectory file ``BENCH_cluster.json`` via
+``benchmarks.run``.
+"""
+import time
+
+import numpy as np
+
+from repro.cluster import ClusterSimulator, standard_scenarios
+from repro.cluster.events import default_layout
+from repro.core.circulant import CodeSpec
+
+from benchmarks._timing import timeit
+
+
+def _degraded_read_latency(spec, data) -> dict:
+    """Wall time of a degraded block read with a node down: cold (inverse
+    solve + matmul) vs steady (cached inverse, one matmul)."""
+    sim = ClusterSimulator(spec, data)
+    sim.fail_node(3)
+    sim.code.repair.decode_cache.clear()
+    t0 = time.perf_counter()
+    sim.read_block(2)
+    cold = time.perf_counter() - t0
+    steady = timeit(lambda: sim.read_block(2))
+    t_sys = timeit(lambda: sim.read_block(4))      # healthy systematic read
+    return {"cold_s": cold, "steady_s": steady, "systematic_s": t_sys,
+            "amplification_steady": steady / max(t_sys, 1e-12)}
+
+
+def run(ks=(4, 8), block_symbols: int = 1 << 16, quiet=False) -> list[dict]:
+    rows = []
+    for k in ks:
+        spec = CodeSpec.make(k, 257)
+        n = spec.n
+        rng = np.random.default_rng(0)
+        data = rng.integers(0, spec.p, (n, block_symbols),
+                            dtype=np.int64).astype(np.int32)
+        layout = default_layout(n, k)
+        lat = _degraded_read_latency(spec, data)
+        scen_rows = []
+        for sc in standard_scenarios(n, k, layout):
+            sim = ClusterSimulator(spec, data, layout=layout)
+            t0 = time.perf_counter()
+            rep = sim.run(sc)
+            wall = time.perf_counter() - t0
+            m = rep.metrics
+            scen_rows.append({
+                "scenario": rep.name,
+                "bit_exact": rep.bit_exact,
+                "repair_mb_moved": round(
+                    m["repair"]["symbols_moved"] / 2**20, 4),
+                "rs_baseline_mb": round(
+                    m["repair"]["rs_baseline_symbols"] / 2**20, 4),
+                "repair_ratio_vs_rs": m["repair"]["ratio_vs_rs"],
+                "reads": m["reads"]["total"],
+                "degraded_fraction": m["reads"]["degraded_fraction"],
+                "availability": m["availability"],
+                "sim_read_latency_ms": round(
+                    m["reads"]["latency"]["mean_s"] * 1e3, 4),
+                "wall_s": round(wall, 4),
+            })
+            if not quiet:
+                print(f"  [{n},{k}] {rep.name:20s} exact={rep.bit_exact} "
+                      f"ratio={m['repair']['ratio_vs_rs']} "
+                      f"avail={m['availability']} "
+                      f"deg={m['reads']['degraded_fraction']}")
+        rows.append({
+            "k": k, "n": n, "block_symbols": block_symbols,
+            "racks": layout.n_racks,
+            "degraded_read_latency": {kk: round(v, 6)
+                                      for kk, v in lat.items()},
+            "scenarios": scen_rows,
+        })
+        if not quiet:
+            print(f"  [{n},{k}] degraded read: cold {lat['cold_s']*1e3:.2f} ms"
+                  f" / steady {lat['steady_s']*1e3:.2f} ms"
+                  f" ({lat['amplification_steady']:.1f}x systematic)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -4,8 +4,8 @@ plus the roofline report over the dry-run artifacts.
     PYTHONPATH=src python -m benchmarks.run [--fast] [--quiet]
 
 Emits the repo-root perf-trajectory files BENCH_encode.json,
-BENCH_checkpoint.json and BENCH_repair.json, and prints
-``name,us_per_call,derived`` CSV rows at the end.
+BENCH_checkpoint.json, BENCH_repair.json and BENCH_cluster.json, and
+prints ``name,us_per_call,derived`` CSV rows at the end.
 """
 import argparse
 import json
@@ -15,9 +15,9 @@ import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from benchmarks import (bench_checkpoint, bench_encode_throughput,
-                        bench_field_size, bench_regeneration,
-                        bench_repair_bandwidth, roofline)
+from benchmarks import (bench_checkpoint, bench_cluster,
+                        bench_encode_throughput, bench_field_size,
+                        bench_regeneration, bench_repair_bandwidth, roofline)
 
 OUT = pathlib.Path(__file__).resolve().parent / "results"
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -101,6 +101,21 @@ def main() -> None:
                      f"{rows[-1]['save_s']*1e6:.0f}",
                      f"save_mbps={rows[-1]['save_mbps']};regen_frac="
                      f"{rows[-1]['restore']['regenerate']['frac_of_stored']}"))
+
+    print("== cluster scenarios: repair traffic + degraded reads =====")
+    t0 = time.perf_counter()
+    rows = bench_cluster.run(
+        ks=(4,) if args.fast else (4, 8),
+        block_symbols=(1 << 13 if args.fast else 1 << 16), quiet=quiet)
+    (OUT / "cluster.json").write_text(json.dumps(rows, indent=1))
+    (REPO_ROOT / "BENCH_cluster.json").write_text(json.dumps(rows, indent=1))
+    worst_ratio = max(
+        (s["repair_ratio_vs_rs"] for r in rows for s in r["scenarios"]
+         if s["repair_ratio_vs_rs"] is not None), default=None)
+    csv_rows.append(("cluster",
+                     f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
+                     f"worst_repair_ratio={worst_ratio};deg_read_ms="
+                     f"{rows[-1]['degraded_read_latency']['steady_s']*1e3:.2f}"))
 
     print("== roofline (dry-run artifacts) ===========================")
     t0 = time.perf_counter()

@@ -142,6 +142,21 @@ class MSRCheckpointer:
         pool, so the n systematic np.save calls overlap the encode instead
         of the seed's serial per-node loop; the packed redundancy writes
         follow as soon as the last tile resolves.
+
+        Parameters
+        ----------
+        step : int
+            Checkpoint step id; the on-disk directory is ``step_{step:06d}``
+            (staged as ``.tmp`` and renamed only after all writes land).
+        state : pytree
+            Arbitrary JAX/numpy pytree; serialized via
+            `placement.pytree_to_blocks`.
+
+        Returns
+        -------
+        dict
+            The manifest written alongside the node files (code spec +
+            tree metadata).
         """
         n = self.spec.n
         blocks, treedef, tspec = placement.pytree_to_blocks(state, n, self.spec.p)
@@ -233,13 +248,35 @@ class MSRCheckpointer:
     def restore(self, template: Any, step: Optional[int] = None,
                 failed_nodes: Sequence[int] = (), *, repair: bool = True,
                 ) -> tuple[Any, RestoreReport]:
-        """Rebuild the pytree.  `failed_nodes` simulates dead hosts (their
-        files are treated as unreadable; with repair=True the missing pair is
-        rebuilt and re-written — the newcomer protocol).
+        """Rebuild the pytree, repairing failed nodes along the way.
 
         Symmetric with the streaming save: node reads overlap through the
         thread pool, and the regenerate/reconstruct compute runs as a
         depth-2 stream-tile pipeline through the fused repair engine.
+
+        Parameters
+        ----------
+        template : pytree
+            Any pytree with the stored tree structure (values unused).
+        step : int, optional
+            Checkpoint step; None restores the latest.
+        failed_nodes : sequence of int
+            1-indexed dead hosts — their files are treated as unreadable.
+        repair : bool
+            When True the missing pairs are rebuilt bit-exactly and
+            re-written to disk (the newcomer protocol); False only
+            reconstructs the data in memory.
+
+        Returns
+        -------
+        (state, report) : (pytree, RestoreReport)
+            The rebuilt pytree and the byte-metered restore path taken
+            (``systematic`` | ``regenerate`` | ``reconstruct``).
+
+        Raises
+        ------
+        RuntimeError
+            Fewer than k of the n nodes survive (> n - k failures).
         """
         if step is None:
             step = self.steps()[-1]
@@ -381,6 +418,18 @@ class MSRCheckpointer:
         scrub certifies that every single-node repair of this step would
         succeed bit-exactly.  Cost: 2B bytes read + n fused tile matmuls;
         see DESIGN.md §4 for when to schedule it.
+
+        Parameters
+        ----------
+        step : int
+            Checkpoint step to verify (must exist on disk).
+
+        Returns
+        -------
+        ScrubReport
+            ``mismatched_nodes`` localizes damage (a corrupt block flags
+            its own node and possibly neighbours whose regeneration
+            consumed it); ``clean`` is True when every pair verified.
         """
         n, k = self.spec.n, self.spec.k
         bytes_read = 0

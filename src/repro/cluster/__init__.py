@@ -1,0 +1,26 @@
+"""Cluster failure simulator + degraded-read serving substrate
+(DESIGN.md §9).
+
+The event-driven layer that turns the PR 1/PR 2 encode + repair engines
+into a *system*: scenarios (node loss, corruption + scrub, stragglers,
+correlated rack failures, rolling restarts) drive the fused repair
+engine against real encoded bytes, with repair traffic accounted against
+the classical-RS re-download baseline and every recovery checked
+bit-exactly.
+"""
+from .events import (Event, Scenario, corrupt, default_layout, down, fail,
+                     latent_corruption, multi_node_loss, rack_failure, read,
+                     read_traffic, rolling_restart, scrub, single_node_loss,
+                     slow, standard_scenarios, straggler, up)
+from .metrics import LinkModel, MetricsLog
+from .simulator import (DOWN, FAILED, UP, ClusterSimulator, ScenarioReport,
+                        run_scenario)
+
+__all__ = [
+    "Event", "Scenario", "fail", "down", "up", "corrupt", "scrub", "slow",
+    "read", "read_traffic", "single_node_loss", "multi_node_loss",
+    "latent_corruption", "straggler", "rack_failure", "rolling_restart",
+    "standard_scenarios", "default_layout", "LinkModel", "MetricsLog",
+    "ClusterSimulator",
+    "ScenarioReport", "run_scenario", "UP", "DOWN", "FAILED",
+]

@@ -132,5 +132,34 @@ def embedded_repair_cost(k: int, block_symbols: int) -> SolveBasedRepairCost:
     )
 
 
+# ------------------------------------------------- scenario-level accounting
+def rs_scenario_repair_symbols(k: int, block_symbols: int,
+                               n_failures: int) -> int:
+    """RS re-download baseline for a failure scenario (DESIGN.md §9).
+
+    Classical [n, k] erasure coding repairs EACH failed node by
+    re-downloading the whole file: gamma = B = 2k * S symbols per failure
+    (the paper's central drawback, §II).  The cluster simulator divides
+    its measured repair traffic by this number to report the per-scenario
+    bandwidth ratio.
+
+    Parameters
+    ----------
+    k : int
+        Code dimension (n = 2k).
+    block_symbols : int
+        Symbols per block (S); the file is B = 2k * S symbols.
+    n_failures : int
+        Number of failed nodes repaired in the scenario.
+
+    Returns
+    -------
+    int
+        Total symbols an RS cluster would move: ``n_failures * 2k * S``.
+    """
+    return n_failures * 2 * k * block_symbols
+
+
 __all__ = ["ReplicationScheme", "RSCode", "SolveBasedRepairCost",
-           "solve_based_msr_repair_cost", "embedded_repair_cost"]
+           "solve_based_msr_repair_cost", "embedded_repair_cost",
+           "rs_scenario_repair_symbols"]

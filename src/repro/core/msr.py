@@ -48,13 +48,46 @@ class RepairPlan:
 
 
 class DoubleCirculantMSR:
-    """The paper's code over GF(p), vectorized over block symbols.
+    """The paper's [n = 2k, k] code over GF(p), vectorized over symbols.
 
-    Compute routes through the GF backend dispatch layer
-    (repro.kernels.dispatch, DESIGN.md §3): `backend` pins a registered
-    backend by name; `matmul` stays pluggable for a fully custom kernel
-    (a custom matmul also disables the structure-exploiting circulant
-    encode so every field op goes through the injected function).
+    Node v_i (1-indexed) stores the pair (a_{i-1}, r_i); all three phases
+    — encode (eq. (2)), any-k reconstruct (§III-B) and d = k+1
+    regenerate (§III-C) — run as dispatched GF matmuls through the fused
+    repair engine (DESIGN.md §3-§4).
+
+    Parameters
+    ----------
+    spec : CodeSpec
+        Validated code specification (k, p, coefficient vector c
+        satisfying condition (6)).
+    matmul : callable, optional
+        Fully custom ``(a, b, p) -> (a @ b) mod p`` kernel.  Injecting
+        one disables the structure-exploiting circulant encode and the
+        jit fusion so EVERY field operation flows through it.
+    backend : str, optional
+        Pin a registered dispatch backend by name (``jnp-int32``,
+        ``jnp-f32``, ``pallas``, ``pallas-interpret``); None auto-selects
+        from (platform, p, k), overridable with ``REPRO_GF_BACKEND``.
+    inverse_cache_size : int
+        LRU capacity of the decode-inverse cache (entries are keyed by
+        the sorted k-node subset; there are C(2k, k) possible).
+
+    Attributes
+    ----------
+    repair : RepairEngine
+        The decode-side engine: fused regeneration, cached any-k
+        inverses, one-matmul multi-failure repair.
+    backend_name : str
+        Resolved backend (``"custom"`` when ``matmul`` was injected).
+
+    Examples
+    --------
+    >>> spec = CodeSpec.make(2, 257)
+    >>> code = DoubleCirculantMSR(spec)
+    >>> import numpy as np
+    >>> red = code.encode(np.zeros((4, 8), np.int32))
+    >>> red.shape
+    (4, 8)
     """
 
     def __init__(self, spec: CodeSpec, matmul: MatmulFn | None = None,

@@ -7,6 +7,11 @@ The mapping is deliberately dumb and auditable:
 
 Systematic property: restoring WITHOUT failures reads only the raw data
 blocks — `blocks_to_pytree(data_blocks)` never touches field arithmetic.
+
+Physical placement (DESIGN.md §9): `RackLayout` assigns the n storage
+nodes to failure domains (racks) so the cluster simulator can model
+*correlated* failures — losing a whole rack must not exceed the code's
+n - k erasure budget, which `RackLayout.survives_rack_loss` checks.
 """
 from __future__ import annotations
 
@@ -42,6 +47,69 @@ class TreeSpec:
     def from_json(s: str) -> "TreeSpec":
         d = json.loads(s)
         return TreeSpec(**d)
+
+
+@dataclass(frozen=True)
+class RackLayout:
+    """Node -> failure-domain (rack) assignment for correlated failures.
+
+    Parameters
+    ----------
+    n_nodes : int
+        Number of storage nodes (the code's n = 2k).
+    racks : tuple of int
+        ``racks[i]`` is the rack id of node ``v_{i+1}`` (0-based rack ids).
+
+    Notes
+    -----
+    Build one with :func:`rack_layout`, which round-robins nodes across
+    racks so rack sizes differ by at most one — the placement that
+    maximizes the number of racks that may fail together while staying
+    inside the code's n - k erasure budget.
+    """
+    n_nodes: int
+    racks: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.racks) != self.n_nodes:
+            raise ValueError(f"need one rack id per node: "
+                             f"{len(self.racks)} != {self.n_nodes}")
+
+    @property
+    def n_racks(self) -> int:
+        return len(set(self.racks))
+
+    def rack_of(self, node: int) -> int:
+        """Rack id of node ``v_node`` (1-indexed)."""
+        if not 1 <= node <= self.n_nodes:
+            raise ValueError(f"node {node} out of range 1..{self.n_nodes}")
+        return self.racks[node - 1]
+
+    def nodes_in(self, rack: int) -> tuple[int, ...]:
+        """All (1-indexed) nodes assigned to ``rack``."""
+        return tuple(i + 1 for i, r in enumerate(self.racks) if r == rack)
+
+    @property
+    def max_rack_size(self) -> int:
+        return max(len(self.nodes_in(r)) for r in set(self.racks))
+
+    def survives_rack_loss(self, k: int) -> bool:
+        """True if losing ANY single rack leaves >= k nodes alive — i.e.
+        every rack holds at most n - k nodes, so a correlated rack
+        failure stays inside the code's erasure budget."""
+        return self.max_rack_size <= self.n_nodes - k
+
+
+def rack_layout(n_nodes: int, n_racks: int) -> RackLayout:
+    """Round-robin the n nodes across ``n_racks`` failure domains.
+
+    Rack sizes differ by at most one; with ``n_racks >= n / (n - k)`` the
+    resulting layout survives any single-rack loss (``survives_rack_loss``).
+    """
+    if n_racks < 1:
+        raise ValueError("need at least one rack")
+    return RackLayout(n_nodes=n_nodes,
+                      racks=tuple(i % n_racks for i in range(n_nodes)))
 
 
 def pytree_to_bytes(tree: Any) -> tuple[bytes, jax.tree_util.PyTreeDef, list[dict]]:
@@ -88,5 +156,5 @@ def blocks_to_pytree(blocks: np.ndarray, treedef: jax.tree_util.PyTreeDef,
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-__all__ = ["TreeSpec", "pytree_to_bytes", "bytes_to_leaves",
-           "pytree_to_blocks", "blocks_to_pytree"]
+__all__ = ["TreeSpec", "RackLayout", "rack_layout", "pytree_to_bytes",
+           "bytes_to_leaves", "pytree_to_blocks", "blocks_to_pytree"]

@@ -112,6 +112,23 @@ class DecodeInverseCache:
     nodes read; there are only C(2k, k) subsets (12870 at k = 8) and real
     restore/scrub traffic reuses a handful, so the O(n^3) host-side
     ``gf.gauss_inverse`` runs once per subset instead of once per call.
+
+    Parameters
+    ----------
+    spec : CodeSpec
+        The code whose system matrices are inverted.
+    maxsize : int
+        LRU capacity; least-recently-used subsets are evicted beyond it.
+
+    Attributes
+    ----------
+    hits, misses : int
+        Lifetime counters (see :meth:`cache_info`).
+
+    See Also
+    --------
+    RepairEngine.reconstruct : canonicalizes caller orderings so every
+        permutation of the same k nodes shares one entry.
     """
 
     def __init__(self, spec: CodeSpec, maxsize: int = 128):
@@ -163,9 +180,31 @@ class RepairEngine:
     """Fused decode-side compute for one code: all repair/reconstruct
     requests reduce to a single dispatched GF matmul (DESIGN.md §4).
 
-    ``jittable=False`` (custom injected matmuls) keeps every field op
-    routed through the injected function and skips the jit fusion — the
-    helper stack is built eagerly and the single matmul still applies.
+    Parameters
+    ----------
+    spec : CodeSpec
+        The code being repaired.
+    matmul : callable
+        Backend ``(a, b, p) -> (a @ b) mod p`` primitive; module-level
+        dispatch singletons share one jit cache across engines.
+    jittable : bool
+        False for custom injected matmuls: keeps every field op routed
+        through the injected function and skips the jit fusion — the
+        helper stack is built eagerly and the single matmul still
+        applies.
+    inverse_cache_size : int
+        Capacity of :attr:`decode_cache`.
+
+    Attributes
+    ----------
+    decode_cache : DecodeInverseCache
+        Any-k reconstruction inverses, LRU-keyed by sorted node subset.
+
+    Notes
+    -----
+    The (2, k+1) repair matrix (:func:`build_repair_matrix`) is
+    node-invariant by the circulant structure, so one engine serves
+    every node's regeneration with zero per-node precompute.
     """
 
     def __init__(self, spec: CodeSpec, matmul: MatmulFn, *,

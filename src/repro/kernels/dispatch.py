@@ -188,6 +188,51 @@ def get(name: str) -> GFBackend:
                        f"registered: {sorted(_REGISTRY)}") from None
 
 
+def get_backend(name: Optional[str] = None, *, p: int = 257,
+                k: Optional[int] = None) -> GFBackend:
+    """Resolve a GF backend: by name, or auto-selected for this host.
+
+    The one-stop entry point the README documents.  With ``name`` it is
+    a registry lookup (including validation-only backends like
+    ``pallas-interpret``); without, it defers to :func:`select`, which
+    applies the ``REPRO_GF_BACKEND`` env var, any
+    :func:`set_default_backend` override, and finally the platform rule.
+
+    Parameters
+    ----------
+    name : str, optional
+        Registered backend name (``jnp-int32``, ``jnp-f32``, ``pallas``,
+        ``pallas-interpret``).  None auto-selects.
+    p : int
+        Field modulus; bounds which backends are exact (see
+        `kernels/envelope.py`: fp32 schedules need p <= 4097, everything
+        needs p <= 46341).
+    k : int, optional
+        Contraction depth hint for the platform rule.
+
+    Returns
+    -------
+    GFBackend
+        The resolved backend; its ``matmul`` / ``circulant_encode`` /
+        ``axpy`` are bit-exact over GF(p).
+
+    Raises
+    ------
+    KeyError
+        Unknown ``name``.
+    ValueError
+        ``p`` outside every exact envelope (p > 46341).
+
+    Examples
+    --------
+    >>> get_backend("jnp-int32").name
+    'jnp-int32'
+    >>> get_backend(p=257).name in registered_backends()
+    True
+    """
+    return get(name) if name else select(p, k)
+
+
 def registered_backends() -> list[str]:
     return sorted(_REGISTRY)
 
@@ -281,7 +326,8 @@ register(GFBackend(name="pallas-interpret", matmul=_im, circulant_encode=_ic,
 
 
 __all__ = [
-    "GFBackend", "register", "get", "select", "registered_backends",
+    "GFBackend", "register", "get", "get_backend", "select",
+    "registered_backends",
     "set_default_backend", "int32_headroom_terms", "int32_lazy_terms",
     "f32_exact_terms", "fold_count", "LAZY_F32_CHUNKS", "ENV_VAR",
 ]

@@ -1,13 +1,29 @@
-"""Batched serving engine: prefill + decode with KV caches and a simple
-continuous-batching request queue (admit-on-slot-free).
+"""Serving layer: coded storage reads + batched LLM inference
+(DESIGN.md §9).
 
-The decode step is the same `serve_step` the dry-run lowers at production
-shapes; here it runs jit'd at host scale for the examples/tests.
+Two engines live here, layered:
+
+* :class:`CodedReadServer` — degraded-read block serving over an MSR
+  cluster.  Every read goes to the block's assigned node when it is up
+  (systematic: raw bytes, zero field operations) and *transparently*
+  falls back to a one-matmul any-k decode through the fused repair
+  engine's cached inverses when assigned nodes are down, slow, or lost.
+  The node state, latency model and byte accounting come from
+  `repro.cluster.ClusterSimulator`, so a serving workload and a failure
+  scenario compose directly (see ``examples/serve_demo.py``).
+
+* :class:`ServingEngine` — prefill + KV-cache decode with a simple
+  continuous-batching request queue (admit-on-slot-free).  The decode
+  step is the same `serve_step` the dry-run lowers at production shapes;
+  here it runs jit'd at host scale for the examples/tests.  Its
+  parameters can be materialized straight out of a :class:`CodedReadServer`
+  (:meth:`ServingEngine.from_coded_store`) — the kill-nodes-while-serving
+  path the demo exercises end to end.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +32,82 @@ import numpy as np
 from repro.models import Model
 
 
+# --------------------------------------------------------------- coded reads
+class CodedReadServer:
+    """Degraded-read serving facade over a cluster simulator.
+
+    Parameters
+    ----------
+    sim : repro.cluster.ClusterSimulator
+        Owns node state, the encoded bytes, the latency model and the
+        metrics log.  Reads issued here and scenario events run through
+        ``sim.run`` share one accounting stream.
+    treedef, tspec : optional
+        When the stored object is a pytree (`placement.pytree_to_blocks`),
+        these let :meth:`read_state` rebuild it.
+
+    Notes
+    -----
+    The degraded path is exactly the paper's any-k data-collector decode,
+    but served one *row* at a time: block a_j is ``inv[j] @ downloads``
+    with the (n, n) inverse LRU-cached per node subset, so an outage's
+    worth of degraded reads costs one `gf.gauss_inverse` total.
+    """
+
+    def __init__(self, sim, treedef=None, tspec=None):
+        self.sim = sim
+        self.treedef = treedef
+        self.tspec = tspec
+        self._clock = 0.0
+
+    @classmethod
+    def for_pytree(cls, state: Any, spec, **sim_kwargs) -> "CodedReadServer":
+        """Encode a pytree across the cluster and serve reads of it.
+
+        Serializes ``state`` into the code's n data blocks
+        (`placement.pytree_to_blocks`), builds a fresh
+        `ClusterSimulator` holding the encoded bytes, and returns the
+        server wired for :meth:`read_state`.
+        """
+        from repro.cluster.simulator import ClusterSimulator
+        from repro.core import placement
+        blocks, treedef, tspec = placement.pytree_to_blocks(
+            state, spec.n, spec.p)
+        sim = ClusterSimulator(spec, blocks, **sim_kwargs)
+        return cls(sim, treedef=treedef, tspec=tspec)
+
+    def _tick(self) -> float:
+        self._clock += 1.0
+        return self._clock
+
+    def read_block(self, block: int) -> Optional[np.ndarray]:
+        """One data block, systematic or transparently degraded;
+        None only when fewer than k nodes are up."""
+        return self.sim.read_block(block, self._tick())
+
+    def read_blocks(self) -> Optional[np.ndarray]:
+        """The full (n, S) data matrix — systematic rows where owners are
+        up, ONE decode matmul for everything else."""
+        return self.sim.read_all(self._tick())
+
+    def read_state(self) -> Any:
+        """Rebuild the stored pytree (requires ``for_pytree``), whatever
+        the current node state — raises only below k survivors."""
+        if self.treedef is None or self.tspec is None:
+            raise RuntimeError("server was not built with for_pytree()")
+        blocks = self.read_blocks()
+        if blocks is None:
+            raise RuntimeError(
+                f"unrecoverable: fewer than k={self.sim.k} nodes up")
+        from repro.core import placement
+        return placement.blocks_to_pytree(blocks, self.treedef, self.tspec)
+
+    @property
+    def metrics(self):
+        return self.sim.metrics
+
+
+# ------------------------------------------------------------- LLM serving
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -26,6 +118,23 @@ class Request:
 
 
 class ServingEngine:
+    """Batched prefill/decode engine with continuous batching.
+
+    Parameters
+    ----------
+    model : Model
+        The architecture to serve.
+    params : pytree
+        Model parameters (materialize them from coded storage with
+        :meth:`from_coded_store`).
+    batch_size : int
+        Concurrent decode slots.
+    max_len : int
+        KV-cache capacity; prompts + new tokens must fit.
+    temperature : float
+        0 = greedy argmax; otherwise categorical sampling.
+    """
+
     def __init__(self, model: Model, params, *, batch_size: int, max_len: int,
                  temperature: float = 0.0, seed: int = 0):
         self.model = model
@@ -39,6 +148,22 @@ class ServingEngine:
                                                    max_len=max_len))
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=max_len, q_chunk=None))
+
+    @classmethod
+    def from_coded_store(cls, model: Model, store: CodedReadServer,
+                         **engine_kwargs) -> "ServingEngine":
+        """Materialize parameters out of MSR-coded storage and serve.
+
+        The read is systematic when the cluster is healthy and falls back
+        to the one-matmul degraded decode per missing node otherwise —
+        the engine itself cannot tell the difference (bit-exact either
+        way)."""
+        return cls(model, store.read_state(), **engine_kwargs)
+
+    def reload_params(self, store: CodedReadServer) -> None:
+        """Re-read parameters from coded storage in place (e.g. after the
+        cluster repaired a failed node, or to pick up a new checkpoint)."""
+        self.params = store.read_state()
 
     # ----------------------------------------------------------- one batch
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
@@ -86,3 +211,6 @@ class ServingEngine:
                 r.done = True
                 done.append(r)
         return done
+
+
+__all__ = ["CodedReadServer", "Request", "ServingEngine"]

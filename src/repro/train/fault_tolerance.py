@@ -6,7 +6,13 @@ against a simulated clock so every policy is unit-testable.  The decisions
 (who repairs, from whom, at what bandwidth) are delegated to the paper's
 embedded property: helpers are DETERMINED (prev + next-k ring neighbours),
 so the control plane never solves coefficient/helper-selection problems —
-the paper's central operational claim (§IV).
+the paper's central operational claim (paper §IV).
+
+The training loop and the cluster simulator (DESIGN.md §9) share one
+failure timeline: `ClusterScheduleInjector` replays a `repro.cluster`
+scenario's fail events as training-step crashes, and the Supervisor can
+account its checkpoint-repair traffic into the same `MetricsLog` the
+serving scenarios report against.
 """
 from __future__ import annotations
 
@@ -43,6 +49,35 @@ class FailureInjector:
                 out.append(FailureEvent(step=step,
                                         node=int(self._rng.integers(1, self.n_nodes + 1))))
         return out
+
+
+class ClusterScheduleInjector(FailureInjector):
+    """A `repro.cluster` scenario viewed as a training-step failure
+    schedule (DESIGN.md §9).
+
+    The simulator and the training loop share one failure timeline: every
+    ``fail`` event in the scenario becomes a crash of the same node at
+    step ``round(t * steps_per_time)``, so the exact cluster dynamics a
+    scenario benchmarks are what the Supervisor's checkpoint-repair path
+    recovers from.
+
+    Parameters
+    ----------
+    n_nodes : int
+        Storage nodes (the code's n).
+    scenario : repro.cluster.events.Scenario
+        Event stream; only ``fail`` events are injected (down/up events
+        are storage-availability concerns the checkpointer's restore path
+        handles internally).
+    steps_per_time : float
+        Training steps per unit of simulated time.
+    """
+
+    def __init__(self, n_nodes: int, scenario, *, steps_per_time: float = 1.0):
+        schedule = [FailureEvent(step=int(round(e.t * steps_per_time)),
+                                 node=e.node)
+                    for e in scenario.events if e.kind == "fail"]
+        super().__init__(n_nodes, schedule=schedule)
 
 
 # ---------------------------------------------------------------- heartbeats
@@ -120,10 +155,14 @@ class Supervisor:
     """
 
     def __init__(self, checkpointer, injector: Optional[FailureInjector] = None,
-                 *, ckpt_every: int = 10):
+                 *, ckpt_every: int = 10, metrics=None):
+        """``metrics``: optional `repro.cluster.MetricsLog` — repair
+        traffic from crash recovery is accounted there against the RS
+        re-download baseline, alongside any serving-scenario traffic."""
         self.ckpt = checkpointer
         self.injector = injector
         self.ckpt_every = ckpt_every
+        self.metrics = metrics
         self.log: list[dict] = []
 
     def run(self, state, step_fn: Callable, data_fn: Callable, n_steps: int,
@@ -152,6 +191,14 @@ class Supervisor:
                     "ckpt_step": last, "restore_path": report.path,
                     "repair_bytes": repaired_bytes or report.bytes_read,
                 })
+                if self.metrics is not None:
+                    from repro.core.baselines import rs_scenario_repair_symbols
+                    spec = self.ckpt.spec
+                    block_symbols = report.bytes_total_stored // (2 * spec.n)
+                    self.metrics.record_repair(
+                        len(failed), repaired_bytes or report.bytes_read,
+                        rs_scenario_repair_symbols(spec.k, block_symbols,
+                                                   len(failed)))
                 step = last          # roll back to the checkpoint
                 continue
             batch = data_fn(step)

@@ -1,0 +1,300 @@
+"""Cluster failure simulator + degraded-read serving (DESIGN.md §9).
+
+Acceptance battery: node loss over the full 1..n-k erasure budget,
+latent corruption caught and repaired by scrub, rack-correlated failure,
+straggler mitigation, rolling restarts — every recovery bit-exact, every
+scenario's repair traffic ratioed against the RS re-download baseline.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterSimulator, LinkModel, MetricsLog, events,
+                           run_scenario)
+from repro.core.baselines import rs_scenario_repair_symbols
+from repro.core.circulant import CodeSpec
+from repro.core.placement import RackLayout, rack_layout
+from repro.serve.engine import CodedReadServer
+from repro.train import fault_tolerance as ft
+
+K, P, S = 4, 257, 256
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return CodeSpec.make(K, P)
+
+
+@pytest.fixture(scope="module")
+def data(spec):
+    rng = np.random.default_rng(7)
+    return rng.integers(0, P, (spec.n, S), dtype=np.int64).astype(np.int32)
+
+
+def fresh_sim(spec, data, **kw):
+    return ClusterSimulator(spec, data, **kw)
+
+
+# ------------------------------------------------------------- node loss
+@pytest.mark.parametrize("failures", range(1, 2 * K - K + 1))   # 1..n-k
+def test_node_loss_bit_exact(spec, data, failures):
+    sc = events.multi_node_loss(spec.n, spec.k, failures=failures)
+    rep = run_scenario(spec, data, sc)
+    assert rep.bit_exact
+    m = rep.metrics["repair"]
+    assert m["nodes_repaired"] == failures
+    assert m["rs_baseline_symbols"] == rs_scenario_repair_symbols(
+        spec.k, S, failures)
+    if failures == 1:
+        # embedded fused repair: gamma = (k+1) S of a 2kS baseline
+        assert m["symbols_moved"] == (spec.k + 1) * S
+        assert m["ratio_vs_rs"] == pytest.approx((K + 1) / (2 * K))
+    else:
+        # one-matmul multi-failure decode: one download set total
+        assert m["symbols_moved"] == 2 * spec.k * S
+        assert m["ratio_vs_rs"] == pytest.approx(1 / failures, rel=1e-3)
+
+
+def test_single_loss_serves_degraded_reads(spec, data):
+    rep = run_scenario(spec, data, events.single_node_loss(spec.n))
+    assert rep.bit_exact
+    assert rep.metrics["reads"]["degraded"] > 0
+    assert rep.metrics["reads"]["failed"] == 0
+    assert rep.metrics["availability"] == 1.0
+    assert rep.unserved_events == 0
+
+
+def test_beyond_budget_is_unrecoverable(spec, data):
+    with pytest.raises(ValueError):
+        events.multi_node_loss(spec.n, spec.k, failures=spec.n - spec.k + 1)
+    sim = fresh_sim(spec, data)
+    for v in range(1, spec.n - spec.k + 2):     # n-k+1 failures by hand
+        sim.fail_node(v)
+    assert sim.read_block(0) is None            # < k up: unservable
+    assert sim.metrics.reads_failed == 1
+    assert not sim.repair_now()
+
+
+# ------------------------------------------------------- corruption + scrub
+def test_corruption_scrub_repairs_bit_exact(spec, data):
+    rep = run_scenario(spec, data, events.latent_corruption(spec.n))
+    assert rep.bit_exact
+    assert rep.metrics["scrub"]["passes"] == 1
+    assert rep.metrics["scrub"]["nodes_flagged"] >= 1
+    assert rep.metrics["scrub"]["symbols_read"] == 2 * spec.n * S
+
+
+def test_scrub_flags_and_convicts_redundancy_corruption(spec, data):
+    sim = fresh_sim(spec, data)
+    sim.node_r[4, 3] = (sim.node_r[4, 3] + 1) % P       # node 5's r block
+    flagged = sim.run_scrub()
+    assert 5 in flagged
+    assert np.array_equal(sim.node_r, sim._orig_r)      # repaired
+    assert np.array_equal(sim.node_a, sim._orig_a)
+
+
+def test_clean_scrub_flags_nothing(spec, data):
+    sim = fresh_sim(spec, data)
+    assert sim.run_scrub() == ()
+    assert sim.metrics.repair_events == 0
+
+
+def test_scrub_skipped_when_node_down(spec, data):
+    sim = fresh_sim(spec, data)
+    sim.state[0] = "down"
+    assert sim.run_scrub() == ()
+    assert sim.metrics.scrub_symbols == 0
+    # a skipped pass must not masquerade as a clean one
+    assert sim.metrics.scrub_passes == 0
+    assert sim.metrics.scrub_skipped == 1
+
+
+def test_corrupt_event_validates_target():
+    with pytest.raises(ValueError):
+        events.corrupt(1.0, 2, where="data")
+    with pytest.raises(ValueError):
+        events.Event(t=0.0, kind="bogus")
+
+
+def test_node_targeted_events_validate_node(spec, data):
+    with pytest.raises(ValueError):
+        events.Event(t=0.0, kind="fail")        # node defaults to 0
+    with pytest.raises(ValueError):
+        events.fail(1.0, 0)
+    sim = fresh_sim(spec, data)
+    with pytest.raises(ValueError):
+        sim.fail_node(0)                        # nodes are 1-indexed
+    with pytest.raises(ValueError):
+        sim.fail_node(spec.n + 1)
+    with pytest.raises(ValueError):
+        sim.run(events.Scenario("bad", (events.Event(
+            t=0.0, kind="slow", node=spec.n + 3),)))
+
+
+def test_read_all_unservable_bills_nothing(spec, data):
+    sim = fresh_sim(spec, data)
+    for v in range(1, spec.n - spec.k + 2):     # below k survivors
+        sim.fail_node(v)
+    assert sim.read_all() is None
+    assert sim.metrics.reads_systematic == 0    # nothing claimed as served
+    assert sim.metrics.reads_failed == spec.n
+    assert sim.metrics.read_symbols == 0
+
+
+# ------------------------------------------------------------ rack failure
+def test_rack_layout_placement():
+    lay = rack_layout(8, 4)
+    assert lay.n_racks == 4 and lay.max_rack_size == 2
+    assert lay.nodes_in(0) == (1, 5)
+    assert lay.rack_of(5) == 0
+    assert lay.survives_rack_loss(k=4)          # 2 <= n-k = 4
+    tight = RackLayout(8, racks=(0, 0, 0, 0, 0, 1, 1, 1))
+    assert not tight.survives_rack_loss(k=4)    # 5 > 4
+
+
+def test_rack_correlated_failure_bit_exact(spec, data):
+    lay = rack_layout(spec.n, 4)
+    rep = run_scenario(spec, data, events.rack_failure(lay, spec.k, rack=1),
+                       layout=lay)
+    assert rep.bit_exact
+    f = len(lay.nodes_in(1))
+    assert rep.metrics["repair"]["nodes_repaired"] == f
+    assert rep.metrics["repair"]["ratio_vs_rs"] == pytest.approx(1 / f)
+
+
+def test_rack_failure_rejects_overfull_rack(spec):
+    tight = RackLayout(8, racks=(0,) * 5 + (1,) * 3)
+    with pytest.raises(ValueError):
+        events.rack_failure(tight, spec.k, rack=0)
+
+
+# -------------------------------------------------- stragglers + restarts
+def test_straggler_mitigation_routes_around(spec, data):
+    rep = run_scenario(spec, data, events.straggler(spec.n, factor=50.0))
+    assert rep.bit_exact
+    assert rep.metrics["reads"]["degraded"] > 0       # rerouted
+    assert rep.metrics["repair"]["events"] == 0       # no repair traffic
+    # without mitigation the slow node serves its own block
+    rep2 = run_scenario(spec, data, events.straggler(spec.n, factor=50.0),
+                        straggler_mitigation=False)
+    assert rep2.metrics["reads"]["degraded"] == 0
+    assert rep2.metrics["reads"]["latency"]["max_s"] > \
+        rep.metrics["reads"]["latency"]["max_s"]
+
+
+def test_rolling_restart_degrades_without_repair(spec, data):
+    rep = run_scenario(spec, data, events.rolling_restart(spec.n))
+    assert rep.bit_exact
+    assert rep.metrics["reads"]["degraded"] >= spec.n   # one per dwell window
+    assert rep.metrics["repair"]["symbols_moved"] == 0  # data was intact
+    assert rep.metrics["availability"] == 1.0
+
+
+# ------------------------------------------------------------ degraded reads
+def test_degraded_read_bit_exact_and_single_solve(spec, data):
+    sim = fresh_sim(spec, data)
+    sim.fail_node(3)
+    sim.code.repair.decode_cache.clear()
+    for _ in range(5):
+        out = sim.read_block(2)                 # the failed node's block
+        np.testing.assert_array_equal(out, data[2])
+    info = sim.code.repair.decode_cache.cache_info()
+    assert info.misses == 1 and info.hits == 4  # one gauss_inverse total
+
+
+def test_read_all_mixes_systematic_and_one_decode(spec, data):
+    sim = fresh_sim(spec, data)
+    sim.fail_node(1)
+    sim.fail_node(6)
+    out = sim.read_all()
+    np.testing.assert_array_equal(out, data)
+    assert sim.metrics.reads_systematic == spec.n - 2
+    assert sim.metrics.reads_degraded == 2
+    # the two degraded blocks share one download set
+    assert sim.metrics.read_symbols == (spec.n - 2) * S + 2 * spec.k * S
+
+
+# ----------------------------------------------------------- serving layer
+def test_coded_read_server_pytree_roundtrip(spec):
+    state = {"w": np.arange(600, dtype=np.float32).reshape(20, 30),
+             "step": np.int32(41)}
+    srv = CodedReadServer.for_pytree(state, spec)
+    for victim in (2, 7):
+        srv.sim.fail_node(victim)
+    got = srv.read_state()
+    np.testing.assert_array_equal(got["w"], state["w"])
+    assert got["step"] == state["step"]
+    assert srv.metrics.reads_degraded == 2
+    assert srv.sim.repair_now()
+    assert np.array_equal(srv.sim.node_a, srv.sim._orig_a)
+    assert np.array_equal(srv.sim.node_r, srv.sim._orig_r)
+
+
+def test_coded_read_server_requires_pytree_mode(spec, data):
+    srv = CodedReadServer(fresh_sim(spec, data))
+    with pytest.raises(RuntimeError):
+        srv.read_state()
+    np.testing.assert_array_equal(srv.read_block(4), data[4])
+
+
+# ------------------------------------------------------- training wiring
+def test_cluster_schedule_injector_maps_time_to_steps():
+    sc = events.single_node_loss(8, node=5, at=3.0)
+    inj = ft.ClusterScheduleInjector(8, sc, steps_per_time=2.0)
+    assert inj.at(6) == [ft.FailureEvent(step=6, node=5)]
+    assert inj.at(3) == []
+
+
+def test_supervisor_records_repair_into_cluster_metrics(tmp_path):
+    spec = CodeSpec.make(3, 257)
+    ckpt_dir = tmp_path / "ckpt"
+    from repro.checkpoint.msr_checkpoint import MSRCheckpointer
+    ckpt = MSRCheckpointer(ckpt_dir, spec)
+    metrics = MetricsLog()
+    sc = events.single_node_loss(spec.n, node=2, at=3.0)
+    inj = ft.ClusterScheduleInjector(spec.n, sc)
+    sup = ft.Supervisor(ckpt, inj, ckpt_every=2, metrics=metrics)
+
+    state = {"x": np.arange(128, dtype=np.float32)}
+
+    def step_fn(s, batch):
+        return {"x": s["x"] + 1.0}, {"loss": float(s["x"][0])}
+
+    out = sup.run(state, step_fn, lambda step: None, n_steps=6)
+    assert any(e["event"] == "repair" for e in sup.log)
+    assert metrics.repair_events == 1
+    assert metrics.repaired_nodes == 1
+    assert 0 < metrics.repair_symbols
+    assert metrics.rs_baseline_symbols > 0
+    np.testing.assert_array_equal(out["x"], state["x"] + 6.0)
+
+
+# ---------------------------------------------------------------- metrics
+def test_metrics_summary_shapes():
+    m = MetricsLog()
+    m.record_read("systematic", 0.001, 256)
+    m.record_read("degraded", 0.002, 2048, corrupt=True)
+    m.record_read("failed", 0.0, 0)
+    m.record_repair(2, 2048, 4096)
+    s = m.summary()
+    assert s["availability"] == pytest.approx(2 / 3, rel=1e-3)
+    assert s["reads"]["served_corrupt"] == 1
+    assert s["repair"]["ratio_vs_rs"] == 0.5
+    assert s["reads"]["latency"]["max_s"] == pytest.approx(0.002)
+    with pytest.raises(ValueError):
+        m.record_read("bogus", 0.0, 0)
+
+
+def test_link_model_latency_ordering():
+    link = LinkModel(bandwidth_bps=1e6, request_overhead_s=1e-3)
+    fast = link.fetch_s(1000)
+    slow = link.fetch_s(1000, slow_factor=10.0)
+    assert slow == pytest.approx(10 * fast)
+    deg = link.degraded_read_s(2000, [1.0, 1.0, 4.0])
+    assert deg > link.fetch_s(2000)             # slowest helper dominates
+
+
+def test_standard_scenarios_all_bit_exact(spec, data):
+    for sc in events.standard_scenarios(spec.n, spec.k):
+        rep = run_scenario(spec, data, sc)
+        assert rep.bit_exact, sc.name
+        assert rep.metrics["availability"] == 1.0, sc.name

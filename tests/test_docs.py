@@ -1,0 +1,29 @@
+"""Documentation health under pytest (mirrors the CI docs job).
+
+`tools/check_docs.py` is the single source of truth; these tests import
+its checks so a stale DESIGN.md anchor, a dead markdown link or a broken
+README quickstart fails tier-1 locally, not just in the docs job.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tools"))
+
+import check_docs
+
+
+def test_design_section_refs_resolve():
+    assert check_docs.check_section_refs() == []
+
+
+def test_markdown_relative_links_exist():
+    assert check_docs.check_relative_links() == []
+
+
+def test_design_has_cluster_section():
+    assert "9" in check_docs.design_headings()
+
+
+def test_readme_quickstart_runs():
+    assert check_docs.run_readme_doctest() == []

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Documentation health checks (DESIGN.md §8; run by the CI docs job).
+
+Three checks, all fatal on failure:
+
+1. **README doctest** — the first ```python fenced block in README.md
+   (the quickstart) is extracted and executed in a subprocess with
+   ``PYTHONPATH=src``, so the documented five-liner can never rot.
+2. **Section anchors** — every ``§N`` / ``§N.M`` cross-reference in the
+   source tree, tests, benchmarks and markdown must resolve to a real
+   ``## §N`` / ``### §N.M`` heading in DESIGN.md (catches stale refs
+   after renumberings).
+3. **Relative links** — every relative markdown link target in README.md
+   and DESIGN.md must exist on disk.
+
+Usage:  python tools/check_docs.py  [--skip-doctest]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SCAN_GLOBS = ["src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
+              "examples/**/*.py", "*.md"]
+MD_WITH_LINKS = ["README.md", "DESIGN.md"]
+
+
+def extract_quickstart(readme: pathlib.Path) -> str:
+    """First ```python fenced block — the doctested quickstart."""
+    text = readme.read_text()
+    m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
+    if not m:
+        raise SystemExit("README.md has no ```python quickstart block")
+    return m.group(1)
+
+
+def run_readme_doctest() -> list[str]:
+    code = extract_quickstart(REPO / "README.md")
+    with tempfile.TemporaryDirectory() as d:
+        path = pathlib.Path(d) / "readme_quickstart.py"
+        path.write_text(code)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, str(path)], env=env,
+                              capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        return [f"README quickstart failed (exit {proc.returncode}):\n"
+                f"{proc.stderr.strip()}"]
+    return []
+
+
+def design_headings() -> set[str]:
+    """All §N / §N.M anchors declared as DESIGN.md headings."""
+    out = set()
+    for line in (REPO / "DESIGN.md").read_text().splitlines():
+        if line.startswith("#"):
+            for ref in re.findall(r"§(\d+(?:\.\d+)?)", line):
+                out.add(ref)
+    return out
+
+
+def check_section_refs() -> list[str]:
+    known = design_headings()
+    errors = []
+    for pattern in SCAN_GLOBS:
+        for path in sorted(REPO.glob(pattern)):
+            rel = path.relative_to(REPO)
+            for ln, line in enumerate(path.read_text().splitlines(), 1):
+                for ref in re.findall(r"§(\d+(?:\.\d+)?)", line):
+                    # "§Paper" style names and bare "§" never match; only
+                    # numeric refs are checked.  DESIGN's own headings are
+                    # declarations, not references.
+                    if str(rel) == "DESIGN.md" and line.startswith("#"):
+                        continue
+                    if ref not in known:
+                        errors.append(f"{rel}:{ln}: stale reference §{ref} "
+                                      f"(DESIGN.md has {sorted(known)})")
+    return errors
+
+
+def check_relative_links() -> list[str]:
+    errors = []
+    for name in MD_WITH_LINKS:
+        path = REPO / name
+        for ln, line in enumerate(path.read_text().splitlines(), 1):
+            for target in re.findall(r"\]\(([^)]+)\)", line):
+                if target.startswith(("http://", "https://", "#", "mailto:")):
+                    continue
+                if not (REPO / target.split("#")[0]).exists():
+                    errors.append(f"{name}:{ln}: dead link -> {target}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-doctest", action="store_true",
+                    help="only run the static anchor/link checks")
+    args = ap.parse_args()
+
+    errors = check_section_refs() + check_relative_links()
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"anchors: {len(design_headings())} DESIGN.md headings; "
+          f"links: checked {MD_WITH_LINKS}")
+    if not args.skip_doctest:
+        doc_errors = run_readme_doctest()
+        for e in doc_errors:
+            print(f"FAIL {e}")
+        errors += doc_errors
+        if not doc_errors:
+            print("README quickstart: ran clean")
+    if errors:
+        print(f"{len(errors)} documentation error(s)")
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
