@@ -1,0 +1,140 @@
+"""Coded object store benchmark: put/get throughput, degraded-read
+latency, and repair-queue drain time vs. bandwidth budget
+(DESIGN.md §10.5).
+
+Per k, a store with a physical ring larger than the code's n is filled
+with multi-stripe objects, then:
+
+  * **put / get MB/s** — wall time of the multi-object write workload
+    (one dispatched encode per object, whatever its stripe count) and
+    the all-systematic read-back;
+  * **degraded get** — a rack's worth of nodes is killed and the same
+    objects are read back bit-exactly: cold (first read pays the
+    cached-inverse solves) vs steady wall latency, plus MB/s;
+  * **repair drain** — the scheduler's queue after the rack failure is
+    drained under several per-tick symbol budgets: ticks + simulated
+    drain seconds per budget, repair symbols moved, and the ratio vs
+    the classical-RS re-download baseline (must stay < 1).
+
+Emits the repo-root perf-trajectory file ``BENCH_store.json`` via
+``benchmarks.run``.
+"""
+import time
+
+import numpy as np
+
+from repro.core.circulant import CodeSpec
+from repro.store import CodedObjectStore, RepairScheduler
+
+from benchmarks._timing import timeit
+
+
+def _fill(store, rng, n_objects: int, object_bytes: int) -> dict[str, bytes]:
+    objs = {}
+    for i in range(n_objects):
+        key = f"obj{i:03d}"
+        objs[key] = rng.integers(0, 256, object_bytes,
+                                 dtype=np.uint8).tobytes()
+        store.put(key, objs[key])
+    return objs
+
+
+def _make(spec, stripe_symbols: int, extra_nodes: int) -> CodedObjectStore:
+    return CodedObjectStore(spec, n_nodes=spec.n + extra_nodes,
+                            stripe_symbols=stripe_symbols)
+
+
+def run(ks=(4, 8), stripe_symbols: int = 1 << 12, n_objects: int = 8,
+        object_bytes: int = 1 << 20, extra_nodes: int = 4,
+        budgets_stripes=(1, 4, 16), quiet=False) -> list[dict]:
+    rows = []
+    for k in ks:
+        spec = CodeSpec.make(k, 257)
+        rng = np.random.default_rng(0)
+        total_mb = n_objects * object_bytes / 2**20
+
+        store = _make(spec, stripe_symbols, extra_nodes)
+        # warm-up: one throwaway put compiles the encode dispatch so the
+        # timed loop measures steady-state write throughput
+        store.put("_warmup", bytes(object_bytes))
+        store.delete("_warmup")
+        t0 = time.perf_counter()
+        objs = _fill(store, rng, n_objects, object_bytes)
+        put_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for key, ref in objs.items():
+            assert store.get(key) == ref
+        get_s = time.perf_counter() - t0
+
+        # ---- kill a rack, read everything back degraded
+        victims = store.layout.nodes_in(0)
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        for v in victims:
+            store.fail_node(v)
+        store.code.repair.decode_cache.clear()
+        t0 = time.perf_counter()
+        for key, ref in objs.items():
+            assert store.get(key) == ref
+        deg_cold_s = time.perf_counter() - t0
+        deg_steady_s = timeit(
+            lambda: [store.get(key) for key in objs], reps=1)
+
+        # ---- drain the repair queue under different tick budgets
+        queue_symbols = sum(len(store.lost_code_nodes(key, t)) * 2 * store.S
+                            for key, t in store.stripe_refs())
+        drains = []
+        for bs in budgets_stripes:
+            st2 = _make(spec, stripe_symbols, extra_nodes)
+            _fill(st2, np.random.default_rng(0), n_objects, object_bytes)
+            sc2 = RepairScheduler(st2)
+            st2.subscribe(sc2.on_event)
+            for v in st2.layout.nodes_in(0):
+                st2.fail_node(v)
+            budget = bs * 2 * spec.k * st2.S      # ~bs full-decode repairs
+            t0 = time.perf_counter()
+            rep = sc2.drain_all(budget_symbols=budget)
+            wall = time.perf_counter() - t0
+            assert st2.verify()
+            drains.append({
+                "budget_symbols_per_tick": budget,
+                "ticks": rep.ticks,
+                "drain_time_s": round(rep.drain_time_s, 6),
+                "wall_s": round(wall, 4),
+                "repaired_stripes": rep.repaired_stripes,
+                "repaired_shares": rep.repaired_shares,
+                "symbols_moved": rep.symbols_moved,
+                "rs_baseline_symbols": rep.rs_baseline_symbols,
+                "ratio_vs_rs": round(rep.ratio_vs_rs, 4),
+                "batch_calls": rep.batch_calls,
+                "decode_calls": rep.decode_calls,
+            })
+        row = {
+            "k": k, "n": spec.n, "n_nodes": store.n_nodes,
+            "n_racks": store.layout.n_racks,
+            "stripe_symbols": store.S,
+            "objects": n_objects, "object_mb": object_bytes / 2**20,
+            "put_mbps": round(total_mb / put_s, 2),
+            "get_mbps": round(total_mb / get_s, 2),
+            "degraded_get": {
+                "nodes_killed": len(victims),
+                "cold_s": round(deg_cold_s, 4),
+                "steady_s": round(deg_steady_s, 4),
+                "steady_mbps": round(total_mb / deg_steady_s, 2),
+            },
+            "repair_queue_symbols": queue_symbols,
+            "drain": drains,
+        }
+        rows.append(row)
+        if not quiet:
+            d0 = drains[0]
+            print(f"[store] k={k} n_nodes={store.n_nodes}: "
+                  f"put {row['put_mbps']} MB/s, get {row['get_mbps']} MB/s, "
+                  f"degraded steady {row['degraded_get']['steady_mbps']} MB/s; "
+                  f"drain@{d0['budget_symbols_per_tick']} sym/tick: "
+                  f"{d0['ticks']} ticks, ratio_vs_rs={d0['ratio_vs_rs']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

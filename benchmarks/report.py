@@ -1,7 +1,9 @@
 """Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
-dry-run artifacts.  Run after (re-)running repro.launch.dryrun:
+dry-run artifacts, and the one-table ``BENCH_*.json`` summary the CI
+bench-smoke job prints.  Run after (re-)running repro.launch.dryrun:
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+    PYTHONPATH=src python -m benchmarks.report --bench   # BENCH_* summary
 """
 import json
 import pathlib
@@ -12,6 +14,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 from benchmarks import roofline
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "dryrun_results"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def fmt_bytes(b):
@@ -56,6 +59,60 @@ def roofline_table(mesh: str) -> str:
     return "\n".join(out)
 
 
+# ------------------------------------------------- BENCH_*.json summary
+def _bench_headline(stem: str, rec) -> str:
+    """One-line headline per trajectory file; unknown shapes degrade to a
+    key listing instead of crashing the CI summary."""
+    try:
+        if stem == "BENCH_encode":
+            r = rec[-1]
+            return (f"k={r['k']} circulant {r['circulant_mbps']} MB/s "
+                    f"({r.get('speedup_vs_interpret', '?')}x vs interpret)")
+        if stem == "BENCH_checkpoint":
+            r = rec[-1]
+            return (f"k={r['k']} save {r['save_mbps']} MB/s, regenerate "
+                    f"reads {r['restore']['regenerate']['frac_of_stored']} "
+                    f"of stored")
+        if stem == "BENCH_repair":
+            r = rec["regeneration"][-1]
+            bw = rec["repair_bandwidth"][-1]
+            return (f"k={r['k']} fused {r['speedup_fused_vs_unfused']}x vs "
+                    f"unfused; bandwidth saving vs EC "
+                    f"{bw['saving_vs_ec']:.3f}")
+        if stem == "BENCH_cluster":
+            ratios = [s["repair_ratio_vs_rs"] for r in rec
+                      for s in r["scenarios"]
+                      if s["repair_ratio_vs_rs"] is not None]
+            worst = max(ratios) if ratios else "n/a (no repair bytes)"
+            lat = rec[-1]["degraded_read_latency"]["steady_s"]
+            return (f"worst repair ratio vs RS {worst}; degraded read "
+                    f"{lat * 1e3:.2f} ms steady")
+        if stem == "BENCH_store":
+            r = rec[-1]
+            d = r["drain"][0]
+            return (f"k={r['k']} put {r['put_mbps']} / get {r['get_mbps']} "
+                    f"MB/s; drain {d['ticks']} ticks @ "
+                    f"{d['budget_symbols_per_tick']} sym/tick, ratio_vs_rs "
+                    f"{d['ratio_vs_rs']}")
+    except (KeyError, IndexError, TypeError) as e:
+        return f"(unreadable: {type(e).__name__}: {e})"
+    keys = list(rec) if isinstance(rec, dict) else f"{len(rec)} rows"
+    return f"(unregistered trajectory file: {keys})"
+
+
+def bench_table() -> str:
+    """Markdown summary of every repo-root BENCH_*.json — the one table
+    the CI bench-smoke job prints after the fast sweep."""
+    out = ["| trajectory file | headline |", "|---|---|"]
+    files = sorted(REPO_ROOT.glob("BENCH_*.json"))
+    if not files:
+        return "(no repo-root BENCH_*.json found — run benchmarks.run first)"
+    for f in files:
+        rec = json.loads(f.read_text())
+        out.append(f"| `{f.name}` | {_bench_headline(f.stem, rec)} |")
+    return "\n".join(out)
+
+
 def refresh_dynamics():
     """Recompute every artifact's `dynamic` block from its stored .hlo.gz —
     lets analyzer improvements apply without recompiling 66 cells."""
@@ -81,6 +138,10 @@ def refresh_dynamics():
 def main():
     if "--refresh" in sys.argv:
         refresh_dynamics()
+        return
+    if "--bench" in sys.argv:
+        print("### Benchmark trajectory (repo-root BENCH_*.json)\n")
+        print(bench_table())
         return
     print("<!-- generated by benchmarks/report.py -->")
     print("\n### Dry-run ledger\n")

@@ -4,8 +4,10 @@ plus the roofline report over the dry-run artifacts.
     PYTHONPATH=src python -m benchmarks.run [--fast] [--quiet]
 
 Emits the repo-root perf-trajectory files BENCH_encode.json,
-BENCH_checkpoint.json, BENCH_repair.json and BENCH_cluster.json, and
-prints ``name,us_per_call,derived`` CSV rows at the end.
+BENCH_checkpoint.json, BENCH_repair.json, BENCH_cluster.json and
+BENCH_store.json, and prints ``name,us_per_call,derived`` CSV rows at
+the end.  Unknown files under results/ (superseded artifacts, benches
+missing from KNOWN_RESULTS) fail the run before any sweep starts.
 """
 import argparse
 import json
@@ -17,10 +19,29 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks import (bench_checkpoint, bench_cluster,
                         bench_encode_throughput, bench_field_size,
-                        bench_regeneration, bench_repair_bandwidth, roofline)
+                        bench_regeneration, bench_repair_bandwidth,
+                        bench_store, roofline)
 
 OUT = pathlib.Path(__file__).resolve().parent / "results"
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Every file benchmarks/ is allowed to leave under results/.  A result
+# file not in this set is either a superseded artifact that should have
+# been deleted (the field_scaling.json case) or a new bench that forgot
+# to register here — both fail the run loudly instead of silently
+# shipping stale JSON.
+KNOWN_RESULTS = {"checkpoint", "cluster", "encode_throughput", "field_size",
+                 "regeneration", "repair_bandwidth", "roofline", "store"}
+
+
+def check_results_dir() -> None:
+    unknown = sorted(p.name for p in OUT.glob("*.json")
+                     if p.stem not in KNOWN_RESULTS)
+    if unknown:
+        raise SystemExit(
+            f"benchmarks/results/ contains unknown result file(s): "
+            f"{unknown}.  Delete superseded artifacts or register new "
+            f"benches in benchmarks.run.KNOWN_RESULTS.")
 
 
 def main() -> None:
@@ -31,6 +52,7 @@ def main() -> None:
     args = ap.parse_args()
     quiet = args.quiet
     OUT.mkdir(exist_ok=True)
+    check_results_dir()
     csv_rows = [("name", "us_per_call", "derived")]
 
     # the regeneration timing section runs FIRST: its fused-vs-unfused
@@ -68,10 +90,12 @@ def main() -> None:
     t0 = time.perf_counter()
     rows = bench_field_size.run(ks=(2, 3) if args.fast else (2, 3, 4, 5),
                                 quiet=quiet)
-    if not args.fast:
-        scaling = bench_field_size.scaling_limit()
-        (OUT / "field_scaling.json").write_text(json.dumps(scaling, indent=1))
-    (OUT / "field_size.json").write_text(json.dumps(rows, indent=1))
+    # the scaling-limit sweep lives INSIDE field_size.json (it used to be
+    # a separate field_scaling.json, now superseded — KNOWN_RESULTS
+    # rejects the old file if it reappears)
+    scaling = None if args.fast else bench_field_size.scaling_limit(quiet=quiet)
+    (OUT / "field_size.json").write_text(json.dumps(
+        {"rows": rows, "scaling_limit": scaling}, indent=1))
     csv_rows.append(("field_size",
                      f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
                      f"min_field_k2={rows[0]['min_field']}"))
@@ -116,6 +140,20 @@ def main() -> None:
                      f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
                      f"worst_repair_ratio={worst_ratio};deg_read_ms="
                      f"{rows[-1]['degraded_read_latency']['steady_s']*1e3:.2f}"))
+
+    print("== object store: put/get, degraded reads, repair drain ====")
+    t0 = time.perf_counter()
+    rows = bench_store.run(
+        ks=(4,) if args.fast else (4, 8),
+        stripe_symbols=(1 << 10 if args.fast else 1 << 12),
+        n_objects=(4 if args.fast else 8),
+        object_bytes=(1 << 17 if args.fast else 1 << 20), quiet=quiet)
+    (OUT / "store.json").write_text(json.dumps(rows, indent=1))
+    (REPO_ROOT / "BENCH_store.json").write_text(json.dumps(rows, indent=1))
+    csv_rows.append(("store",
+                     f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
+                     f"put_mbps={rows[-1]['put_mbps']};"
+                     f"drain_ratio_vs_rs={rows[-1]['drain'][0]['ratio_vs_rs']}"))
 
     print("== roofline (dry-run artifacts) ===========================")
     t0 = time.perf_counter()

@@ -27,6 +27,12 @@ stream-tile pipeline (tiles bounded by ``save_tile_symbols``) through the
 fused repair engine, multi-failure repair produces all lost pairs from one
 decode matmul, and ``scrub(step)`` is a degraded-read pass that re-derives
 every node pair through the batched engine and flags inconsistencies.
+
+Store-backed mode (``MSRCheckpointer(None, store=...)``, DESIGN.md §10.4):
+redundancy is delegated to a coded object store — one object per pytree
+leaf group plus a manifest — and restores ride the store's transparent
+degraded reads; all byte metering funnels through ONE ``_read_block``
+accounting path shared with directory mode.
 """
 from __future__ import annotations
 
@@ -95,22 +101,88 @@ class ScrubReport:
         return not self.mismatched_nodes
 
 
+class _MeteredReader:
+    """The single byte-accounting funnel for checkpoint reads.
+
+    Every node-file and store-object read — restore, repair_node, scrub,
+    directory- or store-backed — submits through here and lands through
+    :meth:`take`, so there is exactly ONE place bytes_read accumulates
+    (the meters can't drift apart across the three read paths, which is
+    how the pre-PR-4 duplication bug class arose).
+    """
+
+    def __init__(self, ckpt: "MSRCheckpointer", ex: ThreadPoolExecutor):
+        self._ckpt = ckpt
+        self._ex = ex
+        self.bytes_read = 0
+
+    def submit(self, ref) -> Future:
+        """Async read of a node file path or a store object key."""
+        return self._ex.submit(self._ckpt._read_block, ref)
+
+    def take(self, fut: Future) -> np.ndarray:
+        """Land one read: returns the array, meters its bytes."""
+        arr, nbytes = fut.result()
+        self.bytes_read += nbytes
+        return arr
+
+
 class MSRCheckpointer:
-    def __init__(self, directory, spec: CodeSpec, *, matmul=None,
+    """MSR-coded checkpointing, directory- or store-backed.
+
+    Directory mode (default): one file pair per storage node per step,
+    encode/repair done here (module docstring above).
+
+    Store mode (``store=`` given, DESIGN.md §10.4): redundancy is
+    delegated to the coded object store — ``save`` puts one object per
+    pytree *leaf group* (consecutive leaves greedily packed up to
+    ``leaf_group_bytes``) plus a manifest object, and ``restore`` gets
+    them back through the store's transparent degraded-read path, so a
+    checkpoint stays restorable through node failures without the
+    checkpointer knowing which nodes died.  ``repair_node``/``scrub``
+    are directory-mode-only (the store's scheduler owns repair).
+    """
+
+    def __init__(self, directory, spec: Optional[CodeSpec] = None, *,
+                 matmul=None,
                  backend: Optional[str] = None, keep_last: int = 3,
                  save_tile_symbols: int = SAVE_TILE_SYMBOLS,
-                 io_workers: int = 4):
-        self.dir = pathlib.Path(directory)
+                 io_workers: int = 4, store=None,
+                 object_prefix: str = "ckpt",
+                 leaf_group_bytes: int = 1 << 20):
+        self._store = store
+        self._prefix = object_prefix.rstrip("/")
+        self.leaf_group_bytes = max(1, leaf_group_bytes)
+        if store is not None:
+            if directory is not None:
+                raise ValueError(
+                    "pass a directory OR a store, not both: store-backed "
+                    "checkpoints live entirely in the object store")
+            spec = spec or store.spec
+            if spec is not store.spec and spec != store.spec:
+                raise ValueError("spec disagrees with the store's code spec")
+        elif spec is None:
+            raise ValueError("directory mode needs an explicit CodeSpec")
         self.spec = spec
-        self.code = DoubleCirculantMSR(spec, matmul=matmul, backend=backend)
+        self.code = store.code if store is not None else \
+            DoubleCirculantMSR(spec, matmul=matmul, backend=backend)
         self.keep_last = keep_last
         self.save_tile_symbols = max(1, save_tile_symbols)
         self.io_workers = max(1, io_workers)
-        self.dir.mkdir(parents=True, exist_ok=True)
+        self.dir = None
+        if directory is not None:
+            self.dir = pathlib.Path(directory)
+            self.dir.mkdir(parents=True, exist_ok=True)
+        elif store is None:
+            raise ValueError("need a directory (or a store=)")
 
     # ------------------------------------------------------------------ paths
     def _step_dir(self, step: int) -> pathlib.Path:
         return self.dir / f"step_{step:06d}"
+
+    def _okey(self, step: int, name: str) -> str:
+        """Store-object key for one piece of a checkpoint step."""
+        return f"{self._prefix}/step_{step:06d}/{name}"
 
     def _node_files(self, step: int, i: int) -> tuple[pathlib.Path, pathlib.Path]:
         """(data_path, redundancy_path) for node v_i at `step`.
@@ -129,7 +201,48 @@ class MSRCheckpointer:
         np.savez(r_path, low=r_low, hi=r_hi)
 
     def steps(self) -> list[int]:
+        if self._store is not None:
+            pre = f"{self._prefix}/step_"
+            return sorted(int(key[len(pre):].split("/")[0])
+                          for key in self._store.keys()
+                          if key.startswith(pre)
+                          and key.endswith("/manifest"))
         return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+
+    # ------------------------------------------------------- store-backed save
+    def _leaf_groups(self, metas: list[dict]) -> list[tuple[int, int]]:
+        """Greedy (start_byte, end_byte) spans: consecutive leaves packed
+        until ``leaf_group_bytes`` (one oversized leaf still gets its own
+        group) — one store object per span."""
+        groups: list[tuple[int, int]] = []
+        start = off = 0
+        size = 0
+        for m in metas:
+            if size and size + m["nbytes"] > self.leaf_group_bytes:
+                groups.append((start, off))
+                start, size = off, 0
+            off += m["nbytes"]
+            size += m["nbytes"]
+        groups.append((start, off))
+        return groups
+
+    def _save_store(self, step: int, state: Any) -> dict:
+        payload, treedef, metas = placement.pytree_to_bytes(state)
+        tspec = placement.TreeSpec(treedef_repr=str(treedef), leaves=metas,
+                                   total_bytes=len(payload),
+                                   n_blocks=self.spec.n, block_symbols=0)
+        groups = self._leaf_groups(metas)
+        for gi, (lo, hi) in enumerate(groups):
+            self._store.put(self._okey(step, f"g{gi:04d}"), payload[lo:hi])
+        manifest = {
+            "step": step, "k": self.spec.k, "p": self.spec.p,
+            "c": list(self.spec.c), "tree": tspec.to_json(),
+            "n_groups": len(groups),
+        }
+        self._store.put(self._okey(step, "manifest"),
+                        json.dumps(manifest).encode())
+        self._gc()
+        return manifest
 
     # ------------------------------------------------------------------- save
     def save(self, step: int, state: Any) -> dict:
@@ -158,6 +271,8 @@ class MSRCheckpointer:
             The manifest written alongside the node files (code spec +
             tree metadata).
         """
+        if self._store is not None:
+            return self._save_store(step, state)
         n = self.spec.n
         blocks, treedef, tspec = placement.pytree_to_blocks(state, n, self.spec.p)
         d = self._step_dir(step)
@@ -202,21 +317,34 @@ class MSRCheckpointer:
     def _gc(self):
         steps = self.steps()
         for s in steps[: -self.keep_last]:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+            if self._store is not None:
+                pre = self._okey(s, "")
+                for key in self._store.keys():
+                    if key.startswith(pre):
+                        self._store.delete(key)
+            else:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # ------------------------------------------------------------- block I/O
-    def _read_block(self, path: pathlib.Path) -> tuple[np.ndarray, int]:
-        """One node file -> (int32 symbol block, bytes read).
+    def _read_block(self, ref) -> tuple[np.ndarray, int]:
+        """One read -> (array, bytes read) — BOTH backends.
 
-        ``.npz`` is a packed redundancy block (``gf.pack257``), anything
-        else a raw systematic byte block.  Shared by restore, repair_node
-        and scrub so the byte meters can't drift apart.
+        ``ref`` is a node-file path (directory mode: ``.npz`` is a packed
+        redundancy block via ``gf.pack257``, anything else a raw
+        systematic byte block) or a store-object key string (store mode:
+        the object's payload bytes, metered by the store's transfer
+        receipt — systematic or degraded, whatever the store served).
+        Every checkpoint read path funnels through here via
+        :class:`_MeteredReader` so the byte meters can't drift apart.
         """
-        if path.suffix == ".npz":
-            z = np.load(path)
+        if isinstance(ref, str):
+            res = self._store.get_ext(ref)
+            return np.frombuffer(res.obj, np.uint8), res.bytes_read
+        if ref.suffix == ".npz":
+            z = np.load(ref)
             low, hi = z["low"], z["hi"]
             return gf.unpack257(low, hi), low.nbytes + hi.nbytes
-        arr = np.load(path)
+        arr = np.load(ref)
         return arr.astype(np.int32), arr.nbytes
 
     # ---------------------------------------------------- tiled decode stages
@@ -280,6 +408,8 @@ class MSRCheckpointer:
         """
         if step is None:
             step = self.steps()[-1]
+        if self._store is not None:
+            return self._restore_store(template, step, failed_nodes)
         d = self._step_dir(step)
         manifest = json.loads((d / "manifest.json").read_text())
         tspec = placement.TreeSpec.from_json(manifest["tree"])
@@ -289,18 +419,11 @@ class MSRCheckpointer:
         if len(alive) < k:
             raise RuntimeError(f"unrecoverable: only {len(alive)} of n={n} "
                                f"nodes alive, need k={k}")
-        bytes_read = 0
         repaired: list[int] = []
 
         with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
-            def read_async(path: pathlib.Path) -> Future:
-                return ex.submit(self._read_block, path)
-
-            def result(fut: Future) -> np.ndarray:
-                nonlocal bytes_read
-                arr, nbytes = fut.result()
-                bytes_read += nbytes
-                return arr
+            reader = _MeteredReader(self, ex)
+            read_async, result = reader.submit, reader.take
 
             if not failed:
                 futs = [read_async(self._node_files(step, i)[0])
@@ -365,9 +488,48 @@ class MSRCheckpointer:
         total = 2 * n * tspec.block_symbols          # ~bytes (packed storage)
         report = RestoreReport(step=step, path=path,
                                failed_nodes=tuple(failed),
-                               bytes_read=bytes_read,
+                               bytes_read=reader.bytes_read,
                                bytes_total_stored=total,
                                repaired_nodes=tuple(repaired))
+        return state, report
+
+    def _restore_store(self, template: Any, step: int,
+                       failed_nodes: Sequence[int]) -> tuple[Any, RestoreReport]:
+        """Store-backed restore: get the leaf-group objects back through
+        the store's transparent read path (systematic when healthy, the
+        batched cached-inverse decode otherwise) and reassemble.
+
+        ``failed_nodes`` must be empty — which *store* nodes are dead is
+        the store's internal state, and repair is its scheduler's job,
+        not the checkpointer's.
+        """
+        if failed_nodes:
+            raise ValueError(
+                "store-backed restore takes no failed_nodes: the store "
+                "serves degraded reads transparently and its scheduler "
+                "owns repair (DESIGN.md §10.4)")
+        manifest_raw, mbytes = self._read_block(self._okey(step, "manifest"))
+        manifest = json.loads(bytes(manifest_raw))
+        tspec = placement.TreeSpec.from_json(manifest["tree"])
+        # store objects are in-memory: serial reads through the shared
+        # metering funnel (no I/O latency to hide with a pool)
+        with ThreadPoolExecutor(max_workers=1) as ex:
+            reader = _MeteredReader(self, ex)
+            reader.bytes_read += mbytes
+            futs = [reader.submit(self._okey(step, f"g{gi:04d}"))
+                    for gi in range(manifest["n_groups"])]
+            payload = b"".join(reader.take(f).tobytes() for f in futs)
+        leaves = placement.bytes_to_leaves(payload, tspec.leaves)
+        treedef = jax.tree_util.tree_structure(template)
+        state = jax.tree_util.tree_unflatten(treedef, leaves)
+        total = sum(
+            2 * self._store.n * st.n_stripes * st.stripe_symbols
+            for key in self._store.keys()
+            if key.startswith(self._okey(step, ""))
+            for st in (self._store.stat(key),))
+        report = RestoreReport(step=step, path="store", failed_nodes=(),
+                               bytes_read=reader.bytes_read,
+                               bytes_total_stored=total)
         return state, report
 
     # -------------------------------------------------------------- accounting
@@ -386,26 +548,30 @@ class MSRCheckpointer:
     def repair_node(self, step: int, node: int) -> int:
         """The newcomer protocol in isolation: rebuild node's (a, r) pair
         from d = k+1 reads (thread-pooled, fused tiled regenerate).
-        Returns bytes read (the measured gamma)."""
+        Returns bytes read (the measured gamma).  Directory mode only —
+        a store-backed checkpoint's nodes belong to the store's repair
+        scheduler."""
+        self._require_directory("repair_node")
         plan = self.code.repair_plan(node)
-        bytes_read = 0
         with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
-            fut_prev = ex.submit(self._read_block,
-                                 self._node_files(step, plan.prev_node)[1])
-            futs = [ex.submit(self._read_block, self._node_files(step, j)[0])
+            reader = _MeteredReader(self, ex)
+            fut_prev = reader.submit(self._node_files(step, plan.prev_node)[1])
+            futs = [reader.submit(self._node_files(step, j)[0])
                     for j in plan.next_nodes]
-            r_prev, nbytes = fut_prev.result()
-            bytes_read += nbytes
-            helpers = []
-            for f in futs:
-                arr, nbytes = f.result()
-                bytes_read += nbytes
-                helpers.append(arr)
+            r_prev = reader.take(fut_prev)
+            helpers = [reader.take(f) for f in futs]
         pair = self._regenerate_tiled(node, r_prev, np.stack(helpers))
         af, rf = self._node_files(step, node)
         low, hi = gf.pack257(pair[1])
         self._write_node_pair(af, rf, pair[0], low, hi)
-        return bytes_read
+        return reader.bytes_read
+
+    def _require_directory(self, op: str) -> None:
+        if self._store is not None:
+            raise RuntimeError(
+                f"{op} is directory-mode only: store-backed checkpoints "
+                f"delegate node repair/verification to the store's "
+                f"scheduler (DESIGN.md §10.4)")
 
     # ------------------------------------------------------------------ scrub
     def scrub(self, step: int) -> ScrubReport:
@@ -431,19 +597,16 @@ class MSRCheckpointer:
             its own node and possibly neighbours whose regeneration
             consumed it); ``clean`` is True when every pair verified.
         """
+        self._require_directory("scrub")
         n, k = self.spec.n, self.spec.k
-        bytes_read = 0
         with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
-            futs_a = [ex.submit(self._read_block, self._node_files(step, i)[0])
+            reader = _MeteredReader(self, ex)
+            futs_a = [reader.submit(self._node_files(step, i)[0])
                       for i in range(1, n + 1)]
-            futs_r = [ex.submit(self._read_block, self._node_files(step, i)[1])
+            futs_r = [reader.submit(self._node_files(step, i)[1])
                       for i in range(1, n + 1)]
-            rows_a, rows_r = [], []
-            for futs, rows in ((futs_a, rows_a), (futs_r, rows_r)):
-                for f in futs:
-                    arr, nbytes = f.result()
-                    bytes_read += nbytes
-                    rows.append(arr)
+            rows_a = [reader.take(f) for f in futs_a]
+            rows_r = [reader.take(f) for f in futs_r]
         data, red = np.stack(rows_a), np.stack(rows_r)
         nodes = list(range(1, n + 1))
         prev = np.asarray([self.code.repair_plan(i).prev_node - 1
@@ -465,4 +628,4 @@ class MSRCheckpointer:
                       flag)
         return ScrubReport(step=step, nodes_checked=n,
                            mismatched_nodes=tuple(sorted(mismatched)),
-                           bytes_read=bytes_read)
+                           bytes_read=reader.bytes_read)

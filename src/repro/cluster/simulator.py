@@ -116,6 +116,20 @@ class ClusterSimulator:
         self.slow = [1.0] * self.n
         self.metrics = MetricsLog()
         self.log: list[dict] = []
+        self._subscribers: list = []
+
+    # --------------------------------------------------------------- events
+    def subscribe(self, fn) -> None:
+        """Register ``fn(event)`` to receive every Event the simulator
+        processes (scenario events AND interactively-injected failures).
+        The store layer's `RepairScheduler.on_event` subscribes here so
+        one failure feed can drive both the simulator's own single-stripe
+        repair and the object store's repair queue (DESIGN.md §10.3)."""
+        self._subscribers.append(fn)
+
+    def _notify(self, event: Event) -> None:
+        for fn in self._subscribers:
+            fn(event)
 
     # ------------------------------------------------------------- node view
     def _check_node(self, node: int) -> int:
@@ -235,6 +249,7 @@ class ClusterSimulator:
         self.node_a[node - 1] = 0
         self.node_r[node - 1] = 0
         self.log.append({"t": t, "event": "fail", "node": node})
+        self._notify(Event(t=t, kind="fail", node=node))
 
     def repair_now(self, t: float = 0.0) -> bool:
         """Repair every FAILED node immediately (see :meth:`_repair_failed`);
@@ -433,6 +448,10 @@ class ClusterSimulator:
                 self.slow[e.node - 1] = e.factor
             elif e.kind == "read":
                 self.read_block(e.block % self.n, t)
+            # notify AFTER the event is applied, so subscribers observe
+            # the same post-event state whichever injection path (run
+            # loop or fail_node) delivered the failure
+            self._notify(e)
         return self.report(scenario)
 
     def report(self, scenario: Scenario) -> ScenarioReport:

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import numpy as np
@@ -112,6 +112,39 @@ def rack_layout(n_nodes: int, n_racks: int) -> RackLayout:
                       racks=tuple(i % n_racks for i in range(n_nodes)))
 
 
+def rotate_placement(layout: RackLayout, n_shares: int,
+                     stripe: int) -> tuple[int, ...]:
+    """Physical nodes (1-indexed) holding a stripe's ``n_shares`` shares.
+
+    Share j of stripe t lands on node ``(t + j) mod n_nodes + 1``: stripes
+    rotate around the node ring so load (and, after a node failure, the
+    per-stripe loss count) spreads evenly, and because ``rack_layout``
+    round-robins rack ids, any window of consecutive nodes also spreads
+    across racks — roughly ``ceil(n_shares / n_racks)`` shares of one
+    stripe per failure domain, up to one more when the window wraps a
+    ring whose size is not a multiple of ``n_racks``.  The binding
+    invariant is the one the stripe manager CHECKS at construction:
+    ``max_shares_per_rack`` stays within the code's n - k erasure budget
+    for every rotation phase (DESIGN.md §10).
+    """
+    if n_shares > layout.n_nodes:
+        raise ValueError(f"cannot place {n_shares} distinct shares on "
+                         f"{layout.n_nodes} nodes")
+    return tuple((stripe + j) % layout.n_nodes + 1 for j in range(n_shares))
+
+
+def max_shares_per_rack(layout: RackLayout,
+                        placement: Sequence[int]) -> int:
+    """Largest number of a stripe's shares co-located in one rack — a
+    correlated rack loss erases exactly this many shares of the stripe,
+    so the store requires it to stay within the code's n - k budget."""
+    counts: dict[int, int] = {}
+    for node in placement:
+        r = layout.rack_of(node)
+        counts[r] = counts.get(r, 0) + 1
+    return max(counts.values()) if counts else 0
+
+
 def pytree_to_bytes(tree: Any) -> tuple[bytes, jax.tree_util.PyTreeDef, list[dict]]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     metas, chunks = [], []
@@ -156,5 +189,6 @@ def blocks_to_pytree(blocks: np.ndarray, treedef: jax.tree_util.PyTreeDef,
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-__all__ = ["TreeSpec", "RackLayout", "rack_layout", "pytree_to_bytes",
-           "bytes_to_leaves", "pytree_to_blocks", "blocks_to_pytree"]
+__all__ = ["TreeSpec", "RackLayout", "rack_layout", "rotate_placement",
+           "max_shares_per_rack", "pytree_to_bytes", "bytes_to_leaves",
+           "pytree_to_blocks", "blocks_to_pytree"]

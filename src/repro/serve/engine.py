@@ -107,6 +107,15 @@ class CodedReadServer:
         return self.sim.metrics
 
 
+def _read_coded_params(store, key: Optional[str]):
+    """One param-materialization path for both storage layers: a coded
+    object store (``key`` names the pytree object) or a CodedReadServer
+    (``key=None``, the single-stripe cluster read)."""
+    if key is not None:
+        return store.get_pytree(key)
+    return store.read_state()
+
+
 # ------------------------------------------------------------- LLM serving
 @dataclasses.dataclass
 class Request:
@@ -150,20 +159,25 @@ class ServingEngine:
             lambda p, b: model.prefill(p, b, max_len=max_len, q_chunk=None))
 
     @classmethod
-    def from_coded_store(cls, model: Model, store: CodedReadServer,
+    def from_coded_store(cls, model: Model, store, *, key: Optional[str] = None,
                          **engine_kwargs) -> "ServingEngine":
         """Materialize parameters out of MSR-coded storage and serve.
 
-        The read is systematic when the cluster is healthy and falls back
-        to the one-matmul degraded decode per missing node otherwise —
-        the engine itself cannot tell the difference (bit-exact either
-        way)."""
-        return cls(model, store.read_state(), **engine_kwargs)
+        ``store`` is either a :class:`CodedReadServer` (single-stripe
+        cluster; ``key`` omitted) or a `repro.store.CodedObjectStore`
+        holding the parameters as a pytree object under ``key``
+        (``put_pytree``, DESIGN.md §10.4).  Either way the read is
+        systematic when the storage is healthy and falls back to the
+        one-matmul degraded decode for whatever is missing — the engine
+        itself cannot tell the difference (bit-exact either way)."""
+        return cls(model, _read_coded_params(store, key), **engine_kwargs)
 
-    def reload_params(self, store: CodedReadServer) -> None:
+    def reload_params(self, store, *, key: Optional[str] = None) -> None:
         """Re-read parameters from coded storage in place (e.g. after the
-        cluster repaired a failed node, or to pick up a new checkpoint)."""
-        self.params = store.read_state()
+        cluster repaired a failed node, or to pick up a new checkpoint).
+        Accepts the same ``store``/``key`` pairs as
+        :meth:`from_coded_store`."""
+        self.params = _read_coded_params(store, key)
 
     # ----------------------------------------------------------- one batch
     def generate(self, prompts: np.ndarray, max_new_tokens: int,

@@ -1,0 +1,25 @@
+"""Coded object store: multi-stripe MSR storage with put/get/delete/stat,
+transparent degraded reads, and a prioritized background repair
+scheduler (DESIGN.md §10).
+
+The layer that turns the single-stripe engines (encode dispatch, fused
+repair, decode-inverse cache) into a multi-object storage subsystem:
+
+* `stripes.StripeManager` — chunk arbitrary objects into fixed stripes,
+  encode all stripes in one dispatched matmul, place shares rack-aware
+  on a physical node ring;
+* `object_store.CodedObjectStore` — the front-end: systematic fast-path
+  reads, one cached-inverse decode matmul per failure pattern for
+  everything missing;
+* `scheduler.RepairScheduler` — failure-event-driven repair queue,
+  priority = remaining redundancy, single-loss stripes coalesced into
+  one `regenerate_batch`, throttled by a link-bandwidth budget.
+"""
+from .object_store import (FAILED, UP, CodedObjectStore, GetResult,
+                           ObjectStat, StoreMetrics)
+from .scheduler import DrainReport, RepairScheduler
+from .stripes import StripeManager, StripeMap
+
+__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreMetrics",
+           "RepairScheduler", "DrainReport", "StripeManager", "StripeMap",
+           "UP", "FAILED"]

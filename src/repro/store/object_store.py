@@ -1,0 +1,519 @@
+"""Coded object store front-end: put / get / delete / stat over MSR
+stripes (DESIGN.md §10).
+
+The store owns a ring of physical nodes (possibly more than the code's
+n = 2k) and, per stripe, places the n node shares — pairs
+(a_{j-1}, r_j) — via the rotating rack-aware placement of
+`store.stripes.StripeManager`.  Every byte it serves is a real field
+computation over really-stored symbols, so failures are verifiable
+bit-exactly, exactly like the cluster simulator one layer down.
+
+Read paths (DESIGN.md §10.2):
+
+* **systematic fast path** — a stripe whose n data shares are all
+  present is served as raw bytes, zero field operations;
+* **transparent degraded read** — stripes with missing data blocks are
+  grouped by (helper subset, missing set) and ALL missing blocks of a
+  group come out of ONE cached-inverse decode matmul: the per-stripe
+  (2k, S) downloads concatenate along the symbol axis, so a get that
+  spans a thousand stripes after a node failure still costs one
+  `gf.gauss_inverse` (LRU-cached) and one dispatched matmul per
+  failure pattern.
+
+Failures: ``fail_node`` wipes a node's shares and notifies subscribers
+(the background `RepairScheduler` enqueues affected stripes);
+``replace_node`` brings up an empty newcomer the scheduler rebuilds
+shares onto.  A get never blocks on repair — it degrades while the
+queue drains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import baselines, placement
+from repro.core.circulant import CodeSpec
+from repro.core.msr import DoubleCirculantMSR
+from repro.cluster.events import Event
+from repro.cluster.metrics import LinkModel, MetricsLog
+
+from .stripes import StripeManager, StripeMap
+
+UP, FAILED = "up", "failed"
+
+
+class StoreMetrics(MetricsLog):
+    """Cluster-layer accounting plus the store's write-side counters."""
+
+    def __init__(self):
+        super().__init__()
+        self.puts_total = 0
+        self.put_symbols = 0          # payload symbols accepted
+        self.put_stored_symbols = 0   # share symbols written (2x payload)
+
+    def record_put(self, payload_symbols: int, stored_symbols: int) -> None:
+        self.puts_total += 1
+        self.put_symbols += payload_symbols
+        self.put_stored_symbols += stored_symbols
+
+    def summary(self) -> dict:
+        out = super().summary()
+        out["puts"] = {"total": self.puts_total,
+                       "payload_symbols": self.put_symbols,
+                       "stored_symbols": self.put_stored_symbols}
+        return out
+
+
+@dataclasses.dataclass
+class ObjectStat:
+    """Metadata for one stored object (``stat`` result).
+
+    ``dtype``/``shape`` are set for array objects so ``get`` returns the
+    original array type; ``meta`` carries caller extras (e.g. the
+    checkpointer's tree spec).
+    """
+    key: str
+    size_bytes: int
+    n_stripes: int
+    stripe_symbols: int
+    dtype: Optional[str] = None
+    shape: Optional[tuple[int, ...]] = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class GetResult:
+    """``get_ext`` receipt: the object plus what serving it cost."""
+    obj: Any
+    bytes_read: int
+    degraded_stripes: int
+    latency_s: float
+
+
+class CodedObjectStore:
+    """Multi-object MSR storage over a physical node ring.
+
+    Parameters
+    ----------
+    spec : CodeSpec
+        The double circulant code every stripe is encoded with.
+    n_nodes : int, optional
+        Physical ring size (default the code's n = 2k; larger rings
+        spread stripes so one node failure touches only a fraction of
+        them — that is what makes repair *priorities* meaningful).
+    n_racks : int, optional
+        Failure domains; default the fewest racks keeping any stripe's
+        single-rack loss within n - k (`events.default_layout` formula).
+    stripe_symbols : int
+        Data-block size S per stripe.
+    link : LinkModel, optional
+        Deterministic service-time model for read/repair latencies.
+    backend : str, optional
+        Pin a GF dispatch backend for encode/decode.
+
+    Examples
+    --------
+    >>> from repro.core.circulant import CodeSpec
+    >>> store = CodedObjectStore(CodeSpec.make(2, 257), stripe_symbols=16)
+    >>> _ = store.put("hello", b"payload bytes")
+    >>> store.get("hello")
+    b'payload bytes'
+    """
+
+    def __init__(self, spec: CodeSpec, *, n_nodes: Optional[int] = None,
+                 n_racks: Optional[int] = None, stripe_symbols: int = 1 << 12,
+                 link: Optional[LinkModel] = None,
+                 backend: Optional[str] = None,
+                 code: Optional[DoubleCirculantMSR] = None):
+        self.spec = spec
+        self.k, self.n, self.p = spec.k, spec.n, spec.p
+        self.n_nodes = int(n_nodes if n_nodes is not None else spec.n)
+        if self.n_nodes < spec.n:
+            raise ValueError(f"need >= n = {spec.n} physical nodes, "
+                             f"got {self.n_nodes}")
+        if n_racks is None:
+            n_racks = self._default_racks(spec, self.n_nodes)
+        self.layout = placement.rack_layout(self.n_nodes, n_racks)
+        self.stripes = StripeManager(spec, self.layout,
+                                     stripe_symbols=stripe_symbols,
+                                     code=code, backend=backend)
+        self.code = self.stripes.code
+        self.S = self.stripes.stripe_symbols
+        self.link = link or LinkModel()
+        self.state = [UP] * self.n_nodes
+        # _shares[phys-1][(key, stripe)] = [code_node, a_block, r_block]
+        self._shares: list[dict[tuple[str, int], list]] = \
+            [dict() for _ in range(self.n_nodes)]
+        self._stats: dict[str, ObjectStat] = {}
+        self._next_stripe = 0          # rotation phase for the next put
+        self.metrics = StoreMetrics()
+        self._subscribers: list[Callable[[Event], None]] = []
+
+    @staticmethod
+    def _default_racks(spec: CodeSpec, n_nodes: int) -> int:
+        """Fewest racks (>= 2) whose rotating share windows stay within
+        the n - k budget on THIS ring.  The `events.default_layout`
+        formula ceil(n / (n-k)) is only exact when the window never
+        wraps (n_nodes a multiple of the rack count); wrapping can put
+        one extra share in a rack, so candidates are checked against
+        every rotation phase and bumped until safe — n_nodes racks
+        (one node per rack) always terminates the search."""
+        budget = spec.n - spec.k
+        for cand in range(max(2, -(-spec.n // max(1, budget))),
+                          n_nodes + 1):
+            layout = placement.rack_layout(n_nodes, cand)
+            worst = max(placement.max_shares_per_rack(
+                layout, placement.rotate_placement(layout, spec.n, t))
+                for t in range(n_nodes))
+            if worst <= budget:
+                return cand
+        return n_nodes
+
+    # ------------------------------------------------------------ node state
+    def subscribe(self, fn: Callable[[Event], None]) -> None:
+        """Register a callback for store events (``fail`` on node loss) —
+        the repair scheduler's feed, same Event type the cluster
+        simulator publishes."""
+        self._subscribers.append(fn)
+
+    def _notify(self, event: Event) -> None:
+        for fn in self._subscribers:
+            fn(event)
+
+    def is_up(self, node: int) -> bool:
+        return self.state[node - 1] == UP
+
+    def up_nodes(self) -> list[int]:
+        return [i + 1 for i in range(self.n_nodes) if self.state[i] == UP]
+
+    def fail_node(self, node: int, t: float = 0.0) -> None:
+        """Node crash: every share it held is lost; subscribers (the
+        repair scheduler) are notified with a ``fail`` event."""
+        self._check_node(node)
+        self.state[node - 1] = FAILED
+        self._shares[node - 1].clear()
+        self._notify(Event(t=t, kind="fail", node=node))
+
+    def replace_node(self, node: int, t: float = 0.0) -> None:
+        """An empty newcomer takes the failed node's slot: UP, no shares.
+        Subscribers see an ``up`` event so the scheduler re-protects any
+        share the slot should hold but doesn't — including shares that
+        were *lost at birth* (``put`` while the node was FAILED), whose
+        loss never produced a ``fail`` event."""
+        self._check_node(node)
+        self.state[node - 1] = UP
+        self._notify(Event(t=t, kind="up", node=node))
+
+    def _check_node(self, node: int) -> int:
+        if not 1 <= node <= self.n_nodes:
+            raise ValueError(f"node {node} out of range 1..{self.n_nodes}")
+        return node
+
+    # -------------------------------------------------------------- put path
+    def put(self, key: str, obj: Any, *, meta: Optional[dict] = None,
+            ) -> ObjectStat:
+        """Store ``obj`` (bytes or numpy array) under ``key``.
+
+        The object is striped, encoded in one dispatched matmul
+        (`StripeManager.encode`) and its 2n blocks per stripe placed on
+        the ring.  Shares whose placed node is FAILED are simply absent
+        (lost-at-birth) — a later ``get`` degrades around them and the
+        scheduler can rebuild them once the slot is replaced.
+        Re-putting an existing key overwrites it.
+        """
+        if key in self._stats:
+            self.delete(key)
+        dtype = shape = None
+        if isinstance(obj, np.ndarray):
+            dtype, shape = str(obj.dtype), tuple(obj.shape)
+            payload = obj.tobytes()
+        elif isinstance(obj, (bytes, bytearray, memoryview)):
+            payload = bytes(obj)
+        else:
+            raise TypeError(f"store objects are bytes or numpy arrays, "
+                            f"got {type(obj).__name__}")
+        blocks, smap = self.stripes.chunk(payload)
+        red = self.stripes.encode(blocks)
+        base = self._next_stripe
+        self._next_stripe += smap.n_stripes
+        for t in range(smap.n_stripes):
+            pl = self.stripes.placement(base + t)
+            for j, phys in enumerate(pl):
+                if self.is_up(phys):
+                    self._shares[phys - 1][(key, t)] = \
+                        [j + 1, blocks[t, j].copy(), red[t, j].copy()]
+        stat = ObjectStat(key=key, size_bytes=smap.orig_bytes,
+                          n_stripes=smap.n_stripes, stripe_symbols=self.S,
+                          dtype=dtype, shape=shape, meta=dict(meta or {}))
+        stat.meta["_base_stripe"] = base
+        self._stats[key] = stat
+        self.metrics.record_put(smap.n_stripes * self.n * self.S,
+                                2 * smap.n_stripes * self.n * self.S)
+        return stat
+
+    # -------------------------------------------------------------- get path
+    def get(self, key: str) -> Any:
+        """The stored object, bit-exact, systematic when healthy and
+        transparently degraded otherwise (see :meth:`get_ext`)."""
+        return self.get_ext(key).obj
+
+    def get_ext(self, key: str) -> GetResult:
+        """Read with a receipt (bytes read, degraded stripes, latency).
+
+        All missing data blocks of the request are batched: stripes are
+        grouped by (helper subset, missing set) and each group is decoded
+        in ONE cached-inverse matmul over the symbol-axis-concatenated
+        downloads (DESIGN.md §10.2).
+
+        Raises
+        ------
+        KeyError
+            Unknown key.
+        RuntimeError
+            Some stripe has fewer than k shares left (data loss).
+        """
+        stat = self.stat(key)
+        base = stat.meta["_base_stripe"]
+        blocks = np.zeros((stat.n_stripes, self.n, self.S), np.int32)
+        # group degraded stripes by failure pattern
+        groups: dict[tuple, list[int]] = {}
+        latency = 0.0
+        bytes_read = 0
+        for t in range(stat.n_stripes):
+            pl = self.stripes.placement(base + t)
+            present = self._present_code_nodes(key, t, pl)
+            missing = tuple(j for j in range(self.n)
+                            if j + 1 not in present)
+            if not missing:
+                for j in range(self.n):
+                    blocks[t, j] = self._shares[pl[j] - 1][(key, t)][1]
+                lat = self.link.fetch_s(self.S)
+                self.metrics.record_read("systematic", lat, self.n * self.S)
+                latency = max(latency, lat)
+                bytes_read += self.n * self.S
+                continue
+            if len(present) < self.k:
+                self.metrics.record_read("failed", 0.0, 0)
+                raise RuntimeError(
+                    f"data loss: stripe {t} of {key!r} has only "
+                    f"{len(present)} of k={self.k} shares")
+            helpers = tuple(sorted(present)[: self.k])
+            # present data blocks are still served systematically — and
+            # billed as such, one record per block, matching the cluster
+            # simulator's read_all convention (the 2kS degraded billing
+            # below covers only the decode download set)
+            sys_lat = self.link.fetch_s(self.S)
+            for j in range(self.n):
+                if j + 1 in present:
+                    blocks[t, j] = self._shares[pl[j] - 1][(key, t)][1]
+                    self.metrics.record_read("systematic", sys_lat, self.S)
+                    bytes_read += self.S
+            latency = max(latency, sys_lat)
+            groups.setdefault((helpers, missing), []).append(t)
+        for (helpers, missing), ts in groups.items():
+            downloads = np.concatenate([self._downloads(key, t, helpers)
+                                        for t in ts], axis=1)   # (2k, G*S)
+            mat = self.code.repair.decode_matrix(helpers)
+            decoded = np.asarray(self.code.repair.apply(
+                mat[list(missing)], downloads), np.int32)
+            for g, t in enumerate(ts):
+                blocks[t, list(missing)] = \
+                    decoded[:, g * self.S:(g + 1) * self.S]
+            lat = self.link.degraded_read_s(2 * self.S, [1.0] * self.k)
+            # one download set per stripe in the group
+            for g, t in enumerate(ts):
+                self.metrics.record_read("degraded", lat, 2 * self.k * self.S)
+            latency = max(latency, lat)
+            bytes_read += 2 * self.k * self.S * len(ts)
+        payload = self.stripes.assemble(
+            blocks, StripeMap(stat.size_bytes, stat.n_stripes, self.S))
+        obj: Any = payload
+        if stat.dtype is not None:
+            obj = np.frombuffer(payload, dtype=np.dtype(stat.dtype)) \
+                .reshape(stat.shape).copy()
+        return GetResult(obj=obj, bytes_read=bytes_read,
+                         degraded_stripes=sum(len(v) for v in groups.values()),
+                         latency_s=latency)
+
+    def _present_code_nodes(self, key: str, t: int,
+                            pl: Sequence[int]) -> set[int]:
+        return {j + 1 for j, phys in enumerate(pl)
+                if (key, t) in self._shares[phys - 1]}
+
+    def _downloads(self, key: str, t: int,
+                   helpers: Sequence[int]) -> np.ndarray:
+        """(2k, S) stacked [data; red] blocks of the helper code nodes."""
+        pl = self.stripes.placement(self.stat(key).meta["_base_stripe"] + t)
+        rows_a = [self._shares[pl[i - 1] - 1][(key, t)][1] for i in helpers]
+        rows_r = [self._shares[pl[i - 1] - 1][(key, t)][2] for i in helpers]
+        return np.concatenate([np.stack(rows_a), np.stack(rows_r)], axis=0)
+
+    # ----------------------------------------------------------- delete/stat
+    def delete(self, key: str) -> None:
+        stat = self.stat(key)
+        for t in range(stat.n_stripes):
+            for shares in self._shares:
+                shares.pop((key, t), None)
+        del self._stats[key]
+
+    def stat(self, key: str) -> ObjectStat:
+        if key not in self._stats:
+            raise KeyError(key)
+        return self._stats[key]
+
+    def keys(self) -> list[str]:
+        return sorted(self._stats)
+
+    # -------------------------------------------------------- pytree objects
+    def put_pytree(self, key: str, tree: Any) -> ObjectStat:
+        """Store a JAX/numpy pytree as one object (serving integration:
+        `ServingEngine.from_coded_store(model, store, key=...)`)."""
+        payload, treedef, metas = placement.pytree_to_bytes(tree)
+        return self.put(key, payload,
+                        meta={"treedef": treedef, "leaves": metas})
+
+    def get_pytree(self, key: str) -> Any:
+        stat = self.stat(key)
+        if "treedef" not in stat.meta:
+            raise TypeError(f"{key!r} was not stored with put_pytree")
+        payload = self.get(key)
+        leaves = placement.bytes_to_leaves(payload, stat.meta["leaves"])
+        return jax.tree_util.tree_unflatten(stat.meta["treedef"], leaves)
+
+    # ------------------------------------------------------- repair surface
+    def stripe_refs(self) -> Iterator[tuple[str, int]]:
+        """All (key, stripe) pairs currently stored."""
+        for key, stat in self._stats.items():
+            for t in range(stat.n_stripes):
+                yield key, t
+
+    def stripes_on(self, node: int) -> list[tuple[str, int]]:
+        """Stripes that PLACE a share on ``node`` (present or lost) —
+        what a failure of ``node`` puts at risk."""
+        self._check_node(node)
+        out = []
+        for key, t in self.stripe_refs():
+            base = self._stats[key].meta["_base_stripe"]
+            if node in self.stripes.placement(base + t):
+                out.append((key, t))
+        return out
+
+    def lost_code_nodes(self, key: str, t: int) -> tuple[int, ...]:
+        """Code nodes (1-indexed) of stripe (key, t) whose share is absent
+        — lost to failures, or never written (placed on a dead node)."""
+        base = self.stat(key).meta["_base_stripe"]
+        pl = self.stripes.placement(base + t)
+        present = self._present_code_nodes(key, t, pl)
+        return tuple(i for i in range(1, self.n + 1) if i not in present)
+
+    def embedded_helpers_present(self, key: str, t: int,
+                                 code_node: int) -> bool:
+        """True when the d = k+1 determined helpers of ``code_node`` all
+        have their shares present AND their physical hosts up — the
+        cheap (k+1)S regeneration is available."""
+        base = self.stat(key).meta["_base_stripe"]
+        pl = self.stripes.placement(base + t)
+        plan = self.code.repair_plan(code_node)
+        shares = self._shares
+        needed = (plan.prev_node,) + plan.next_nodes
+        return all((key, t) in shares[pl[i - 1] - 1] for i in needed)
+
+    def repair_stripes_embedded(self, tasks: Sequence[tuple[str, int, int]],
+                                ) -> int:
+        """Regenerate one lost share per task in ONE ``regenerate_batch``
+        call (the scheduler's coalesced path, DESIGN.md §10.3).
+
+        tasks: (key, stripe, lost_code_node) triples, each single-loss
+        with embedded helpers present (caller-checked).  The repair
+        matrix is node-invariant, so stripes that lost DIFFERENT code
+        nodes still share the one vmapped dispatch.  Returns symbols
+        moved: ``len(tasks) * (k+1) * S`` — eq. (7) per share.
+        """
+        if not tasks:
+            return 0
+        r_prevs, helper_data, placements = [], [], []
+        for key, t, node in tasks:
+            base = self.stat(key).meta["_base_stripe"]
+            pl = self.stripes.placement(base + t)
+            plan = self.code.repair_plan(node)
+            r_prevs.append(self._shares[pl[plan.prev_node - 1] - 1]
+                           [(key, t)][2])
+            helper_data.append(np.stack(
+                [self._shares[pl[i - 1] - 1][(key, t)][1]
+                 for i in plan.next_nodes]))
+            placements.append(pl)
+        pairs = np.asarray(self.code.regenerate_batch(
+            [node for _, _, node in tasks], np.stack(r_prevs),
+            np.stack(helper_data)), np.int32)
+        for (key, t, node), pl, pair in zip(tasks, placements, pairs):
+            phys = pl[node - 1]
+            if not self.is_up(phys):
+                raise RuntimeError(f"replace node {phys} before repairing "
+                                   f"onto it")
+            self._shares[phys - 1][(key, t)] = [node, pair[0].copy(),
+                                                pair[1].copy()]
+        return len(tasks) * (self.k + 1) * self.S
+
+    def repair_stripe_full(self, key: str, t: int,
+                           lost: Sequence[int]) -> int:
+        """Multi-loss repair: ONE decode matmul rebuilds the stripe's data
+        and every lost redundancy block (`reconstruct_with_repair`).
+        Returns symbols moved: 2k * S total, however many shares come
+        back (ratio 1/F vs the RS baseline).
+        """
+        base = self.stat(key).meta["_base_stripe"]
+        pl = self.stripes.placement(base + t)
+        present = sorted(self._present_code_nodes(key, t, pl))
+        if len(present) < self.k:
+            raise RuntimeError(f"stripe {t} of {key!r} unrecoverable")
+        use = tuple(present[: self.k])
+        downloads = self._downloads(key, t, use)
+        data, red_f = self.code.repair.reconstruct_with_repair(
+            use, downloads[: self.k], downloads[self.k:], list(lost))
+        data = np.asarray(data, np.int32)
+        red_f = np.asarray(red_f, np.int32)
+        for j, node in enumerate(lost):
+            phys = pl[node - 1]
+            if not self.is_up(phys):
+                raise RuntimeError(f"replace node {phys} before repairing "
+                                   f"onto it")
+            self._shares[phys - 1][(key, t)] = \
+                [node, data[node - 1].copy(), red_f[j].copy()]
+        return 2 * self.k * self.S
+
+    def rs_baseline_symbols(self, n_shares: int) -> int:
+        """What a classical [n, k] RS store would download to rebuild
+        ``n_shares`` lost shares: the whole file per share (§II)."""
+        return baselines.rs_scenario_repair_symbols(self.k, self.S, n_shares)
+
+    # ------------------------------------------------------------ inspection
+    def verify(self) -> bool:
+        """Ground-truth audit: every present share equals a fresh encode
+        of its object (the simulator's ``bit_exact`` check, store-wide)."""
+        for key, stat in self._stats.items():
+            base = stat.meta["_base_stripe"]
+            obj = self.get(key)
+            payload = obj.tobytes() if isinstance(obj, np.ndarray) else obj
+            blocks, smap = self.stripes.chunk(payload)
+            red = self.stripes.encode(blocks)
+            for t in range(stat.n_stripes):
+                pl = self.stripes.placement(base + t)
+                for j, phys in enumerate(pl):
+                    share = self._shares[phys - 1].get((key, t))
+                    if share is None:
+                        continue
+                    if not (np.array_equal(share[1], blocks[t, j])
+                            and np.array_equal(share[2], red[t, j])):
+                        return False
+        return True
+
+    def total_lost_shares(self) -> int:
+        return sum(len(self.lost_code_nodes(key, t))
+                   for key, t in self.stripe_refs())
+
+
+__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreMetrics",
+           "UP", "FAILED"]

@@ -1,0 +1,313 @@
+"""Prioritized background repair scheduler (DESIGN.md §10.3).
+
+The scheduler sits between a failure feed and the store's repair
+primitives:
+
+* **subscribe** — it consumes the same typed ``Event`` stream the
+  cluster simulator publishes (``store.subscribe(sched.on_event)`` or
+  ``ClusterSimulator.subscribe(sched.on_event)``); every ``fail`` event
+  enqueues the stripes that placed a share on the dead node;
+* **prioritize** — the queue key is *remaining redundancy*
+  ``(n - k) - lost_shares``: a stripe one failure away from data loss
+  (remaining 0) drains before stripes that can still absorb losses.
+  Priorities are recomputed at pop time, so a stripe that lost another
+  share while queued jumps the line and a stripe repaired out of band
+  is dropped;
+* **coalesce** — all single-loss stripes whose embedded d = k+1 helpers
+  are present fold into ONE ``regenerate_batch`` dispatch per drain
+  (the repair matrix is node-invariant, so stripes that lost different
+  code nodes still share the vmapped call); multi-loss stripes fall
+  back to the one-matmul full decode per stripe;
+* **throttle** — each ``drain`` tick moves at most
+  ``budget_symbols_per_tick`` repair symbols, derived from the link
+  model's bandwidth and the configurable ``repair_bandwidth_fraction``
+  (repair must not starve foreground traffic); ``drain_all`` reports
+  how many ticks (and simulated seconds) emptying the queue took.
+
+Byte accounting lands in ``store.metrics`` with the classical-RS
+re-download baseline (`CodedObjectStore.rs_baseline_symbols`), so a
+scenario's repair-traffic ratio is read off exactly like the cluster
+simulator's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+from repro.cluster.events import Event
+from repro.cluster.metrics import LinkModel
+
+from .object_store import CodedObjectStore
+
+
+@dataclasses.dataclass
+class DrainReport:
+    """What one ``drain`` tick (or a full ``drain_all``) accomplished."""
+    repaired_stripes: int = 0
+    repaired_shares: int = 0
+    symbols_moved: int = 0
+    rs_baseline_symbols: int = 0
+    batch_calls: int = 0          # coalesced regenerate_batch dispatches
+    decode_calls: int = 0         # full-decode (multi-loss) dispatches
+    unrecoverable: int = 0        # dropped: < k shares left (needs re-put)
+    remaining: int = 0            # queue depth after the tick
+    ticks: int = 1
+    drain_time_s: float = 0.0     # simulated: max(transfer + overheads,
+                                  # budget throttle at tick_s per budget)
+
+    @property
+    def ratio_vs_rs(self) -> Optional[float]:
+        if self.rs_baseline_symbols == 0:
+            return None
+        return self.symbols_moved / self.rs_baseline_symbols
+
+    def merge(self, other: "DrainReport") -> None:
+        self.repaired_stripes += other.repaired_stripes
+        self.repaired_shares += other.repaired_shares
+        self.symbols_moved += other.symbols_moved
+        self.rs_baseline_symbols += other.rs_baseline_symbols
+        self.batch_calls += other.batch_calls
+        self.decode_calls += other.decode_calls
+        self.unrecoverable += other.unrecoverable
+        self.remaining = other.remaining
+        self.drain_time_s += other.drain_time_s
+
+
+class RepairScheduler:
+    """Background repair queue for a :class:`CodedObjectStore`.
+
+    Parameters
+    ----------
+    store : CodedObjectStore
+        The store whose stripes are repaired.
+    link : LinkModel, optional
+        Service-time model; defaults to the store's.
+    repair_bandwidth_fraction : float
+        Fraction of one node's link budgeted for repair per tick.
+    tick_s : float
+        Simulated tick length; the per-tick symbol budget is
+        ``bandwidth_bps * tick_s * fraction`` (symbols ~ bytes over
+        GF(257) systematic storage).
+
+    Examples
+    --------
+    >>> from repro.core.circulant import CodeSpec
+    >>> store = CodedObjectStore(CodeSpec.make(2, 257), stripe_symbols=8)
+    >>> sched = RepairScheduler(store)
+    >>> store.subscribe(sched.on_event)
+    >>> _ = store.put("x", bytes(range(64)))
+    >>> store.fail_node(1)
+    >>> rep = sched.drain_all()
+    >>> (sched.pending(), store.get("x") == bytes(range(64)))
+    (0, True)
+    """
+
+    def __init__(self, store: CodedObjectStore, *,
+                 link: Optional[LinkModel] = None,
+                 repair_bandwidth_fraction: float = 0.1,
+                 tick_s: float = 1.0):
+        self.store = store
+        self.link = link or store.link
+        self.repair_bandwidth_fraction = float(repair_bandwidth_fraction)
+        self.tick_s = float(tick_s)
+        self._heap: list[tuple[int, int, str, int]] = []
+        self._queued: set[tuple[str, int]] = set()
+        self._seq = 0
+
+    # --------------------------------------------------------------- intake
+    def on_event(self, event: Event) -> None:
+        """Failure-feed subscriber (store or cluster-simulator events).
+
+        ``fail`` enqueues the dead node's stripes; ``up`` enqueues a
+        replaced slot's still-lost stripes — that is how shares lost at
+        birth (put while the node was down) get re-protected once a
+        newcomer takes the slot."""
+        if event.kind in ("fail", "up"):
+            self.enqueue_node(event.node)
+
+    def enqueue_node(self, node: int) -> int:
+        """Queue every stripe that placed a share on ``node``; returns how
+        many were newly enqueued."""
+        added = 0
+        for key, t in self.store.stripes_on(node):
+            added += self.enqueue_stripe(key, t)
+        return added
+
+    def enqueue_stripe(self, key: str, t: int) -> int:
+        lost = self.store.lost_code_nodes(key, t)
+        if not lost:
+            return 0
+        if (key, t) in self._queued:
+            # already queued at an older (higher) priority: push a second
+            # entry at the current loss count — the lower-remaining copy
+            # pops first, stale copies are discarded at pop time
+            self._push(key, t, len(lost))
+            return 0
+        self._push(key, t, len(lost))
+        return 1
+
+    def _push(self, key: str, t: int, n_lost: int) -> None:
+        # priority = remaining redundancy; 0 (one failure from loss) first
+        remaining = (self.store.n - self.store.k) - n_lost
+        self._seq += 1
+        heapq.heappush(self._heap, (remaining, self._seq, key, t))
+        self._queued.add((key, t))
+
+    def pending(self) -> int:
+        return len(self._queued)
+
+    def peek_order(self) -> list[tuple[str, int, int]]:
+        """Queue snapshot as (key, stripe, remaining_redundancy), in drain
+        order — for tests and dashboards; does not consume the queue.
+        Duplicate entries (priority updates) collapse to the most urgent."""
+        seen: set[tuple[str, int]] = set()
+        out = []
+        for rem, _, key, t in sorted(self._heap):
+            if (key, t) in self._queued and (key, t) not in seen:
+                seen.add((key, t))
+                out.append((key, t, rem))
+        return out
+
+    # ---------------------------------------------------------------- drain
+    def budget_symbols_per_tick(self) -> int:
+        """The throttle: symbols/tick from the link bandwidth budget."""
+        return max(1, int(self.link.bandwidth_bps * self.tick_s
+                          * self.repair_bandwidth_fraction))
+
+    def drain(self, budget_symbols: Optional[int] = None) -> DrainReport:
+        """One throttled tick: pop stripes in priority order until the
+        symbol budget is spent, coalesce, dispatch, account.
+
+        Stale queue entries are re-validated at pop time: a stripe whose
+        loss count changed is re-queued at its current priority; one
+        with nothing lost any more is dropped.
+        """
+        budget = self.budget_symbols_per_tick() \
+            if budget_symbols is None else max(1, int(budget_symbols))
+        store = self.store
+        k, s = store.k, store.S
+        report = DrainReport()
+        embedded: list[tuple[str, int, int]] = []   # coalesced single-loss
+        full: list[tuple[str, int, tuple[int, ...]]] = []
+        selected: set[tuple[str, int]] = set()
+        spent = 0
+        while self._heap:
+            rem, _, key, t = self._heap[0]
+            if (key, t) not in self._queued or (key, t) in selected:
+                heapq.heappop(self._heap)           # stale dup entry
+                continue
+            try:
+                lost = store.lost_code_nodes(key, t)
+            except KeyError:                        # object deleted
+                heapq.heappop(self._heap)
+                self._queued.discard((key, t))
+                continue
+            if not lost:
+                heapq.heappop(self._heap)
+                self._queued.discard((key, t))
+                continue
+            if len(lost) > store.n - store.k:       # data loss: fewer than
+                heapq.heappop(self._heap)           # k shares left — only a
+                self._queued.discard((key, t))      # re-put can help, so it
+                report.unrecoverable += 1           # must not wedge the queue
+                continue
+            now_rem = (store.n - store.k) - len(lost)
+            if now_rem != rem:                      # priority drifted
+                heapq.heappop(self._heap)
+                self._push(key, t, len(lost))       # requeue at current prio
+                continue
+            cost = (k + 1) * s if (
+                len(lost) == 1
+                and store.embedded_helpers_present(key, t, lost[0])
+            ) else 2 * k * s
+            if spent + cost > budget and spent > 0:
+                break                               # budget exhausted
+            heapq.heappop(self._heap)
+            selected.add((key, t))
+            spent += cost
+            if cost == (k + 1) * s:
+                embedded.append((key, t, lost[0]))
+            else:
+                full.append((key, t, lost))
+        # provision newcomers for every slot we are about to write — their
+        # `up` events may enqueue OTHER still-lost stripes on the slot
+        # (lost-at-birth re-protection); the selected set stays in
+        # _queued until its repairs land so those events cannot double-
+        # enqueue the work in flight.  The finally block keeps queue state
+        # and byte accounting consistent with whatever repairs actually
+        # landed, even if one raises mid-tick.
+        completed: set[tuple[str, int]] = set()
+        try:
+            self._replace_target_nodes(embedded, full)
+            if embedded:
+                report.symbols_moved += store.repair_stripes_embedded(embedded)
+                report.batch_calls += 1
+                report.repaired_stripes += len(embedded)
+                report.repaired_shares += len(embedded)
+                completed.update((key, t) for key, t, _ in embedded)
+            for key, t, lost in full:
+                report.symbols_moved += store.repair_stripe_full(key, t, lost)
+                report.decode_calls += 1
+                report.repaired_stripes += 1
+                report.repaired_shares += len(lost)
+                completed.add((key, t))
+        finally:
+            for kt in selected:
+                self._queued.discard(kt)
+            for key, t in selected - completed:     # repair raised: requeue
+                self.enqueue_stripe(key, t)         # at the current priority
+            report.rs_baseline_symbols = \
+                store.rs_baseline_symbols(report.repaired_shares)
+            if report.repaired_shares:
+                store.metrics.record_repair(report.repaired_shares,
+                                            report.symbols_moved,
+                                            report.rs_baseline_symbols)
+        report.remaining = self.pending()
+        n_tasks = len(embedded) + len(full)
+        # simulated tick duration: the raw transfer + per-task overheads,
+        # floored by the THROTTLE — the budget grants at most `budget`
+        # symbols per tick_s of simulated time, so a tick that spends its
+        # whole budget costs tick_s however fast the link could move it
+        # (this is what makes drain_time_s a function of the budget)
+        raw_s = (report.symbols_moved / self.link.bandwidth_bps
+                 + n_tasks * self.link.request_overhead_s
+                 + report.decode_calls * self.link.decode_overhead_s)
+        throttle_s = report.symbols_moved / budget * self.tick_s
+        report.drain_time_s = max(raw_s, throttle_s)
+        return report
+
+    def _replace_target_nodes(self, embedded, full) -> None:
+        targets: set[int] = set()
+        for key, t, node in embedded:
+            base = self.store.stat(key).meta["_base_stripe"]
+            targets.add(self.store.stripes.placement(base + t)[node - 1])
+        for key, t, lost in full:
+            base = self.store.stat(key).meta["_base_stripe"]
+            pl = self.store.stripes.placement(base + t)
+            targets.update(pl[i - 1] for i in lost)
+        for phys in targets:
+            if not self.store.is_up(phys):
+                self.store.replace_node(phys)
+
+    def drain_all(self, budget_symbols: Optional[int] = None,
+                  max_ticks: int = 100_000) -> DrainReport:
+        """Tick until the queue is empty; the merged report's ``ticks``
+        and ``drain_time_s`` are the queue-drain-time-vs-budget numbers
+        ``BENCH_store.json`` tracks."""
+        total = DrainReport(ticks=0)
+        while self.pending():
+            if total.ticks >= max_ticks:
+                raise RuntimeError(f"repair queue not drained after "
+                                   f"{max_ticks} ticks")
+            rep = self.drain(budget_symbols)
+            total.merge(rep)
+            total.ticks += 1
+            if rep.repaired_stripes == 0 and rep.remaining:
+                raise RuntimeError(
+                    "repair stalled: pending stripes cannot be repaired "
+                    "(fewer than k shares present?)")
+        return total
+
+
+__all__ = ["RepairScheduler", "DrainReport"]

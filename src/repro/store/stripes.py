@@ -1,0 +1,136 @@
+"""Stripe manager: arbitrary-size objects <-> fixed MSR stripes
+(DESIGN.md §10.1).
+
+An object (bytes, or any numpy array) is serialized to a byte payload,
+converted to GF(p) symbols, zero-padded to a whole number of stripes and
+cut into (T, n, S) data blocks: T stripes of the code's n = 2k blocks,
+S = ``stripe_symbols`` symbols each.  The original byte length is
+recorded in the :class:`StripeMap` so padding strips off bit-exactly on
+reassembly.
+
+Encoding exploits that the circulant encode is independent per symbol
+column: ALL T stripes of an object are folded into ONE dispatched
+(n, T*S) encode call instead of T small ones — the multi-stripe
+counterpart of the PR 1 streaming save.
+
+Physical placement rides on `core.placement`: share j of stripe t lands
+on node ``rotate_placement(layout, n, t)[j]``, rotating stripes around
+the node ring so load spreads and a node failure costs each stripe at
+most one share, while the round-robin rack layout keeps any stripe's
+rack-correlated loss within the code's n - k erasure budget
+(`max_shares_per_rack`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf, placement
+from repro.core.circulant import CodeSpec
+from repro.core.msr import DoubleCirculantMSR
+
+
+@dataclasses.dataclass(frozen=True)
+class StripeMap:
+    """Geometry of one striped object (everything needed to reassemble).
+
+    Parameters
+    ----------
+    orig_bytes : int
+        Payload length before symbol conversion and padding.
+    n_stripes : int
+        Number of stripes the object spans (>= 1 even for empty objects,
+        so every object owns storable shares and a repairable footprint).
+    stripe_symbols : int
+        Symbols per data block (the code's S) — each stripe carries
+        ``n * stripe_symbols`` payload symbols.
+    """
+    orig_bytes: int
+    n_stripes: int
+    stripe_symbols: int
+
+    def payload_symbols(self, n: int) -> int:
+        """Padded symbol capacity across all stripes."""
+        return self.n_stripes * n * self.stripe_symbols
+
+
+class StripeManager:
+    """Chunk + encode + place: the store's codec for one code spec.
+
+    Parameters
+    ----------
+    spec : CodeSpec
+        The [n = 2k, k] double circulant code every stripe uses.
+    layout : placement.RackLayout
+        Physical node ring (may be larger than n) with rack assignment.
+    stripe_symbols : int
+        Data-block size S; small objects still occupy one full stripe
+        (padded), so pick S against the expected object size.
+    code : DoubleCirculantMSR, optional
+        Share an existing code instance (and its decode-inverse cache).
+    backend : str, optional
+        Pin a dispatch backend by name (forwarded to the code).
+    """
+
+    def __init__(self, spec: CodeSpec, layout: placement.RackLayout, *,
+                 stripe_symbols: int = 1 << 12,
+                 code: DoubleCirculantMSR | None = None,
+                 backend: str | None = None):
+        self.spec = spec
+        self.k, self.n, self.p = spec.k, spec.n, spec.p
+        self.layout = layout
+        self.stripe_symbols = int(stripe_symbols)
+        if self.stripe_symbols < 1:
+            raise ValueError("stripe_symbols must be >= 1")
+        self.code = code or DoubleCirculantMSR(spec, backend=backend)
+        worst = max(placement.max_shares_per_rack(
+            layout, self.placement(t)) for t in range(layout.n_nodes))
+        if worst > self.n - self.k:
+            raise ValueError(
+                f"layout unsafe: some stripe puts {worst} shares in one "
+                f"rack > n-k = {self.n - self.k}; add racks or nodes")
+
+    # ------------------------------------------------------------- placement
+    def placement(self, stripe: int) -> tuple[int, ...]:
+        """Physical node (1-indexed) of each code node's share for stripe
+        ``stripe`` — entry j holds code node v_{j+1}'s pair."""
+        return placement.rotate_placement(self.layout, self.n, stripe)
+
+    # ----------------------------------------------------------------- chunk
+    def chunk(self, payload: bytes) -> tuple[np.ndarray, StripeMap]:
+        """payload -> ((T, n, S) int32 data blocks, StripeMap)."""
+        sym = gf.bytes_to_symbols(payload, self.p)
+        per_stripe = self.n * self.stripe_symbols
+        t = max(1, -(-len(sym) // per_stripe))
+        sym = np.pad(sym, (0, t * per_stripe - len(sym)))
+        blocks = sym.reshape(t, self.n, self.stripe_symbols).astype(np.int32)
+        return blocks, StripeMap(orig_bytes=len(payload), n_stripes=t,
+                                 stripe_symbols=self.stripe_symbols)
+
+    def assemble(self, blocks: np.ndarray, smap: StripeMap) -> bytes:
+        """Inverse of :meth:`chunk`: (T, n, S) data blocks -> payload."""
+        sym = np.asarray(blocks, np.int32).reshape(-1)
+        return gf.symbols_to_bytes(sym)[: smap.orig_bytes]
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, blocks: np.ndarray) -> np.ndarray:
+        """(T, n, S) data blocks -> (T, n, S) redundancy blocks.
+
+        One dispatched circulant matmul for the whole object: the stripe
+        axis is folded into the symbol axis ((n, T*S) view), encoded
+        once, and unfolded — encode cost is independent of how many
+        stripes the object spans.
+        """
+        t, n, s = blocks.shape
+        if n != self.n:
+            raise ValueError(f"expected {self.n} blocks per stripe, got {n}")
+        flat = np.ascontiguousarray(
+            np.transpose(blocks, (1, 0, 2))).reshape(n, t * s)
+        red = np.asarray(self.code.encode(jnp.asarray(flat)), np.int32)
+        return np.ascontiguousarray(
+            np.transpose(red.reshape(n, t, s), (1, 0, 2)))
+
+
+__all__ = ["StripeMap", "StripeManager"]

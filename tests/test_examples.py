@@ -44,3 +44,15 @@ def test_train_tiny_lm_crash_recovery():
     out = run_example("train_tiny_lm.py", "--steps", "9")
     assert "repair event(s)" in out
     assert "BIT-EXACT equal" in out
+
+
+def test_store_demo_rack_failure_and_drain():
+    out = run_example("store_demo.py", "--objects", "4", "--object-kb", "24")
+    # every get during and after the rack failure is bit-exact
+    assert "[degraded]" in out and "BIT-EXACT" in out
+    assert "[healed]" in out
+    # the queue re-prioritizes: at-risk stripes repaired first
+    assert "scheduler repairs at-risk stripes first" in out
+    # repair traffic beats the classical-RS re-download baseline
+    assert "ratio" in out and "[scheduler] drained" in out
+    assert "/ 0 failed" in out             # nothing went unserved

@@ -1,0 +1,445 @@
+"""Coded object store: stripe-manager roundtrips, degraded reads up to
+the full n - k erasure budget, scheduler priority/coalescing/throttling,
+and the store-backed checkpointer (DESIGN.md §10)."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.checkpoint.msr_checkpoint import MSRCheckpointer
+from repro.cluster.events import single_node_loss
+from repro.cluster.simulator import ClusterSimulator
+from repro.core import placement
+from repro.core.circulant import CodeSpec
+from repro.store import CodedObjectStore, RepairScheduler
+from repro.store.stripes import StripeManager
+
+SPEC2 = CodeSpec.make(2, 257)
+SPEC4 = CodeSpec.make(4, 257)
+
+
+def make_store(spec=SPEC4, n_nodes=12, stripe_symbols=64, **kw):
+    return CodedObjectStore(spec, n_nodes=n_nodes,
+                            stripe_symbols=stripe_symbols, **kw)
+
+
+def payload_bytes(size, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, size, dtype=np.uint8).tobytes()
+
+
+# ------------------------------------------------------------- stripe manager
+class TestStripeManager:
+    def test_chunk_assemble_roundtrip_odd_sizes(self):
+        sm = StripeManager(SPEC4, placement.rack_layout(12, 4),
+                           stripe_symbols=16)
+        for size in (0, 1, 2, 15, 16 * SPEC4.n, 16 * SPEC4.n + 1, 1000):
+            data = payload_bytes(size, seed=size)
+            blocks, smap = sm.chunk(data)
+            assert blocks.shape[1:] == (SPEC4.n, 16)
+            assert smap.n_stripes >= 1
+            assert sm.assemble(blocks, smap) == data
+
+    def test_multi_stripe_encode_matches_per_stripe(self):
+        sm = StripeManager(SPEC4, placement.rack_layout(8, 2),
+                           stripe_symbols=32)
+        blocks, _ = sm.chunk(payload_bytes(4000))
+        red = sm.encode(blocks)
+        for t in range(blocks.shape[0]):       # one-matmul == stripe-by-stripe
+            ref = np.asarray(sm.code.encode(blocks[t]), np.int32)
+            assert np.array_equal(red[t], ref)
+
+    def test_placement_rotates_and_respects_racks(self):
+        layout = placement.rack_layout(12, 4)
+        sm = StripeManager(SPEC4, layout, stripe_symbols=8)
+        pls = {sm.placement(t) for t in range(12)}
+        assert len(pls) == 12                  # stripes spread over the ring
+        for pl in pls:
+            assert len(set(pl)) == SPEC4.n     # distinct physical nodes
+            assert placement.max_shares_per_rack(layout, pl) \
+                <= SPEC4.n - SPEC4.k
+
+    def test_unsafe_layout_rejected(self):
+        # one rack holding everything can never survive its own loss
+        layout = placement.rack_layout(8, 1)
+        with pytest.raises(ValueError, match="layout unsafe"):
+            StripeManager(SPEC4, layout, stripe_symbols=8)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.binary(min_size=0, max_size=3000), st.sampled_from([2, 4]))
+    def test_property_roundtrip(self, data, k):
+        spec = SPEC2 if k == 2 else SPEC4
+        store = make_store(spec, n_nodes=2 * spec.n, stripe_symbols=16)
+        store.put("x", data)
+        assert store.get("x") == data
+
+
+# ---------------------------------------------------------------- object store
+class TestObjectStore:
+    def test_put_get_delete_stat(self):
+        store = make_store()
+        data = payload_bytes(1000)
+        stat = store.put("a", data)
+        assert stat.size_bytes == 1000 and stat.n_stripes >= 1
+        assert store.get("a") == data
+        assert store.stat("a").key == "a"
+        assert store.keys() == ["a"]
+        store.delete("a")
+        with pytest.raises(KeyError):
+            store.get("a")
+        with pytest.raises(KeyError):
+            store.stat("a")
+        assert store.keys() == []
+
+    def test_zero_length_object(self):
+        store = make_store()
+        store.put("empty", b"")
+        assert store.get("empty") == b""
+        assert store.stat("empty").n_stripes == 1   # still owns a footprint
+
+    def test_array_object_roundtrip(self):
+        store = make_store()
+        arr = np.random.default_rng(1).standard_normal((13, 7)).astype(
+            np.float32)
+        store.put("arr", arr)
+        out = store.get("arr")
+        assert out.dtype == arr.dtype and out.shape == arr.shape
+        assert np.array_equal(out, arr)
+
+    def test_overwrite_replaces(self):
+        store = make_store()
+        store.put("x", b"old contents")
+        store.put("x", b"new")
+        assert store.get("x") == b"new"
+
+    def test_object_spanning_many_stripes(self):
+        store = make_store(stripe_symbols=32)
+        data = payload_bytes(32 * SPEC4.n * 9 + 17)     # 10 stripes
+        store.put("big", data)
+        assert store.stat("big").n_stripes == 10
+        assert store.get("big") == data
+
+    @pytest.mark.parametrize("losses", [1, 2, 3, 4])   # up to n - k
+    def test_get_under_failure_every_loss_count(self, losses):
+        # n_nodes == n: every stripe loses a share per failed node, so
+        # `losses` failures put every stripe exactly `losses` under
+        store = make_store(n_nodes=SPEC4.n, stripe_symbols=32)
+        data = payload_bytes(5000)
+        store.put("x", data)
+        for v in range(1, losses + 1):
+            store.fail_node(v)
+        res = store.get_ext("x")
+        assert res.obj == data
+        assert res.degraded_stripes == store.stat("x").n_stripes
+
+    def test_beyond_budget_raises(self):
+        store = make_store(n_nodes=SPEC4.n, stripe_symbols=32)
+        store.put("x", payload_bytes(100))
+        for v in range(1, SPEC4.n - SPEC4.k + 2):      # n - k + 1 losses
+            store.fail_node(v)
+        with pytest.raises(RuntimeError, match="data loss"):
+            store.get("x")
+
+    def test_degraded_read_batches_one_matmul_per_pattern(self, monkeypatch):
+        # 16 stripes on an 8-node ring: the rotating placement maps the
+        # failed physical node to 8 distinct failure patterns, each
+        # covering 2 stripes -> 8 decode matmuls and 8 cached inverses
+        # for 16 degraded stripes (one per pattern, NOT one per stripe)
+        store = make_store(n_nodes=SPEC4.n, stripe_symbols=16)
+        store.put("x", payload_bytes(16 * SPEC4.n * 16))  # 16 stripes
+        store.fail_node(2)
+        store.code.repair.decode_cache.clear()
+        calls = []
+        orig = store.code.repair.apply
+        monkeypatch.setattr(store.code.repair, "apply",
+                            lambda *a: calls.append(1) or orig(*a))
+        res = store.get_ext("x")
+        info = store.code.repair.decode_cache.cache_info()
+        assert res.degraded_stripes == 16
+        assert len(calls) == SPEC4.n       # one matmul per pattern
+        # helper subsets collide across patterns (every missing node >= 5
+        # decodes from {1,2,3,4}), so the inverse cache solves even fewer
+        assert info.misses == 5 and info.hits + info.misses == SPEC4.n
+
+    @pytest.mark.parametrize("n_nodes", [8, 9, 10, 11, 13])
+    def test_default_racks_safe_on_any_ring_size(self, n_nodes):
+        # the default rack count must survive rotating-window wrap on
+        # rings that are not a multiple of the rack count (odd sizes)
+        store = make_store(n_nodes=n_nodes, stripe_symbols=16)
+        data = payload_bytes(700)
+        store.put("x", data)
+        assert store.get("x") == data
+
+    def test_put_to_failed_node_is_lost_at_birth(self):
+        store = make_store(n_nodes=SPEC4.n, stripe_symbols=16)
+        store.fail_node(3)
+        data = payload_bytes(300)
+        store.put("x", data)
+        assert store.get("x") == data                   # degrades around it
+        assert store.total_lost_shares() == store.stat("x").n_stripes
+
+    def test_verify_catches_tampering(self):
+        store = make_store(stripe_symbols=16)
+        store.put("x", payload_bytes(200))
+        assert store.verify()
+        for shares in store._shares:
+            for share in shares.values():
+                share[1][0] = (share[1][0] + 1) % 257
+                assert not store.verify()
+                return
+
+
+# ------------------------------------------------------------------ scheduler
+class TestScheduler:
+    def _wired(self, **kw):
+        store = make_store(**kw)
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        return store, sched
+
+    def test_priority_orders_at_risk_first(self):
+        store, sched = self._wired(stripe_symbols=32)
+        store.put("x", payload_bytes(32 * SPEC4.n * 11))
+        store.fail_node(1)
+        store.fail_node(2)       # stripes on both nodes are closer to loss
+        order = sched.peek_order()
+        rems = [rem for _, _, rem in order]
+        assert rems == sorted(rems)
+        assert rems[0] < rems[-1]          # genuinely mixed priorities
+        # drain respects the same order: the first repaired stripes are
+        # exactly the at-risk set
+        at_risk = {(key, t) for key, t, rem in order if rem == rems[0]}
+        budget = len(at_risk) * 2 * store.k * store.S
+        sched.drain(budget_symbols=budget)
+        for key, t in at_risk:
+            assert store.lost_code_nodes(key, t) == ()
+
+    def test_priority_updates_on_second_failure(self):
+        store, sched = self._wired(stripe_symbols=32)
+        store.put("x", payload_bytes(32 * SPEC4.n * 11))
+        store.fail_node(1)
+        first = sched.peek_order()[0][2]
+        store.fail_node(2)
+        assert sched.peek_order()[0][2] < first
+
+    def test_single_failure_coalesces_into_one_batch_call(self, monkeypatch):
+        store, sched = self._wired(stripe_symbols=32)
+        data = payload_bytes(32 * SPEC4.n * 7)
+        store.put("x", data)
+        store.fail_node(4)
+        assert sched.pending() > 1
+        calls = []
+        orig = store.code.regenerate_batch
+        monkeypatch.setattr(store.code, "regenerate_batch",
+                            lambda *a, **k: calls.append(1) or orig(*a, **k))
+        rep = sched.drain_all()
+        assert len(calls) == 1 and rep.batch_calls == 1
+        assert rep.decode_calls == 0
+        assert rep.ticks == 1
+        assert store.get("x") == data and store.verify()
+        # embedded repair: (k+1)S per share vs 2kS RS baseline
+        assert rep.ratio_vs_rs == pytest.approx(
+            (store.k + 1) / (2 * store.k))
+
+    def test_multi_loss_uses_full_decode(self):
+        store, sched = self._wired(n_nodes=SPEC4.n, stripe_symbols=32)
+        data = payload_bytes(3000)
+        store.put("x", data)
+        store.fail_node(1)
+        store.fail_node(2)       # every stripe loses 2 shares
+        rep = sched.drain_all()
+        assert rep.batch_calls == 0 and rep.decode_calls > 0
+        assert rep.ratio_vs_rs == pytest.approx(0.5)   # 2kS vs 2*2kS
+        assert store.get("x") == data and store.verify()
+
+    def test_bandwidth_budget_throttles(self):
+        store, sched = self._wired(stripe_symbols=32)
+        store.put("x", payload_bytes(32 * SPEC4.n * 11))
+        store.fail_node(1)
+        pending = sched.pending()
+        assert pending > 2
+        cost = (store.k + 1) * store.S            # embedded repair each
+        rep1 = sched.drain(budget_symbols=2 * cost)
+        assert rep1.repaired_stripes == 2
+        assert rep1.remaining == pending - 2
+        total = sched.drain_all(budget_symbols=2 * cost)
+        assert total.ticks == -(-rep1.remaining // 2)
+        assert sched.pending() == 0 and store.verify()
+
+    def test_drain_time_scales_with_budget(self):
+        # the simulated drain time must reflect the throttle: half the
+        # budget -> twice the ticks -> ~twice the simulated seconds
+        times = {}
+        for budget_stripes in (1, 2):
+            store, sched = self._wired(stripe_symbols=32)
+            store.put("x", payload_bytes(32 * SPEC4.n * 11))
+            store.fail_node(1)
+            budget = budget_stripes * (store.k + 1) * store.S
+            times[budget_stripes] = sched.drain_all(budget_symbols=budget)
+        t1, t2 = times[1].drain_time_s, times[2].drain_time_s
+        assert t1 > t2 > 0
+        assert t1 == pytest.approx(2 * t2, rel=0.2)
+
+    def test_budget_never_stalls_below_one_task(self):
+        store, sched = self._wired(stripe_symbols=32)
+        store.put("x", payload_bytes(200))
+        store.fail_node(1)
+        rep = sched.drain_all(budget_symbols=1)   # < one repair's cost
+        assert rep.repaired_stripes >= 1 and sched.pending() == 0
+
+    def test_zero_budget_clamped_not_crashing(self):
+        store, sched = self._wired(stripe_symbols=32)
+        store.put("x", payload_bytes(200))
+        store.fail_node(1)
+        rep = sched.drain(budget_symbols=0)       # clamps to 1, no div/0
+        assert rep.repaired_stripes >= 1 and rep.drain_time_s > 0
+
+    def test_unrecoverable_stripe_dropped_not_wedged(self):
+        # a stripe below k surviving shares cannot be repaired; it must
+        # be dropped (reported) instead of wedging the queue forever
+        store, sched = self._wired(n_nodes=SPEC4.n, stripe_symbols=16)
+        store.put("x", payload_bytes(100))
+        for v in range(1, SPEC4.n - SPEC4.k + 2):  # n - k + 1 losses
+            store.fail_node(v)
+        rep = sched.drain_all()
+        assert rep.unrecoverable == store.stat("x").n_stripes
+        assert rep.repaired_stripes == 0
+        assert sched.pending() == 0               # queue is clean again
+        for v in range(1, SPEC4.n - SPEC4.k + 2):
+            store.replace_node(v)                 # provision newcomers
+        data = payload_bytes(50, seed=9)          # life goes on: re-put
+        store.put("x", data)
+        assert store.get("x") == data
+
+    def test_default_budget_from_link_model(self):
+        store, sched = self._wired()
+        assert sched.budget_symbols_per_tick() == int(
+            store.link.bandwidth_bps * sched.tick_s
+            * sched.repair_bandwidth_fraction)
+
+    def test_subscribes_to_cluster_simulator_events(self):
+        # the same failure feed can drive the store scheduler: the store
+        # node dies silently (no direct subscription), and the matching
+        # fail event from a SIMULATOR scenario run is what lands the
+        # lost stripes in the repair queue
+        store = make_store(n_nodes=SPEC4.n, stripe_symbols=16)
+        sched = RepairScheduler(store)
+        data = payload_bytes(100)
+        store.put("x", data)
+        store.fail_node(3)                 # nothing subscribed yet
+        assert sched.pending() == 0
+        sim = ClusterSimulator(SPEC4, np.zeros((SPEC4.n, 8), np.int32))
+        sim.subscribe(sched.on_event)
+        seen = []
+        sim.subscribe(lambda e: seen.append(e.kind))
+        sim.run(single_node_loss(SPEC4.n, node=3, reads=2))
+        assert "fail" in seen
+        assert sched.pending() > 0         # node 3 stripes enqueued
+        sched.drain_all()
+        assert store.get("x") == data and store.verify()
+
+    def test_replace_node_reprotects_lost_at_birth_shares(self):
+        # shares skipped because their node was FAILED at put time never
+        # produced a fail event; the newcomer's `up` event re-protects
+        store, sched = self._wired(n_nodes=SPEC4.n, stripe_symbols=16)
+        store.fail_node(3)
+        data = payload_bytes(400)
+        store.put("x", data)               # node 3's shares lost at birth
+        assert store.total_lost_shares() > 0
+        assert sched.pending() == 0        # no fail event covered these
+        store.replace_node(3)
+        assert sched.pending() > 0         # `up` event enqueued them
+        sched.drain_all()
+        assert store.total_lost_shares() == 0
+        assert store.get("x") == data and store.verify()
+
+    def test_drop_stale_entries_on_deleted_object(self):
+        store, sched = self._wired(stripe_symbols=16)
+        store.put("x", payload_bytes(400))
+        store.fail_node(1)
+        assert sched.pending() > 0
+        store.delete("x")
+        rep = sched.drain_all()
+        assert rep.repaired_stripes == 0 and sched.pending() == 0
+
+
+# --------------------------------------------------- store-backed checkpoints
+class TestStoreBackedCheckpointer:
+    def _state(self):
+        return {"w": np.arange(600, dtype=np.float32).reshape(30, 20),
+                "b": np.ones(11, np.float64), "step": np.int32(3)}
+
+    def test_save_restore_roundtrip(self):
+        store = make_store(stripe_symbols=128)
+        ck = MSRCheckpointer(None, store=store, leaf_group_bytes=1024)
+        state = self._state()
+        ck.save(1, state)
+        out, rep = ck.restore(state)
+        for key in state:
+            assert np.array_equal(out[key], state[key])
+        assert rep.path == "store" and rep.bytes_read > 0
+        assert rep.bytes_total_stored > 0
+
+    def test_restore_through_failures_bit_exact(self):
+        store = make_store(stripe_symbols=128)
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        ck = MSRCheckpointer(None, store=store)
+        state = self._state()
+        ck.save(1, state)
+        store.fail_node(2)
+        store.fail_node(7)
+        out, rep = ck.restore(state)
+        for key in state:
+            assert np.array_equal(out[key], state[key])
+        sched.drain_all()
+        assert store.verify()
+
+    def test_leaf_groups_and_gc(self):
+        store = make_store(stripe_symbols=64)
+        ck = MSRCheckpointer(None, store=store, keep_last=2,
+                             leaf_group_bytes=1024)
+        state = self._state()           # w alone is 2400 bytes > group size
+        for s in (1, 2, 3):
+            ck.save(s, state)
+        assert ck.steps() == [2, 3]
+        groups = [k for k in store.keys()
+                  if k.startswith("ckpt/step_000003/g")]
+        assert len(groups) >= 2         # leaves split across objects
+        assert not any(k.startswith("ckpt/step_000001/")
+                       for k in store.keys())
+
+    def test_store_mode_guards(self):
+        store = make_store()
+        ck = MSRCheckpointer(None, store=store)
+        ck.save(1, self._state())
+        with pytest.raises(ValueError, match="no failed_nodes"):
+            ck.restore(self._state(), failed_nodes=[1])
+        with pytest.raises(RuntimeError, match="directory-mode only"):
+            ck.scrub(1)
+        with pytest.raises(RuntimeError, match="directory-mode only"):
+            ck.repair_node(1, 2)
+
+    def test_directory_mode_unchanged(self, tmp_path):
+        ck = MSRCheckpointer(tmp_path, SPEC4)
+        state = self._state()
+        ck.save(1, state)
+        out, rep = ck.restore(state, failed_nodes=[2])
+        for key in state:
+            assert np.array_equal(out[key], state[key])
+        assert rep.path == "regenerate" and rep.bytes_read > 0
+
+
+# --------------------------------------------------------- serve integration
+def test_serving_engine_reads_param_pytree_from_store():
+    from repro.serve.engine import _read_coded_params
+    store = make_store(stripe_symbols=256)
+    params = {"layer": {"w": np.full((8, 8), 3.0, np.float32),
+                        "b": np.zeros(8, np.float32)}}
+    store.put_pytree("params", params)
+    out = _read_coded_params(store, "params")
+    assert np.array_equal(out["layer"]["w"], params["layer"]["w"])
+    store.fail_node(1)
+    store.fail_node(6)
+    out2 = _read_coded_params(store, "params")   # transparent degraded
+    assert np.array_equal(out2["layer"]["w"], params["layer"]["w"])
+    assert np.array_equal(out2["layer"]["b"], params["layer"]["b"])

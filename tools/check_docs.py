@@ -3,9 +3,10 @@
 
 Three checks, all fatal on failure:
 
-1. **README doctest** — the first ```python fenced block in README.md
-   (the quickstart) is extracted and executed in a subprocess with
-   ``PYTHONPATH=src``, so the documented five-liner can never rot.
+1. **README doctest** — EVERY ```python fenced block in README.md (the
+   code quickstart, the object-store quickstart, ...) is extracted and
+   executed in its own subprocess with ``PYTHONPATH=src``, so no
+   documented snippet can rot.
 2. **Section anchors** — every ``§N`` / ``§N.M`` cross-reference in the
    source tree, tests, benchmarks and markdown must resolve to a real
    ``## §N`` / ``### §N.M`` heading in DESIGN.md (catches stale refs
@@ -31,29 +32,32 @@ SCAN_GLOBS = ["src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
 MD_WITH_LINKS = ["README.md", "DESIGN.md"]
 
 
-def extract_quickstart(readme: pathlib.Path) -> str:
-    """First ```python fenced block — the doctested quickstart."""
-    text = readme.read_text()
-    m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
-    if not m:
+def extract_python_blocks(readme: pathlib.Path) -> list[str]:
+    """All ```python fenced blocks — every one is doctested."""
+    blocks = re.findall(r"```python\n(.*?)```", readme.read_text(),
+                        re.DOTALL)
+    if not blocks:
         raise SystemExit("README.md has no ```python quickstart block")
-    return m.group(1)
+    return blocks
 
 
 def run_readme_doctest() -> list[str]:
-    code = extract_quickstart(REPO / "README.md")
-    with tempfile.TemporaryDirectory() as d:
-        path = pathlib.Path(d) / "readme_quickstart.py"
-        path.write_text(code)
-        env = dict(os.environ)
-        env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
-            env.get("PYTHONPATH", "")
-        proc = subprocess.run([sys.executable, str(path)], env=env,
-                              capture_output=True, text=True, timeout=600)
-    if proc.returncode != 0:
-        return [f"README quickstart failed (exit {proc.returncode}):\n"
-                f"{proc.stderr.strip()}"]
-    return []
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    for i, code in enumerate(extract_python_blocks(REPO / "README.md"), 1):
+        with tempfile.TemporaryDirectory() as d:
+            path = pathlib.Path(d) / f"readme_block_{i}.py"
+            path.write_text(code)
+            proc = subprocess.run([sys.executable, str(path)], env=env,
+                                  capture_output=True, text=True,
+                                  timeout=600)
+        if proc.returncode != 0:
+            errors.append(f"README python block #{i} failed "
+                          f"(exit {proc.returncode}):\n"
+                          f"{proc.stderr.strip()}")
+    return errors
 
 
 def design_headings() -> set[str]:
@@ -115,7 +119,8 @@ def main() -> int:
             print(f"FAIL {e}")
         errors += doc_errors
         if not doc_errors:
-            print("README quickstart: ran clean")
+            n = len(extract_python_blocks(REPO / "README.md"))
+            print(f"README doctest: {n} python block(s) ran clean")
     if errors:
         print(f"{len(errors)} documentation error(s)")
         return 1
