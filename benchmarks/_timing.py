@@ -1,12 +1,30 @@
-"""Shared steady-state timing helper for the benchmark modules.
+"""Shared steady-state timing + seeding helpers for the benchmark modules.
 
-One warm-up call (excluded: jit compile + first-touch), then best-of-N
-mean-of-reps wall time — best-of is robust to host jitter.  Blocks on the
-full result pytree so multi-output paths are timed end to end.
+Timing: one warm-up call (excluded: jit compile + first-touch), then
+best-of-N mean-of-reps wall time — best-of is robust to host jitter.
+Blocks on the full result pytree so multi-output paths are timed end to
+end.
+
+Seeding: every bench draws its data through :func:`rng` so the RNG seed
+is fixed and documented in ONE place — BENCH_*.json deltas across PRs
+then reflect code changes, never data.  A bench that sweeps a parameter
+(k, a shard index, ...) passes it as ``offset`` so each sweep point gets
+its own deterministic stream.
 """
 import time
 
 import jax
+import numpy as np
+
+# The single documented benchmark seed.  Change it and EVERY BENCH_*.json
+# trajectory number moves together — which is exactly why no bench is
+# allowed a private literal seed.
+BENCH_SEED = 0
+
+
+def rng(offset: int = 0) -> np.random.Generator:
+    """The benchmark RNG: ``default_rng(BENCH_SEED + offset)``."""
+    return np.random.default_rng(BENCH_SEED + offset)
 
 
 def timeit(fn, *args, reps=3, best_of=3):
@@ -19,3 +37,9 @@ def timeit(fn, *args, reps=3, best_of=3):
         jax.block_until_ready(out)
         times.append((time.perf_counter() - t0) / reps)
     return min(times)
+
+
+def percentiles(samples, ps=(50, 99)) -> dict:
+    """{"p50": ..., "p99": ...} over a latency sample list (seconds)."""
+    arr = np.asarray(sorted(samples), dtype=np.float64)
+    return {f"p{p}": float(np.percentile(arr, p)) for p in ps}

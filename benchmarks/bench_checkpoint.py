@@ -12,12 +12,13 @@ import time
 
 import numpy as np
 
+from benchmarks import _timing
 from repro.checkpoint.msr_checkpoint import MSRCheckpointer
 from repro.core.circulant import CodeSpec
 
 
 def _make_state(total_bytes: int, seed=0):
-    rng = np.random.default_rng(seed)
+    rng = _timing.rng(seed)
     n_f32 = total_bytes // 8
     return {
         "params": {"w": rng.normal(size=(n_f32,)).astype(np.float32)},

@@ -24,6 +24,7 @@ from repro.cluster import ClusterSimulator, standard_scenarios
 from repro.cluster.events import default_layout
 from repro.core.circulant import CodeSpec
 
+from benchmarks import _timing
 from benchmarks._timing import timeit
 
 
@@ -47,7 +48,7 @@ def run(ks=(4, 8), block_symbols: int = 1 << 16, quiet=False) -> list[dict]:
     for k in ks:
         spec = CodeSpec.make(k, 257)
         n = spec.n
-        rng = np.random.default_rng(0)
+        rng = _timing.rng()
         data = rng.integers(0, spec.p, (n, block_symbols),
                             dtype=np.int64).astype(np.int32)
         layout = default_layout(n, k)

@@ -18,6 +18,7 @@ the TPU story).
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import _timing
 from benchmarks._timing import timeit as _timeit
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
@@ -32,7 +33,7 @@ def run(ks=(2, 8), stream_symbols: int = 1 << 16, *,
         spec = CodeSpec.make(k, 257)
         code = DoubleCirculantMSR(spec)
         n = spec.n
-        rng = np.random.default_rng(0)
+        rng = _timing.rng()
         data = jnp.asarray(rng.integers(0, 257, (n, stream_symbols),
                                         dtype=np.int64), jnp.int32)
         mt = jnp.asarray(code._mt)

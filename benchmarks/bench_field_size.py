@@ -9,6 +9,7 @@ circulant MSR code plus the number of coefficient candidates tried.
 import itertools
 import time
 
+from benchmarks import _timing
 from repro.core import circulant
 
 
@@ -21,7 +22,7 @@ def scaling_limit(quiet=False) -> dict:
     import numpy as np
     from repro.core import gf
     out = {}
-    rng = np.random.default_rng(0)
+    rng = _timing.rng()
     for k in (4, 8, 10, 12):
         p = 257
         c = rng.integers(1, p, size=k).tolist()

@@ -1,0 +1,397 @@
+"""Execution-plan layer + unified pipeline benchmark (DESIGN.md §11.4).
+
+The workload is a seeded STREAM of mixed-size objects — the regime the
+exec layer exists for (thousands of distinct object sizes; every new
+size is a new XLA shape).  Each measured pass puts/gets objects whose
+sizes were never seen before, drawn from one documented distribution
+(`_timing.rng`), so the two execution modes show their real steady
+states:
+
+* **pre-plan serial** — planning disabled (per-shape ``jax.jit``: >= one
+  XLA compile per distinct stream shape, forever, since fresh sizes keep
+  arriving) and pipeline depth 1 (no I/O⇄compute overlap): the code
+  before this layer;
+* **planned overlapped** — shape-bucketed AOT executables + depth-2
+  pipelines: after the warm-up pass covers the bucket ladder, ZERO
+  compiles ever again (asserted here — the CI bench-smoke job fails on
+  any steady-state recompile).
+
+Emits repo-root ``BENCH_pipeline.json``:
+
+* ``recompiles`` — measured XLA compile counts per pass for both modes
+  (via ``jax.monitoring``), plus ``plan_stats()`` hits/misses/compiles;
+* ``store`` — steady-state mixed-stream put+get MB/s for both modes,
+  the speedup, and per-get latency p50/p99 over the planned passes;
+* ``restore`` — checkpoint save/restore MB/s over mixed state sizes for
+  both modes (restore exercises the reconstruct decode);
+* ``overlap`` — the pure pipeline effect at fixed plans: planned
+  depth-1/1-worker vs planned depth-2 MB/s on identical sizes, plus an
+  overlap-efficiency estimate vs the serial lower bound
+  ``max(t_compute, t_host)``.
+"""
+import contextlib
+import json
+import pathlib
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import _timing
+from repro.checkpoint.msr_checkpoint import MSRCheckpointer
+from repro.core.circulant import CodeSpec
+from repro.exec import plan
+from repro.store import CodedObjectStore
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# ---------------------------------------------------- XLA compile counter
+_COMPILES = {"n": 0, "on": False}
+
+
+def _listener(event: str, **kw) -> None:
+    if _COMPILES["on"] and "compile" in event:
+        _COMPILES["n"] += 1
+
+
+jax.monitoring.register_event_listener(_listener)
+
+
+@contextlib.contextmanager
+def count_compiles(out: dict, key: str):
+    """Count real XLA compiles (jit-cache misses AND AOT lowerings)
+    inside the block into ``out[key]``."""
+    _COMPILES["n"], _COMPILES["on"] = 0, True
+    try:
+        yield
+    finally:
+        _COMPILES["on"] = False
+        out[key] = _COMPILES["n"]
+
+
+# ------------------------------------------------------------- workloads
+def _draw_sizes(rng, n: int, lo: int, hi: int, seen: set) -> list[int]:
+    """n object sizes from the documented distribution, none seen before
+    (a fresh-shape stream — every pass is 'new objects arriving')."""
+    out = []
+    while len(out) < n:
+        s = int(rng.integers(lo, hi))
+        if s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
+
+
+def _payloads(rng, sizes) -> list[bytes]:
+    return [rng.integers(0, 256, s, dtype=np.int64).astype(np.uint8)
+            .tobytes() for s in sizes]
+
+
+def _store(spec, *, depth: int, workers: int, stripe_symbols: int,
+           tile: int) -> CodedObjectStore:
+    return CodedObjectStore(spec, n_nodes=spec.n + 4,
+                            stripe_symbols=stripe_symbols,
+                            pipeline_depth=depth, io_workers=workers,
+                            put_tile_stripes=tile)
+
+
+def _put_get_pass(store, payloads, tag: str, latencies=None) -> float:
+    """One stream pass: put then get every object (bit-exact asserted).
+    Returns wall seconds; appends per-get latency when given."""
+    t0 = time.perf_counter()
+    for i, pl in enumerate(payloads):
+        store.put(f"{tag}/{i}", pl)
+    for i, pl in enumerate(payloads):
+        g0 = time.perf_counter()
+        got = store.get(f"{tag}/{i}")
+        if latencies is not None:
+            latencies.append(time.perf_counter() - g0)
+        assert got == pl, "store roundtrip not bit-exact"
+    return time.perf_counter() - t0
+
+
+def _prewarm(code, max_extent: int) -> None:
+    """Compile the full executable grid up front — the production
+    startup pattern (precompile-at-init, as in async-checkpointing
+    runtimes): every ladder bucket up to ``max_extent`` for the three
+    planned op shapes the put/get/save/restore paths dispatch (encode
+    (n, b); full any-k decode (n, n) @ (n, b); single-row degraded
+    decode (1, n) @ (n, b)).  Plan keys depend only on shapes, so this
+    covers EVERY workload object size — zero compiles afterwards.
+    """
+    n = code.n
+    row = np.zeros((1, n), np.int32)
+    full = np.zeros((n, n), np.int32)
+    b = plan.BUCKET_MIN
+    while True:
+        z = np.zeros((n, b), np.int32)
+        code.encode_planned(z).host()
+        code.repair.apply_planned(full, z).host()
+        code.repair.apply_planned(row, z).host()
+        if b >= max_extent:
+            break
+        b = code.planner.bucket(b + 1)
+
+
+# ------------------------------------------------------------ store bench
+def bench_store(spec, *, sizes_per_pass: int, lo: int, hi: int,
+                stripe_symbols: int, tile: int, passes: int,
+                quiet: bool) -> dict:
+    rng = _timing.rng(1)
+    seen: set = set()
+    comp: dict = {}
+    out: dict = {"sizes_per_pass": sizes_per_pass, "size_range": [lo, hi],
+                 "stripe_symbols": stripe_symbols,
+                 "put_tile_stripes": tile, "seed": _timing.BENCH_SEED}
+
+    # Two stores, one per execution mode.  Measured passes INTERLEAVE the
+    # modes (serial, planned, serial, planned, ...) and each mode's MB/s
+    # is its best pass — on throttled/burstable hosts a sequential A-then-B
+    # schedule hands whichever mode runs later a slower machine (the same
+    # pairing discipline bench_regeneration uses).
+    jax.clear_caches()
+    st_serial = _store(spec, depth=1, workers=1,
+                       stripe_symbols=stripe_symbols, tile=tile)
+    st_plan = _store(spec, depth=2, workers=2,
+                     stripe_symbols=stripe_symbols, tile=tile)
+    with plan.planning_disabled():
+        warm = _payloads(rng, _draw_sizes(rng, sizes_per_pass, lo, hi, seen))
+        _put_get_pass(st_serial, warm, "w")                # warm jit core
+        st_serial.fail_node(2)
+        _put_get_pass(st_serial, warm, "w")                # degraded warm
+    plan.reset_plan_stats()
+    per_stripe = spec.n * stripe_symbols
+    max_stripes = -(-hi // per_stripe)
+    with count_compiles(comp, "planned_warmup"):
+        _prewarm(st_plan.code, st_plan.code.planner.bucket(
+            max_stripes * stripe_symbols))
+        st_plan.fail_node(2)
+    stats_warm = plan.plan_stats()
+
+    serial_best, planned_best, per_pass, lat = 0.0, 0.0, [], []
+    comp["planned_steady"] = 0
+    for p in range(passes):
+        pls = _payloads(rng, _draw_sizes(rng, sizes_per_pass, lo, hi, seen))
+        mb = 2 * sum(len(x) for x in pls) / 2**20
+        with plan.planning_disabled():
+            with count_compiles(comp, f"serial_pass{p}"):
+                serial_best = max(serial_best,
+                                  mb / _put_get_pass(st_serial, pls,
+                                                     f"s{p}"))
+        per_pass.append(comp[f"serial_pass{p}"])
+        pls = _payloads(rng, _draw_sizes(rng, sizes_per_pass, lo, hi, seen))
+        mb = 2 * sum(len(x) for x in pls) / 2**20
+        with count_compiles(comp, f"planned_pass{p}"):
+            planned_best = max(planned_best,
+                               mb / _put_get_pass(st_plan, pls, f"p{p}",
+                                                  latencies=lat))
+        comp["planned_steady"] += comp[f"planned_pass{p}"]
+    stats = plan.plan_stats()
+    st_serial.close()
+    st_plan.close()
+    out["serial_mbps"] = round(serial_best, 1)
+    out["serial_compiles_per_pass"] = per_pass
+    out["planned_mbps"] = round(planned_best, 1)
+    out["planned_warmup_compiles"] = comp["planned_warmup"]
+    out["planned_steady_compiles"] = comp["planned_steady"]
+    out["plan_steady_new_compiles"] = stats.compiles - stats_warm.compiles
+    out["plan_stats"] = stats._asdict()
+    out["speedup_vs_serial"] = round(out["planned_mbps"]
+                                     / out["serial_mbps"], 2)
+    out["get_latency_s"] = {k: round(v, 5) for k, v in
+                            _timing.percentiles(lat).items()}
+    if not quiet:
+        print(f"[pipeline] store stream: serial {out['serial_mbps']} MB/s "
+              f"({per_pass} compiles/pass) -> planned+overlapped "
+              f"{out['planned_mbps']} MB/s ({out['planned_steady_compiles']}"
+              f" steady compiles) = {out['speedup_vs_serial']}x; "
+              f"get p50 {out['get_latency_s']['p50']*1e3:.1f} ms "
+              f"p99 {out['get_latency_s']['p99']*1e3:.1f} ms")
+    return out
+
+
+# ------------------------------------------------------- pipeline overlap
+def bench_overlap(spec, *, object_mb: float, n_objects: int,
+                  stripe_symbols: int, tile: int, quiet: bool) -> dict:
+    """The pure pipeline effect: identical sizes, plans warm in both
+    runs — only depth/workers differ.  Also estimates the serial lower
+    bound max(t_compute, t_host) from a compute-only pass."""
+    rng = _timing.rng(2)
+    size = int(object_mb * 2**20)
+    pls = _payloads(rng, [size] * n_objects)
+    total_mb = n_objects * size / 2**20
+
+    def mk(depth, workers):
+        st = _store(spec, depth=depth, workers=workers,
+                    stripe_symbols=stripe_symbols, tile=tile)
+        for i, pl in enumerate(pls):
+            st.put(f"w{i}", pl)                            # warm plans
+        return st
+
+    def one_pass(st):
+        t0 = time.perf_counter()
+        for i, pl in enumerate(pls):
+            st.put(f"o{i}", pl)
+        return time.perf_counter() - t0
+
+    # interleave the paired measurements (throttled-host discipline)
+    st, st2 = mk(1, 1), mk(2, 2)
+    t_serial = t_overlap = float("inf")
+    for _ in range(3):
+        t_serial = min(t_serial, one_pass(st))
+        t_overlap = min(t_overlap, one_pass(st2))
+    # compute-only: flatten+encode+force, no share placement
+    blocks, smap = st.stripes.chunk(pls[0])
+    t0 = time.perf_counter()
+    for _ in range(n_objects):
+        for s0 in range(0, smap.n_stripes, tile):
+            st.code.encode_planned(
+                st.stripes.flatten(blocks[s0:s0 + tile])).host()
+    t_compute = time.perf_counter() - t0
+    t_host = max(t_serial - t_compute, 1e-9)
+    st.close()
+    st2.close()
+    bound = max(t_compute, t_host)
+    out = {
+        "object_mb": object_mb, "n_objects": n_objects,
+        "put_serial_mbps": round(total_mb / t_serial, 1),
+        "put_overlap_mbps": round(total_mb / t_overlap, 1),
+        "overlap_speedup": round(t_serial / t_overlap, 2),
+        "t_compute_s": round(t_compute, 4), "t_host_s": round(t_host, 4),
+        "serial_lower_bound_s": round(bound, 4),
+        "overlap_efficiency": round(bound / t_overlap, 2),
+    }
+    if not quiet:
+        print(f"[pipeline] put overlap: serial {out['put_serial_mbps']} "
+              f"MB/s -> depth-2 {out['put_overlap_mbps']} MB/s "
+              f"({out['overlap_speedup']}x, efficiency "
+              f"{out['overlap_efficiency']} of the "
+              f"max(compute, host) bound)")
+    return out
+
+
+# ------------------------------------------------------- checkpoint bench
+def bench_restore(spec, *, state_mbs, passes: int, quiet: bool) -> dict:
+    """Mixed-size checkpoint save/restore stream, both modes; restore
+    takes the reconstruct path (2 failures, repair off) — the decode-
+    heavy direction."""
+    rng = _timing.rng(3)
+    comp: dict = {}
+
+    def mk_state(mb: float, salt: int):
+        n_f32 = max(1, int(mb * 2**20) // 8)
+        r = _timing.rng(1000 + salt)
+        return {"w": r.normal(size=(n_f32,)).astype(np.float32),
+                "m": r.normal(size=(n_f32,)).astype(np.float32)}
+
+    def stream(ck, mbs, tag_comp=None):
+        t_total, mb_total = 0.0, 0.0
+        for i, mb in enumerate(mbs):
+            state = mk_state(mb, i)
+            t0 = time.perf_counter()
+            ck.save(i, state)
+            got, rep = ck.restore(state, i, failed_nodes=[1, 3],
+                                  repair=False)
+            t_total += time.perf_counter() - t0
+            np.testing.assert_array_equal(got["w"], state["w"])
+            mb_total += 2 * mb                       # save + restore traffic
+        return t_total, mb_total
+
+    out = {"state_mbs": list(state_mbs)}
+    with tempfile.TemporaryDirectory() as d:
+        jax.clear_caches()
+        ck_serial = MSRCheckpointer(pathlib.Path(d) / "serial", spec,
+                                    pipeline_depth=1, io_workers=1)
+        ck_plan = MSRCheckpointer(pathlib.Path(d) / "planned", spec,
+                                  pipeline_depth=2, io_workers=2)
+        with plan.planning_disabled():
+            stream(ck_serial, [state_mbs[0]])            # warm jit core
+        # state of M MB serializes to ~M*2^20 payload bytes -> M*2^20/n
+        # symbols per block; 1.25 margin covers the size jitter
+        max_extent = int(1.25 * max(state_mbs) * 2**20) // spec.n
+        with count_compiles(comp, "warmup"):
+            _prewarm(ck_plan.code, ck_plan.code.planner.bucket(max_extent))
+            stream(ck_plan, [max(state_mbs)])      # warm the non-GF plumbing
+
+        # interleaved rounds, fresh odd sizes per pass, best-of per mode
+        # (throttled-host discipline, see bench_store)
+        serial_best = planned_best = 0.0
+        comp["serial"] = comp["steady"] = 0
+        for p in range(passes):
+            jit1, jit2 = rng.uniform(0.8, 1.2, len(state_mbs) * 2) \
+                .reshape(2, -1)
+            with plan.planning_disabled():
+                with count_compiles(comp, f"serial{p}"):
+                    t, mb = stream(ck_serial,
+                                   [m * j for m, j in zip(state_mbs, jit1)])
+            serial_best = max(serial_best, mb / t)
+            comp["serial"] += comp[f"serial{p}"]
+            with count_compiles(comp, f"steady{p}"):
+                t, mb = stream(ck_plan,
+                               [m * j for m, j in zip(state_mbs, jit2)])
+            planned_best = max(planned_best, mb / t)
+            comp["steady"] += comp[f"steady{p}"]
+        out["serial_mbps"] = round(serial_best, 1)
+        out["serial_compiles"] = comp["serial"]
+        out["planned_mbps"] = round(planned_best, 1)
+        out["planned_warmup_compiles"] = comp["warmup"]
+        out["planned_steady_compiles"] = comp["steady"]
+        out["speedup_vs_serial"] = round(out["planned_mbps"]
+                                         / out["serial_mbps"], 2)
+    if not quiet:
+        print(f"[pipeline] checkpoint stream: serial {out['serial_mbps']} "
+              f"MB/s ({out['serial_compiles']} compiles) -> planned "
+              f"{out['planned_mbps']} MB/s "
+              f"({out['planned_steady_compiles']} steady compiles) = "
+              f"{out['speedup_vs_serial']}x")
+    return out
+
+
+# ------------------------------------------------------------------- run
+def run(k: int = 4, *, fast: bool = False, quiet: bool = False) -> dict:
+    spec = CodeSpec.make(k, 257)
+    if fast:
+        store_kw = dict(sizes_per_pass=6, lo=16 << 10, hi=256 << 10,
+                        stripe_symbols=1024, tile=8, passes=2)
+        overlap_kw = dict(object_mb=1.0, n_objects=2, stripe_symbols=2048,
+                          tile=8)
+        restore_kw = dict(state_mbs=(0.5, 1.0), passes=1)
+    else:
+        store_kw = dict(sizes_per_pass=12, lo=16 << 10, hi=2 << 20,
+                        stripe_symbols=2048, tile=16, passes=3)
+        overlap_kw = dict(object_mb=4.0, n_objects=4, stripe_symbols=4096,
+                          tile=8)
+        restore_kw = dict(state_mbs=(1.0, 2.0, 4.0), passes=2)
+    rec = {
+        "k": k, "n": spec.n, "fast": fast, "seed": _timing.BENCH_SEED,
+        "store": bench_store(spec, quiet=quiet, **store_kw),
+        "overlap": bench_overlap(spec, quiet=quiet, **overlap_kw),
+        "restore": bench_restore(spec, quiet=quiet, **restore_kw),
+    }
+    rec["recompiles"] = {
+        "serial_store_compiles_per_pass":
+            rec["store"]["serial_compiles_per_pass"],
+        "serial_restore_compiles": rec["restore"]["serial_compiles"],
+        "planned_warmup_compiles":
+            rec["store"]["planned_warmup_compiles"]
+            + rec["restore"]["planned_warmup_compiles"],
+        "planned_steady_compiles":
+            rec["store"]["planned_steady_compiles"]
+            + rec["restore"]["planned_steady_compiles"],
+    }
+    rec["bit_exact"] = True          # every pass asserts roundtrips above
+    # THE steady-state guarantee (acceptance + CI gate): after warm-up the
+    # planned mode never compiles again, however many fresh sizes arrive
+    if rec["recompiles"]["planned_steady_compiles"] != 0:
+        raise RuntimeError(
+            f"steady-state recompile regression: planned mode compiled "
+            f"{rec['recompiles']['planned_steady_compiles']} time(s) after "
+            f"warm-up (plan stats: {rec['store']['plan_stats']})")
+    (REPO_ROOT / "BENCH_pipeline.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+    run(fast="--fast" in sys.argv)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import _timing
 from benchmarks._timing import timeit
 from repro.core.baselines import embedded_repair_cost, solve_based_msr_repair_cost
 from repro.core.circulant import CodeSpec
@@ -71,7 +72,7 @@ def run(ks=(2, 4, 8), block_symbols: int = 1 << 18, quiet=False,
         spec = CodeSpec.make(k, 257)
         code = DoubleCirculantMSR(spec)
         n = spec.n
-        rng = np.random.default_rng(k)
+        rng = _timing.rng(k)
         data = jnp.asarray(rng.integers(0, 257, (n, block_symbols),
                                         dtype=np.int64), jnp.int32)
         red = code.encode(data)

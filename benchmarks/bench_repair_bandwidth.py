@@ -17,6 +17,7 @@ import time
 
 import numpy as np
 
+from benchmarks import _timing
 from repro.core.baselines import ReplicationScheme
 from repro.core.circulant import CodeSpec
 from repro.checkpoint.msr_checkpoint import MSRCheckpointer
@@ -30,7 +31,7 @@ def run(file_bytes: int = 1 << 20, ks=(2, 3, 4, 8), quiet=False):
     # subset count, so byte-field storage groups top out at n = 16; larger
     # clusters scale out via multiple groups.
     rows = []
-    payload = np.random.default_rng(0).integers(0, 256, file_bytes, dtype=np.int64)
+    payload = _timing.rng().integers(0, 256, file_bytes, dtype=np.int64)
     state = {"blob": payload.astype(np.int32)}  # 4 B/entry -> B = 4*file_bytes
     for k in ks:
         spec = CodeSpec.make(k, 257)

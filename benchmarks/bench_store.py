@@ -26,6 +26,7 @@ import numpy as np
 from repro.core.circulant import CodeSpec
 from repro.store import CodedObjectStore, RepairScheduler
 
+from benchmarks import _timing
 from benchmarks._timing import timeit
 
 
@@ -50,7 +51,7 @@ def run(ks=(4, 8), stripe_symbols: int = 1 << 12, n_objects: int = 8,
     rows = []
     for k in ks:
         spec = CodeSpec.make(k, 257)
-        rng = np.random.default_rng(0)
+        rng = _timing.rng()
         total_mb = n_objects * object_bytes / 2**20
 
         store = _make(spec, stripe_symbols, extra_nodes)
@@ -86,7 +87,7 @@ def run(ks=(4, 8), stripe_symbols: int = 1 << 12, n_objects: int = 8,
         drains = []
         for bs in budgets_stripes:
             st2 = _make(spec, stripe_symbols, extra_nodes)
-            _fill(st2, np.random.default_rng(0), n_objects, object_bytes)
+            _fill(st2, _timing.rng(), n_objects, object_bytes)
             sc2 = RepairScheduler(st2)
             st2.subscribe(sc2.on_event)
             for v in st2.layout.nodes_in(0):

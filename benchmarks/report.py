@@ -87,6 +87,15 @@ def _bench_headline(stem: str, rec) -> str:
             lat = rec[-1]["degraded_read_latency"]["steady_s"]
             return (f"worst repair ratio vs RS {worst}; degraded read "
                     f"{lat * 1e3:.2f} ms steady")
+        if stem == "BENCH_pipeline":
+            rc = rec["recompiles"]
+            return (f"k={rec['k']} mixed-size stream: store "
+                    f"{rec['store']['speedup_vs_serial']}x / ckpt "
+                    f"{rec['restore']['speedup_vs_serial']}x vs pre-plan "
+                    f"serial; steady recompiles "
+                    f"{rc['planned_steady_compiles']} (warmup "
+                    f"{rc['planned_warmup_compiles']}); get p99 "
+                    f"{rec['store']['get_latency_s']['p99']*1e3:.1f} ms")
         if stem == "BENCH_store":
             r = rec[-1]
             d = r["drain"][0]

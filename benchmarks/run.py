@@ -19,8 +19,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks import (bench_checkpoint, bench_cluster,
                         bench_encode_throughput, bench_field_size,
-                        bench_regeneration, bench_repair_bandwidth,
-                        bench_store, roofline)
+                        bench_pipeline, bench_regeneration,
+                        bench_repair_bandwidth, bench_store, roofline)
 
 OUT = pathlib.Path(__file__).resolve().parent / "results"
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -31,7 +31,8 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # to register here — both fail the run loudly instead of silently
 # shipping stale JSON.
 KNOWN_RESULTS = {"checkpoint", "cluster", "encode_throughput", "field_size",
-                 "regeneration", "repair_bandwidth", "roofline", "store"}
+                 "pipeline", "regeneration", "repair_bandwidth", "roofline",
+                 "store"}
 
 
 def check_results_dir() -> None:
@@ -154,6 +155,17 @@ def main() -> None:
                      f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
                      f"put_mbps={rows[-1]['put_mbps']};"
                      f"drain_ratio_vs_rs={rows[-1]['drain'][0]['ratio_vs_rs']}"))
+
+    print("== exec layer: plan cache + overlapped pipeline ===========")
+    t0 = time.perf_counter()
+    # raises on any steady-state recompile — the bench IS the CI gate
+    rec = bench_pipeline.run(fast=args.fast, quiet=quiet)
+    (OUT / "pipeline.json").write_text(json.dumps(rec, indent=1))
+    csv_rows.append(("pipeline",
+                     f"{(time.perf_counter()-t0)*1e6:.0f}",
+                     f"ckpt_speedup={rec['restore']['speedup_vs_serial']}x;"
+                     f"steady_recompiles="
+                     f"{rec['recompiles']['planned_steady_compiles']}"))
 
     print("== roofline (dry-run artifacts) ===========================")
     t0 = time.perf_counter()

@@ -28,6 +28,13 @@ fused repair engine, multi-failure repair produces all lost pairs from one
 decode matmul, and ``scrub(step)`` is a degraded-read pass that re-derives
 every node pair through the batched engine and flags inconsistencies.
 
+All four streaming paths (save, restore, repair_node, scrub) run on ONE
+engine — `repro.exec.Pipeline` (DESIGN.md §11.3) — and all GF compute
+dispatches through the shape-bucketed execution-plan cache (§11.1), so a
+steady-state save/restore loop over arbitrarily mixed state sizes
+performs zero XLA recompiles after warm-up.  ``pipeline_depth=1`` turns
+the overlap off (the benchmark's serial baseline).
+
 Store-backed mode (``MSRCheckpointer(None, store=...)``, DESIGN.md §10.4):
 redundancy is delegated to a coded object store — one object per pytree
 leaf group plus a manifest — and restores ride the store's transparent
@@ -40,7 +47,7 @@ import dataclasses
 import json
 import pathlib
 import shutil
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import Future
 from typing import Any, Optional, Sequence
 
 import jax
@@ -49,26 +56,11 @@ import numpy as np
 from repro.core import gf, placement
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
+from repro.exec.pipeline import Pipeline
 
 # Stream-axis tile (symbols) for the streaming encode: bounds the int32
 # intermediates on device and lets host file writes overlap device compute.
 SAVE_TILE_SYMBOLS = 1 << 20
-
-
-def _stream_tiles(s_total: int, tile: int, compute, consume) -> None:
-    """Depth-2 stream-tile pipeline (DESIGN.md §3.3/§4): dispatch tile t+1
-    to the device before consuming tile t's result on the host, so at most
-    two tiles are in flight.  ``compute(sl)`` returns the device result for
-    stream slice ``sl``; ``consume(sl, result)`` lands it host-side."""
-    pending = None
-    for s0 in range(0, s_total, tile):
-        sl = slice(s0, min(s0 + tile, s_total))
-        part = compute(sl)
-        if pending is not None:
-            consume(*pending)
-        pending = (sl, part)
-    if pending is not None:
-        consume(*pending)
 
 
 @dataclasses.dataclass
@@ -111,17 +103,24 @@ class _MeteredReader:
     how the pre-PR-4 duplication bug class arose).
     """
 
-    def __init__(self, ckpt: "MSRCheckpointer", ex: ThreadPoolExecutor):
+    def __init__(self, ckpt: "MSRCheckpointer", pipe: Pipeline):
         self._ckpt = ckpt
-        self._ex = ex
+        self._pipe = pipe
         self.bytes_read = 0
 
     def submit(self, ref) -> Future:
         """Async read of a node file path or a store object key."""
-        return self._ex.submit(self._ckpt._read_block, ref)
+        return self._pipe.submit(self._ckpt._read_block, ref)
 
-    def take(self, fut: Future) -> np.ndarray:
-        """Land one read: returns the array, meters its bytes."""
+    def submit_packed(self, ref) -> Future:
+        """Async read of a packed ``.npz`` redundancy block WITHOUT
+        unpacking: lands ``(low, hi)`` so row-batched callers (scrub,
+        the reconstruct download set) unpack every row in one
+        vectorized `gf.unpack257_rows` instead of per-pair loops."""
+        return self._pipe.submit(self._ckpt._read_packed, ref)
+
+    def take(self, fut: Future):
+        """Land one read: returns the payload, meters its bytes."""
         arr, nbytes = fut.result()
         self.bytes_read += nbytes
         return arr
@@ -147,7 +146,7 @@ class MSRCheckpointer:
                  matmul=None,
                  backend: Optional[str] = None, keep_last: int = 3,
                  save_tile_symbols: int = SAVE_TILE_SYMBOLS,
-                 io_workers: int = 4, store=None,
+                 io_workers: int = 4, pipeline_depth: int = 2, store=None,
                  object_prefix: str = "ckpt",
                  leaf_group_bytes: int = 1 << 20):
         self._store = store
@@ -169,12 +168,19 @@ class MSRCheckpointer:
         self.keep_last = keep_last
         self.save_tile_symbols = max(1, save_tile_symbols)
         self.io_workers = max(1, io_workers)
+        self.pipeline_depth = max(1, pipeline_depth)
         self.dir = None
         if directory is not None:
             self.dir = pathlib.Path(directory)
             self.dir.mkdir(parents=True, exist_ok=True)
         elif store is None:
             raise ValueError("need a directory (or a store=)")
+
+    def _pipe(self, io_workers: Optional[int] = None) -> Pipeline:
+        """One streaming engine per operation (DESIGN.md §11.3): pooled
+        host I/O + depth-bounded compute/consume overlap."""
+        return Pipeline(io_workers=io_workers or self.io_workers,
+                        depth=self.pipeline_depth)
 
     # ------------------------------------------------------------------ paths
     def _step_dir(self, step: int) -> pathlib.Path:
@@ -282,27 +288,26 @@ class MSRCheckpointer:
         tmp.mkdir(parents=True)
         s_total = blocks.shape[1]
         tile = self.save_tile_symbols
-        with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
-            writes: list[Future] = []
+        with self._pipe() as pipe:
             # systematic blocks are raw bytes — no compute, write immediately
             for i in range(1, n + 1):
-                writes.append(ex.submit(
-                    np.save, tmp / f"node_{i:02d}.a.npy",
-                    blocks[i - 1].astype(np.uint8)))
-            # depth-2 pipeline: force tile t only after dispatching t+1
+                pipe.submit(np.save, tmp / f"node_{i:02d}.a.npy",
+                            blocks[i - 1].astype(np.uint8))
+            # depth-bounded pipeline over PLANNED encode tiles: tile t+1 is
+            # dispatched (AOT executable, bucketed shape — zero recompiles
+            # at steady state) before tile t lands in the host buffer
             red = np.empty((n, s_total), np.int32)
-            _stream_tiles(s_total, tile,
-                          lambda sl: self.code.encode(blocks[:, sl]),
-                          lambda sl, part: red.__setitem__(
-                              (slice(None), sl), np.asarray(part)))
+            pipe.stream_tiles(
+                s_total, tile,
+                lambda sl: self.code.encode_planned(blocks[:, sl]),
+                lambda sl, res: red.__setitem__(
+                    (slice(None), sl), res.host()))
             # vectorized pack over all nodes at once (no per-node loop)
             low, his = gf.pack257_rows(red)
             for i in range(1, n + 1):
-                writes.append(ex.submit(
-                    np.savez, tmp / f"node_{i:02d}.r.npz",
-                    low=low[i - 1], hi=his[i - 1]))
-            for w in writes:
-                w.result()                  # surface any I/O error
+                pipe.submit(np.savez, tmp / f"node_{i:02d}.r.npz",
+                            low=low[i - 1], hi=his[i - 1])
+            # context exit joins every write and surfaces any I/O error
         manifest = {
             "step": step, "k": self.spec.k, "p": self.spec.p,
             "c": list(self.spec.c), "tree": tspec.to_json(),
@@ -347,29 +352,40 @@ class MSRCheckpointer:
         arr = np.load(ref)
         return arr.astype(np.int32), arr.nbytes
 
+    def _read_packed(self, ref) -> tuple[tuple[np.ndarray, np.ndarray], int]:
+        """One packed redundancy read -> ((low, hi), bytes) — the raw
+        pack257 parts, NOT unpacked: row-batched callers collect n of
+        these and expand them in one `gf.unpack257_rows` pass."""
+        z = np.load(ref)
+        low, hi = z["low"], z["hi"]
+        return (low, hi), low.nbytes + hi.nbytes
+
     # ---------------------------------------------------- tiled decode stages
-    def _regenerate_tiled(self, node: int, r_prev: np.ndarray,
+    def _regenerate_tiled(self, pipe: Pipeline, node: int,
+                          r_prev: np.ndarray,
                           next_data: np.ndarray) -> np.ndarray:
-        """Depth-2 stream-tile pipeline over the fused regenerate matmul:
-        tile t+1 is dispatched while tile t's (2, T) result lands in the
-        preallocated host pair buffer (mirrors the streaming save)."""
+        """Depth-bounded stream-tile pipeline over the PLANNED fused
+        regenerate: tile t+1 is dispatched while tile t's (2, T) result
+        lands in the preallocated host pair buffer (mirrors the
+        streaming save)."""
         out = np.empty((2, r_prev.shape[-1]), np.int32)
-        _stream_tiles(r_prev.shape[-1], self.save_tile_symbols,
-                      lambda sl: self.code.repair.regenerate_stacked(
-                          node, r_prev[sl], next_data[:, sl]),
-                      lambda sl, part: out.__setitem__(
-                          (slice(None), sl), np.asarray(part)))
+        pipe.stream_tiles(
+            r_prev.shape[-1], self.save_tile_symbols,
+            lambda sl: self.code.repair.regenerate_planned(
+                node, r_prev[sl], next_data[:, sl]),
+            lambda sl, res: out.__setitem__((slice(None), sl), res.host()))
         return out
 
-    def _decode_tiled(self, mat: np.ndarray, downloads: np.ndarray) -> np.ndarray:
-        """Depth-2 stream-tile pipeline for (mat @ downloads) mod p — the
-        any-k decode (and, with repair rows stacked, the lost-pair
-        re-encode) through the dispatched backend."""
+    def _decode_tiled(self, pipe: Pipeline, mat: np.ndarray,
+                      downloads: np.ndarray) -> np.ndarray:
+        """Depth-bounded stream-tile pipeline for (mat @ downloads) mod p
+        — the any-k decode (and, with repair rows stacked, the lost-pair
+        re-encode) through the planned dispatch."""
         out = np.empty((mat.shape[0], downloads.shape[-1]), np.int32)
-        _stream_tiles(downloads.shape[-1], self.save_tile_symbols,
-                      lambda sl: self.code.repair.apply(mat, downloads[:, sl]),
-                      lambda sl, part: out.__setitem__(
-                          (slice(None), sl), np.asarray(part)))
+        pipe.stream_tiles(
+            downloads.shape[-1], self.save_tile_symbols,
+            lambda sl: self.code.repair.apply_planned(mat, downloads[:, sl]),
+            lambda sl, res: out.__setitem__((slice(None), sl), res.host()))
         return out
 
     # ---------------------------------------------------------------- restore
@@ -421,8 +437,8 @@ class MSRCheckpointer:
                                f"nodes alive, need k={k}")
         repaired: list[int] = []
 
-        with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
-            reader = _MeteredReader(self, ex)
+        with self._pipe() as pipe:
+            reader = _MeteredReader(self, pipe)
             read_async, result = reader.submit, reader.take
 
             if not failed:
@@ -444,11 +460,11 @@ class MSRCheckpointer:
                              for i in rest}
                 r_prev = result(fut_prev)
                 next_data = np.stack([result(x) for x in futs_help])
-                pair = self._regenerate_tiled(f, r_prev, next_data)
+                pair = self._regenerate_tiled(pipe, f, r_prev, next_data)
                 a_new, r_new = pair[0], pair[1]
                 af, rf = self._node_files(step, f)
                 low, hi = gf.pack257(r_new)
-                write = ex.submit(self._write_node_pair, af, rf, a_new, low, hi)
+                pipe.submit(self._write_node_pair, af, rf, a_new, low, hi)
                 repaired.append(f)
                 data = np.zeros((n, tspec.block_symbols), np.int32)
                 have = dict(zip(plan.data_indices, next_data))
@@ -456,32 +472,38 @@ class MSRCheckpointer:
                 for i in range(1, n + 1):
                     idx = i - 1
                     data[idx] = have[idx] if idx in have else result(futs_rest[i])
-                write.result()
                 path = "regenerate"
             else:
                 use = alive[:k]                      # sorted by construction
                 futs = [read_async(self._node_files(step, i)[0]) for i in use]
-                futs += [read_async(self._node_files(step, i)[1]) for i in use]
-                downloads = np.stack([result(x) for x in futs])   # (2k, S)
+                futs_r = [reader.submit_packed(self._node_files(step, i)[1])
+                          for i in use]
+                data_rows = np.stack([result(x) for x in futs])
+                packed = [result(x) for x in futs_r]
+                # one vectorized unpack for all k redundancy rows — no
+                # per-pair unpack257 loop on the read path
+                red_rows = gf.unpack257_rows(
+                    np.stack([lo for lo, _ in packed]),
+                    [hi for _, hi in packed])
+                downloads = np.concatenate([data_rows, red_rows])  # (2k, S)
                 if repair and failed:
                     # one decode matmul yields the data AND every lost pair
                     mat = self.code.repair.decode_repair_matrix(
                         tuple(use), failed)
                     data, red_f = self.code.repair.split_decode_output(
-                        self._decode_tiled(mat, downloads))
-                    writes = []
+                        self._decode_tiled(pipe, mat, downloads))
+                    # one vectorized pack for all lost redundancy rows
+                    low_f, his_f = gf.pack257_rows(red_f)
                     for j, fl in enumerate(failed):
                         af, rf = self._node_files(step, fl)
-                        low, hi = gf.pack257(red_f[j])
-                        writes.append(ex.submit(self._write_node_pair, af, rf,
-                                                data[fl - 1], low, hi))
+                        pipe.submit(self._write_node_pair, af, rf,
+                                    data[fl - 1], low_f[j], his_f[j])
                         repaired.append(fl)
-                    for w in writes:
-                        w.result()
                 else:
                     mat = self.code.repair.decode_matrix(tuple(use))
-                    data = self._decode_tiled(mat, downloads)
+                    data = self._decode_tiled(pipe, mat, downloads)
                 path = "reconstruct"
+            # context exit joins the repaired-pair writes
 
         treedef = jax.tree_util.tree_structure(template)
         state = placement.blocks_to_pytree(data.astype(np.int32), treedef, tspec)
@@ -513,8 +535,8 @@ class MSRCheckpointer:
         tspec = placement.TreeSpec.from_json(manifest["tree"])
         # store objects are in-memory: serial reads through the shared
         # metering funnel (no I/O latency to hide with a pool)
-        with ThreadPoolExecutor(max_workers=1) as ex:
-            reader = _MeteredReader(self, ex)
+        with self._pipe(io_workers=1) as pipe:
+            reader = _MeteredReader(self, pipe)
             reader.bytes_read += mbytes
             futs = [reader.submit(self._okey(step, f"g{gi:04d}"))
                     for gi in range(manifest["n_groups"])]
@@ -553,17 +575,18 @@ class MSRCheckpointer:
         scheduler."""
         self._require_directory("repair_node")
         plan = self.code.repair_plan(node)
-        with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
-            reader = _MeteredReader(self, ex)
+        with self._pipe() as pipe:
+            reader = _MeteredReader(self, pipe)
             fut_prev = reader.submit(self._node_files(step, plan.prev_node)[1])
             futs = [reader.submit(self._node_files(step, j)[0])
                     for j in plan.next_nodes]
             r_prev = reader.take(fut_prev)
             helpers = [reader.take(f) for f in futs]
-        pair = self._regenerate_tiled(node, r_prev, np.stack(helpers))
-        af, rf = self._node_files(step, node)
-        low, hi = gf.pack257(pair[1])
-        self._write_node_pair(af, rf, pair[0], low, hi)
+            pair = self._regenerate_tiled(pipe, node, r_prev,
+                                          np.stack(helpers))
+            af, rf = self._node_files(step, node)
+            low, hi = gf.pack257(pair[1])
+            pipe.submit(self._write_node_pair, af, rf, pair[0], low, hi)
         return reader.bytes_read
 
     def _require_directory(self, op: str) -> None:
@@ -599,33 +622,38 @@ class MSRCheckpointer:
         """
         self._require_directory("scrub")
         n, k = self.spec.n, self.spec.k
-        with ThreadPoolExecutor(max_workers=self.io_workers) as ex:
-            reader = _MeteredReader(self, ex)
+        with self._pipe() as pipe:
+            reader = _MeteredReader(self, pipe)
             futs_a = [reader.submit(self._node_files(step, i)[0])
                       for i in range(1, n + 1)]
-            futs_r = [reader.submit(self._node_files(step, i)[1])
+            futs_r = [reader.submit_packed(self._node_files(step, i)[1])
                       for i in range(1, n + 1)]
             rows_a = [reader.take(f) for f in futs_a]
-            rows_r = [reader.take(f) for f in futs_r]
-        data, red = np.stack(rows_a), np.stack(rows_r)
-        nodes = list(range(1, n + 1))
-        prev = np.asarray([self.code.repair_plan(i).prev_node - 1
-                           for i in nodes])
-        helper_idx = np.asarray([self.code.repair_plan(i).data_indices
-                                 for i in nodes])                  # (n, k)
-        mismatched: set[int] = set()
+            packed = [reader.take(f) for f in futs_r]
+            data = np.stack(rows_a)
+            # all n redundancy rows expanded in ONE vectorized unpack
+            red = gf.unpack257_rows(np.stack([lo for lo, _ in packed]),
+                                    [hi for _, hi in packed])
+            nodes = list(range(1, n + 1))
+            prev = np.asarray([self.code.repair_plan(i).prev_node - 1
+                               for i in nodes])
+            helper_idx = np.asarray([self.code.repair_plan(i).data_indices
+                                     for i in nodes])              # (n, k)
+            mismatched: set[int] = set()
 
-        def flag(sl: slice, out) -> None:
-            out = np.asarray(out)
-            bad = ((out[:, 0] != data[:, sl]).any(axis=1)
-                   | (out[:, 1] != red[:, sl]).any(axis=1))
-            mismatched.update(int(x) + 1 for x in np.nonzero(bad)[0])
+            def flag(sl: slice, res) -> None:
+                out = res.host()
+                bad = ((out[:, 0] != data[:, sl]).any(axis=1)
+                       | (out[:, 1] != red[:, sl]).any(axis=1))
+                mismatched.update(int(x) + 1 for x in np.nonzero(bad)[0])
 
-        # depth-2: compare tile t while t+1 computes
-        _stream_tiles(data.shape[1], self.save_tile_symbols,
-                      lambda sl: self.code.regenerate_batch(
-                          nodes, red[:, sl][prev], data[:, sl][helper_idx]),
-                      flag)
+            # depth-bounded: compare tile t while t+1 computes, through the
+            # planned batched engine (F = n is a fixed batch bucket)
+            pipe.stream_tiles(
+                data.shape[1], self.save_tile_symbols,
+                lambda sl: self.code.repair.regenerate_batch_planned(
+                    nodes, red[:, sl][prev], data[:, sl][helper_idx]),
+                flag)
         return ScrubReport(step=step, nodes_checked=n,
                            mismatched_nodes=tuple(sorted(mismatched)),
                            bytes_read=reader.bytes_read)

@@ -225,8 +225,10 @@ class ClusterSimulator:
         idx = [h - 1 for h in helpers]
         downloads = np.concatenate([self.node_a[idx], self.node_r[idx]])
         mat = self.code.repair.decode_matrix(tuple(helpers))
-        decoded = np.asarray(self.code.repair.apply(mat[missing], downloads),
-                             np.int32)
+        # planned dispatch (DESIGN.md §11): degraded serving stays
+        # recompile-free however many distinct stream extents it sees
+        decoded = self.code.repair.apply_planned(mat[missing],
+                                                 downloads).host()
         lat = self.link.degraded_read_s(
             2 * self.S, [self.slow[h - 1] for h in helpers])
         for row, j in enumerate(missing):
@@ -266,8 +268,8 @@ class ClusterSimulator:
         idx = [h - 1 for h in helpers]
         downloads = np.concatenate([self.node_a[idx], self.node_r[idx]])
         mat = self.code.repair.decode_matrix(tuple(helpers))
-        row = self.code.repair.apply(mat[block:block + 1], downloads)
-        return np.asarray(row, np.int32)[0]
+        return self.code.repair.apply_planned(mat[block:block + 1],
+                                              downloads).host()[0]
 
     # --------------------------------------------------------------- repair
     def _repair_failed(self, t: float) -> bool:
@@ -283,9 +285,9 @@ class ClusterSimulator:
         if len(failed) == 1 and self._embedded_helpers_up(failed[0]):
             f = failed[0]
             plan = self.code.repair_plan(f)
-            pair = np.asarray(self.code.repair.regenerate_stacked(
+            pair = self.code.repair.regenerate_planned(
                 f, self.node_r[plan.prev_node - 1],
-                self.node_a[list(plan.data_indices)]), np.int32)
+                self.node_a[list(plan.data_indices)]).host()
             self.node_a[f - 1], self.node_r[f - 1] = pair[0], pair[1]
             moved = (self.k + 1) * self.S       # gamma, eq. (7)
             path = "regenerate"
@@ -342,8 +344,8 @@ class ClusterSimulator:
                            for i in nodes])
         helper_idx = np.asarray([self.code.repair_plan(i).data_indices
                                  for i in nodes])
-        derived = np.asarray(self.code.regenerate_batch(
-            nodes, self.node_r[prev], self.node_a[helper_idx]), np.int32)
+        derived = self.code.repair.regenerate_batch_planned(
+            nodes, self.node_r[prev], self.node_a[helper_idx]).host()
         bad = ((derived[:, 0] != self.node_a).any(axis=1)
                | (derived[:, 1] != self.node_r).any(axis=1))
         flagged = tuple(int(i) + 1 for i in np.nonzero(bad)[0])

@@ -106,18 +106,23 @@ class DoubleCirculantMSR:
             self._circulant = be.circulant_encode
             engine_mm = be.matmul            # module-level singleton: the
                                              # engine's jit cache is shared
+            # shared per (backend, p): every code on this backend hits one
+            # AOT executable cache (DESIGN.md §11)
+            self.planner = be.planner(self.p)
         else:
             self.backend_name = "custom"
             self._matmul = matmul
             self._circulant = None
             engine_mm = matmul
+            self.planner = None              # custom kernels are not lowered
         self._m = spec.matrix_m()            # (n, n) M[j, i] = coef of a_j in r_{i+1}
         self._mt = np.ascontiguousarray(self._m.T)  # (n, n): r = M^T @ a
         # fused decode-side engine (DESIGN.md §4): repair matrix precomputed
         # here, reconstruction inverses LRU-cached across calls
         self.repair = RepairEngine(spec, engine_mm,
                                    jittable=not self._custom_matmul,
-                                   inverse_cache_size=inverse_cache_size)
+                                   inverse_cache_size=inverse_cache_size,
+                                   planner=self.planner)
 
     # ---------------------------------------------------------------- encode
     def encode(self, data: jnp.ndarray) -> jnp.ndarray:
@@ -135,6 +140,26 @@ class DoubleCirculantMSR:
             return self._circulant(data, tuple(int(x) for x in self.spec.c),
                                    self.p)
         return self._matmul(jnp.asarray(self._mt), data, self.p)
+
+    def encode_planned(self, data) -> "PlanResult":
+        """Planned encode (DESIGN.md §11): the circulant kernel at a
+        bucketed stream extent through the shared AOT executable cache.
+
+        Asynchronous — returns a `repro.exec.plan.PlanResult`; call
+        ``.host()`` to block and get the exact (n, S) numpy redundancy
+        matrix.  Bit-exact vs :meth:`encode` (padding is column-local),
+        with zero trace/compile work at steady state.  Custom-matmul
+        codes fall back to the eager :meth:`encode`.
+        """
+        from repro.exec.plan import PlanResult
+        data = np.asarray(data, np.int32)
+        if data.shape[0] != self.n:
+            raise ValueError(f"expected {self.n} data blocks, "
+                             f"got {data.shape[0]}")
+        if self.planner is not None:
+            return self.planner.circulant_encode(
+                data, tuple(int(x) for x in self.spec.c))
+        return PlanResult(self.encode(data), data.shape[-1])
 
     def node_storage(self, data: jnp.ndarray) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
         """[(a_{i-1}, r_i)] for node v_i, i = 1..n."""

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.exec.plan import PlanResult, make_regen_fn, planning_enabled
+
 from . import gf
 from .circulant import CodeSpec
 
@@ -74,28 +76,23 @@ def build_repair_matrix(spec: CodeSpec) -> np.ndarray:
 # backend matmuls are module-level singletons, so the jit cache is shared
 # across every engine instance (no per-code recompilation).
 #
-# Algebraically this is R @ [r_prev; next_data]; the r_prev column is peeled
-# out of the dispatched matmul into a row-0 scale-accumulate epilogue (the
-# backend axpy primitive's semantics — R[1, 0] is 0, so only the decode row
-# touches r_prev) because XLA's CPU int32 einsum degrades badly at tiny odd
-# contraction depths and the in-jit stack of the (k+1, S) helper matrix
-# costs a full extra memory pass.  Exactness: the matmul output is < p and
-# the epilogue term is <= (p-1)^2, so the sum stays inside the int32
-# envelope (kernels/envelope.py guarantees (p-1) + (p-1)^2 < 2^31) before
-# the single fold.
+# The kernel body itself (matmul + row-0 axpy epilogue, chosen because
+# XLA's CPU int32 einsum degrades badly at tiny odd contraction depths
+# and an in-jit stack of the (k+1, S) helper matrix costs a full extra
+# memory pass; exactness argument alongside it) is defined ONCE in
+# `exec.plan.make_regen_fn` — the planned AOT executables trace the same
+# function, so the two execution modes cannot desync.
 
 @functools.partial(jax.jit, static_argnames=("mm", "p"))
 def _fused_regenerate(mm, rmat, r_prev, next_data, p: int):
-    part = mm(rmat[:, 1:], next_data, p)                 # (2, S), < p
-    return part.at[0].set((part[0] + rmat[0, 0] * r_prev) % p)
+    return make_regen_fn(mm, p)(rmat, r_prev, next_data)
 
 
 @functools.partial(jax.jit, static_argnames=("mm", "p"))
 def _fused_regenerate_vmapped(mm, rmat, r_prevs, next_data, p: int):
-    def one(rp, nd):
-        part = mm(rmat[:, 1:], nd, p)
-        return part.at[0].set((part[0] + rmat[0, 0] * rp) % p)
-    return jax.vmap(one)(r_prevs, next_data)             # (F, 2, S)
+    one = make_regen_fn(mm, p)
+    return jax.vmap(lambda rp, nd: one(rmat, rp, nd))(
+        r_prevs, next_data)                              # (F, 2, S)
 
 
 class DecodeCacheInfo(NamedTuple):
@@ -194,6 +191,11 @@ class RepairEngine:
         applies.
     inverse_cache_size : int
         Capacity of :attr:`decode_cache`.
+    planner : repro.exec.plan.PlanCache, optional
+        Shape-bucketed AOT plan cache (DESIGN.md §11).  When set, the
+        ``*_planned`` methods run through pre-compiled bucketed
+        executables — zero recompiles at steady state — and fall back
+        to the per-shape jit paths when absent or globally disabled.
 
     Attributes
     ----------
@@ -208,7 +210,8 @@ class RepairEngine:
     """
 
     def __init__(self, spec: CodeSpec, matmul: MatmulFn, *,
-                 jittable: bool = True, inverse_cache_size: int = 128):
+                 jittable: bool = True, inverse_cache_size: int = 128,
+                 planner=None):
         self.spec = spec
         self.k, self.n, self.p = spec.k, spec.n, spec.p
         self._mm = matmul
@@ -218,6 +221,10 @@ class RepairEngine:
         self._rmat = jnp.asarray(self._rmat_np)
         self.decode_cache = DecodeInverseCache(spec, maxsize=inverse_cache_size)
         self._batch_vmap_ok = jittable
+        self.planner = planner
+
+    def _planned(self) -> bool:
+        return self.planner is not None and planning_enabled()
 
     # ------------------------------------------------------------ regenerate
     def repair_matrix(self, i: int | None = None) -> np.ndarray:
@@ -230,6 +237,16 @@ class RepairEngine:
         """(mat @ blocks) mod p through the dispatched backend."""
         return self._mm(jnp.asarray(mat, jnp.int32),
                         jnp.asarray(blocks, jnp.int32), self.p)
+
+    def apply_planned(self, mat, blocks) -> PlanResult:
+        """Planned (mat @ blocks) mod p (DESIGN.md §11): dispatched
+        through the shape-bucketed AOT executable cache — async; call
+        ``.host()`` on the result to block and get exact numpy.  Falls
+        back to :meth:`apply` (per-shape jit) without a planner."""
+        if self._planned():
+            return self.planner.matmul(mat, blocks)
+        blocks = np.asarray(blocks, np.int32)
+        return PlanResult(self.apply(mat, blocks), blocks.shape[-1])
 
     def regenerate_stacked(self, i: int, r_prev, next_data) -> jnp.ndarray:
         """Fused newcomer compute: one (2, k+1) repair-matrix application
@@ -254,6 +271,38 @@ class RepairEngine:
     def regenerate(self, i: int, r_prev, next_data) -> tuple[jnp.ndarray, jnp.ndarray]:
         out = self.regenerate_stacked(i, r_prev, next_data)
         return out[0], out[1]
+
+    def regenerate_planned(self, i: int, r_prev, next_data) -> PlanResult:
+        """Planned fused newcomer compute: the (2, k+1) repair-matrix
+        application through one bucketed AOT executable per (k, bucket).
+        Same contract as :meth:`regenerate_stacked`, asynchronous."""
+        next_data = np.asarray(next_data, np.int32)
+        if next_data.shape[0] != self.k:
+            raise ValueError(f"expected {self.k} helper data blocks, "
+                             f"got {next_data.shape[0]}")
+        if self._planned():
+            return self.planner.regenerate(self._rmat_np, r_prev, next_data)
+        r_prev = np.asarray(r_prev, np.int32)
+        return PlanResult(self.regenerate_stacked(i, r_prev, next_data),
+                          r_prev.shape[-1])
+
+    def regenerate_batch_planned(self, nodes: Sequence[int], r_prevs,
+                                 next_data) -> PlanResult:
+        """Planned batched fused regeneration: BOTH the stream axis and
+        the failed-node axis F are bucketed (a 3-stripe and a 5-stripe
+        drain share one executable); ``.host()`` returns the exact
+        (F, 2, S) stack.  Falls back to :meth:`regenerate_batch`."""
+        r_prevs = np.asarray(r_prevs, np.int32)
+        next_data = np.asarray(next_data, np.int32)
+        f = len(nodes)
+        if r_prevs.shape[0] != f or next_data.shape[:2] != (f, self.k):
+            raise ValueError(f"helper shapes {r_prevs.shape}/{next_data.shape}"
+                             f" do not match {f} nodes, k={self.k}")
+        if self._planned():
+            return self.planner.regenerate_batch(self._rmat_np, r_prevs,
+                                                 next_data)
+        return PlanResult(self.regenerate_batch(nodes, r_prevs, next_data),
+                          r_prevs.shape[-1], batch=f)
 
     def regenerate_batch(self, nodes: Sequence[int], r_prevs, next_data, *,
                          tile_symbols: int | None = None) -> jnp.ndarray:

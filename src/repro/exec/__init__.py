@@ -1,0 +1,15 @@
+"""Execution-plan layer (DESIGN.md §11): the shape-bucketed AOT plan
+cache (`repro.exec.plan`) and the unified overlapped I/O⇄compute
+pipeline (`repro.exec.pipeline`) every hot path routes through.
+"""
+from .pipeline import Pipeline
+from .plan import (PlanCache, PlanResult, PlanStats, bucket_symbols,
+                   clear_planners, get_planner, plan_stats,
+                   planning_disabled, planning_enabled, reset_plan_stats,
+                   set_planning)
+
+__all__ = [
+    "Pipeline", "PlanCache", "PlanResult", "PlanStats", "bucket_symbols",
+    "get_planner", "plan_stats", "reset_plan_stats", "clear_planners",
+    "set_planning", "planning_enabled", "planning_disabled",
+]

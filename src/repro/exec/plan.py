@@ -1,0 +1,464 @@
+"""Shape-bucketed execution-plan cache (DESIGN.md §11.1-§11.2).
+
+Every hot-path GF operation has one large *stream* axis (symbols) whose
+extent varies per object/leaf/stripe, and a handful of tiny static axes
+(the code dimensions n, k, a batch count F).  `jax.jit` keyed on raw
+shapes retraces and recompiles once per distinct stream extent — a
+mixed-size workload with thousands of object sizes pays thousands of
+XLA compiles for what is the same program at different paddings.
+
+The :class:`PlanCache` removes that cost structurally:
+
+* the stream axis is padded **up** to a small geometric ladder of shape
+  buckets (:func:`bucket_symbols`) — log-many buckets cover any size
+  range, and padding is bit-exact because every planned op is
+  column-local over the stream axis (zero columns in, zero columns out,
+  sliced off host-side before anyone looks);
+* variable *batch* axes (the F failed-node axis of ``regenerate_batch``)
+  are bucketed the same way, so a drain of 3 stripes and a drain of 5
+  share one executable;
+* each ``(op, static dims, bucket)`` key is lowered ONCE to an
+  ahead-of-time compiled executable (``jax.jit(...).lower(...)
+  .compile()``) with the stream operand **donated** on device backends
+  whenever an output can actually alias it (encode's (n, S) -> (n, S),
+  the square any-k decode) — the padded staging buffer is dead after
+  the call, so XLA reuses it instead of allocating;
+* :func:`plan_stats` exposes lifetime hits / misses / compiles across
+  every live planner, which is how the recompile-regression test and
+  ``benchmarks/bench_pipeline.py`` assert the steady-state guarantee:
+  after warm-up, a mixed-size put/get/restore workload performs ZERO
+  new compiles.
+
+Planners are shared process-wide per ``(backend, p, ladder, donation)``
+via :func:`get_planner` so every code instance on the same backend hits
+one executable cache.  :func:`planning_disabled` restores the raw
+jit-per-shape dispatch (the pre-plan behavior) for A/B measurement.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Ladder defaults: buckets 4096, 8192, 16384, ... — stream extents below
+# the floor all share the smallest executable, and a ratio-2 ladder
+# bounds padded compute at 2x while keeping the executable count
+# logarithmic in the size range.  Ratio 2 also makes every power-of-two
+# tile (the checkpointer's stream tiles, the store's full put windows)
+# an EXACT bucket hit, so the tiled hot loops never pad at all — only
+# odd tails and whole small objects pay the padding tax.
+BUCKET_MIN = 1 << 12
+BUCKET_RATIO = 2.0
+
+# Batch axes (regenerate_batch's F) are tiny; a finer floor avoids
+# padding a single-failure repair up to a 4096-wide batch.
+BATCH_BUCKET_MIN = 4
+
+_ENABLED = True
+_LOCK = threading.Lock()
+_REGISTRY: dict[tuple, "PlanCache"] = {}
+
+
+def bucket_symbols(s: int, *, bucket_min: int = BUCKET_MIN,
+                   ratio: float = BUCKET_RATIO) -> int:
+    """Smallest ladder bucket >= ``s``: bucket_min * ratio^j, j >= 0.
+
+    >>> bucket_symbols(1000)
+    4096
+    >>> bucket_symbols(4097)
+    8192
+    """
+    if s <= 0:
+        raise ValueError(f"stream extent must be positive, got {s}")
+    if ratio <= 1.0:
+        raise ValueError(f"ladder ratio must be > 1, got {ratio}")
+    if s <= bucket_min:
+        return bucket_min
+    # ceil in log space, then walk down float error
+    j = max(0, math.ceil(math.log(s / bucket_min) / math.log(ratio)))
+    b = int(math.ceil(bucket_min * ratio ** j))
+    while b < s:                                   # float round-down guard
+        j += 1
+        b = int(math.ceil(bucket_min * ratio ** j))
+    while j > 0 and int(math.ceil(bucket_min * ratio ** (j - 1))) >= s:
+        j -= 1
+        b = int(math.ceil(bucket_min * ratio ** j))
+    return b
+
+
+def set_planning(enabled: bool) -> None:
+    """Process-wide switch: False restores raw jit-per-shape dispatch."""
+    global _ENABLED
+    _ENABLED = bool(enabled)
+
+
+def planning_enabled() -> bool:
+    return _ENABLED
+
+
+@contextlib.contextmanager
+def planning_disabled():
+    """Temporarily bypass every plan cache (the benchmark's "before")."""
+    prev = _ENABLED
+    set_planning(False)
+    try:
+        yield
+    finally:
+        set_planning(prev)
+
+
+def make_regen_fn(mm: Callable, p: int) -> Callable:
+    """THE fused newcomer kernel — the single definition both execution
+    modes trace (planned AOT executables here, the per-shape jit paths
+    in `core/repair.py`), so the two can never desync.
+
+    Algebraically R @ [r_prev; next_data]; the r_prev column is peeled
+    out of the dispatched matmul into a row-0 scale-accumulate epilogue
+    (R[1, 0] is 0, so only the decode row touches r_prev).  Exactness:
+    the matmul output is < p and the epilogue term is <= (p-1)^2, so the
+    sum stays inside the int32 envelope (kernels/envelope.py guarantees
+    (p-1) + (p-1)^2 < 2^31) before the single fold.
+    """
+    def fn(rmat, r_prev, next_data):
+        part = mm(rmat[:, 1:], next_data, p)
+        return part.at[0].set((part[0] + rmat[0, 0] * r_prev) % p)
+
+    return fn
+
+
+class PlanStats(NamedTuple):
+    """Executable-cache accounting: ``misses`` trigger ``compiles``
+    (they differ only if a lowering raises), ``hits`` run an existing
+    executable with zero trace/compile work."""
+    hits: int
+    misses: int
+    compiles: int
+
+
+class PlanResult:
+    """A planned op's asynchronous result: the (possibly padded) device
+    value plus the true stream extent.
+
+    Dispatch is async — holding a PlanResult does NOT block on the
+    device.  :meth:`host` blocks, materializes, and slices the padding
+    off with a host-side numpy view (deliberately NOT a device slice:
+    a ``lax.slice`` per distinct extent would reintroduce the very
+    per-shape compiles the plan cache exists to remove).
+    """
+
+    __slots__ = ("raw", "symbols", "batch")
+
+    def __init__(self, raw, symbols: int, batch: Optional[int] = None):
+        self.raw = raw
+        self.symbols = int(symbols)
+        self.batch = None if batch is None else int(batch)
+
+    def host(self) -> np.ndarray:
+        """Block and return the exact (unpadded) result as numpy —
+        stream padding sliced off the last axis, batch padding (when the
+        op bucketed a leading batch axis) off the first."""
+        out = np.asarray(self.raw)
+        if out.shape[-1] != self.symbols:
+            out = out[..., : self.symbols]
+        if self.batch is not None and out.shape[0] != self.batch:
+            out = out[: self.batch]
+        return out
+
+    def __array__(self, dtype=None):
+        out = self.host()
+        return out if dtype is None else out.astype(dtype)
+
+
+def _pad_last(arr: np.ndarray, bucket: int) -> np.ndarray:
+    """Zero-pad the stream (last) axis up to ``bucket``.
+
+    Always a FRESH buffer when padding happens: JAX reads host operands
+    asynchronously (after dispatch returns), so a reused scratch buffer
+    could be overwritten while a previous in-flight compute still reads
+    it — per-call buffers are the price of depth-2 pipelining.
+    """
+    arr = np.asarray(arr, np.int32)
+    s = arr.shape[-1]
+    if s == bucket:
+        return arr
+    out = np.zeros(arr.shape[:-1] + (bucket,), np.int32)
+    out[..., :s] = arr
+    return out
+
+
+def _pad_both(arr: np.ndarray, f_bucket: int, s_bucket: int) -> np.ndarray:
+    """Pad axis 0 to ``f_bucket`` and the last axis to ``s_bucket`` in
+    one copy (the batched-regenerate operands)."""
+    arr = np.asarray(arr, np.int32)
+    f, s = arr.shape[0], arr.shape[-1]
+    if f == f_bucket and s == s_bucket:
+        return arr
+    out = np.zeros((f_bucket,) + arr.shape[1:-1] + (s_bucket,), np.int32)
+    out[:f, ..., :s] = arr
+    return out
+
+
+class PlanCache:
+    """AOT-compiled, shape-bucketed executables for one (backend, p).
+
+    Parameters
+    ----------
+    backend : repro.kernels.dispatch.GFBackend
+        The exact GF implementation the plans lower through; its matmul
+        / circulant_encode primitives are traced INSIDE each plan, so a
+        plan is exactly the dispatched op at a fixed padded shape.
+    p : int
+        Field modulus (static in every executable).
+    bucket_min, bucket_ratio :
+        The stream-axis ladder (:func:`bucket_symbols`).
+    donate : bool, optional
+        Donate the stream operand to XLA where an output can alias it.
+        Default: True on device backends (gpu/tpu — operands live in
+        device buffers the planner's host copy populated), False on CPU,
+        where XLA may read the HOST numpy buffer in place: donating an
+        exact-bucket-fit caller array there could let the output
+        overwrite caller memory.
+
+    Notes
+    -----
+    All planned ops are column-local over the stream axis, which is the
+    bit-exactness argument for bucketing: a zero symbol column maps to a
+    zero output column through matmul, circulant encode and the fused
+    regenerate epilogue alike, and :meth:`PlanResult.host` slices those
+    columns off before any caller sees them.
+    """
+
+    def __init__(self, backend, p: int, *, bucket_min: int = BUCKET_MIN,
+                 bucket_ratio: float = BUCKET_RATIO,
+                 donate: Optional[bool] = None):
+        self.backend = backend
+        self.backend_name = getattr(backend, "name", "custom")
+        self.p = int(p)
+        self.bucket_min = int(bucket_min)
+        self.bucket_ratio = float(bucket_ratio)
+        if donate is None:
+            donate = jax.default_backend() not in ("cpu",)
+        self.donate = bool(donate)
+        self._plans: dict[tuple, Callable] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.compiles = 0
+
+    # ------------------------------------------------------------- plumbing
+    def bucket(self, s: int) -> int:
+        return bucket_symbols(s, bucket_min=self.bucket_min,
+                              ratio=self.bucket_ratio)
+
+    def batch_bucket(self, f: int) -> int:
+        return bucket_symbols(f, bucket_min=BATCH_BUCKET_MIN,
+                              ratio=self.bucket_ratio)
+
+    def _i32(self, *shapes):
+        return [jax.ShapeDtypeStruct(s, jnp.int32) for s in shapes]
+
+    def _exe(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+        with self._lock:
+            exe = self._plans.get(key)
+            if exe is not None:
+                self.hits += 1
+                return exe
+            self.misses += 1
+            exe = build()
+            self.compiles += 1
+            self._plans[key] = exe
+            return exe
+
+    def plan_stats(self) -> PlanStats:
+        return PlanStats(self.hits, self.misses, self.compiles)
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.compiles = 0
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+        self.reset_stats()
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    # ------------------------------------------------------------------ ops
+    def matmul(self, mat, blocks) -> PlanResult:
+        """(mat @ blocks) mod p — the decode-side workhorse.
+
+        ``mat`` is a small runtime operand (cached decode inverses, the
+        combined decode+re-encode matrix, row subsets for degraded
+        reads); its shape is part of the plan key, its VALUES are not.
+        Only ``blocks`` (the stream operand) is padded and donated.
+        """
+        mat = np.asarray(mat, np.int32)
+        blocks = np.asarray(blocks, np.int32)
+        s = blocks.shape[-1]
+        if not _ENABLED:
+            return PlanResult(self.backend.matmul(mat, blocks, self.p), s)
+        b = self.bucket(s)
+        key = ("matmul", mat.shape, blocks.shape[:-1], b)
+        # donation is only usable when an output can alias the donated
+        # buffer, i.e. the product has the stream operand's exact shape
+        # (square decode matrices: the (n, n) any-k inverse) — donating
+        # anything else just trips XLA's unusable-donation warning
+        donate = (1,) if self.donate and mat.shape[0] == blocks.shape[0] \
+            else ()
+
+        def build():
+            fn = lambda a, x: self.backend.matmul(a, x, self.p)
+            jf = jax.jit(fn, donate_argnums=donate)
+            return jf.lower(*self._i32(mat.shape,
+                                       blocks.shape[:-1] + (b,))).compile()
+
+        return PlanResult(self._exe(key, build)(mat, _pad_last(blocks, b)), s)
+
+    def circulant_encode(self, data, c) -> PlanResult:
+        """The paper's eq. (2) encode at a bucketed stream extent.
+
+        The coefficient tuple ``c`` is static in the underlying kernels,
+        so it is part of the plan key — one executable per code, not per
+        call.
+        """
+        data = np.asarray(data, np.int32)
+        c = tuple(int(x) for x in c)
+        s = data.shape[-1]
+        if not _ENABLED:
+            return PlanResult(self.backend.circulant_encode(data, c, self.p),
+                              s)
+        b = self.bucket(s)
+        key = ("circ", data.shape[0], c, b)
+
+        def build():
+            fn = lambda d: self.backend.circulant_encode(d, c, self.p)
+            jf = jax.jit(fn, donate_argnums=(0,) if self.donate else ())
+            return jf.lower(*self._i32((data.shape[0], b))).compile()
+
+        return PlanResult(self._exe(key, build)(_pad_last(data, b)), s)
+
+    def regenerate(self, rmat, r_prev, next_data) -> PlanResult:
+        """The fused (2, k+1) repair-matrix application (DESIGN.md §4):
+        backend matmul over the k helper blocks + the row-0 axpy
+        epilogue on r_prev, one executable per (k, bucket)."""
+        rmat = np.asarray(rmat, np.int32)
+        r_prev = np.asarray(r_prev, np.int32)
+        next_data = np.asarray(next_data, np.int32)
+        s = r_prev.shape[-1]
+        if not _ENABLED:
+            return PlanResult(
+                self._regen_fn()(rmat, r_prev, next_data), s)
+        b = self.bucket(s)
+        k = next_data.shape[0]
+        key = ("regen", k, b)
+
+        def build():
+            # the (2, S) pair can alias next_data only at k == 2
+            donate = (2,) if self.donate and k == 2 else ()
+            jf = jax.jit(self._regen_fn(), donate_argnums=donate)
+            return jf.lower(*self._i32(rmat.shape, (b,), (k, b))).compile()
+
+        return PlanResult(self._exe(key, build)(
+            rmat, _pad_last(r_prev, b), _pad_last(next_data, b)), s)
+
+    def regenerate_batch(self, rmat, r_prevs, next_data) -> PlanResult:
+        """Vmapped fused regeneration with BOTH variable axes bucketed:
+        the stream axis on the symbol ladder, the failed-node axis F on
+        the batch ladder (zero-padded tasks regenerate zeros).
+
+        Returns a PlanResult whose raw value is (F_bucket, 2, S_bucket);
+        ``host()`` trims both paddings back to (F, 2, S).
+        """
+        rmat = np.asarray(rmat, np.int32)
+        r_prevs = np.asarray(r_prevs, np.int32)
+        next_data = np.asarray(next_data, np.int32)
+        s = r_prevs.shape[-1]
+        f, k = next_data.shape[0], next_data.shape[1]
+        if not _ENABLED:
+            one = self._regen_fn()
+            return PlanResult(jax.vmap(lambda rp, nd: one(rmat, rp, nd))(
+                r_prevs, next_data), s, batch=f)
+        b = self.bucket(s)
+        fb = self.batch_bucket(f)
+        key = ("regen_batch", fb, k, b)
+
+        def build():
+            one = self._regen_fn()
+
+            def fn(rm, rps, nds):
+                return jax.vmap(lambda rp, nd: one(rm, rp, nd))(rps, nds)
+
+            # the (F, 2, S) output can alias next_data only at k == 2
+            donate = (2,) if self.donate and k == 2 else ()
+            jf = jax.jit(fn, donate_argnums=donate)
+            return jf.lower(*self._i32(rmat.shape, (fb, b),
+                                       (fb, k, b))).compile()
+
+        return PlanResult(self._exe(key, build)(
+            rmat, _pad_both(r_prevs, fb, b),
+            _pad_both(next_data, fb, b)), s, batch=f)
+
+    def _regen_fn(self):
+        return make_regen_fn(self.backend.matmul, self.p)
+
+
+# --------------------------------------------------------------- registry
+def get_planner(backend, p: int, *, bucket_min: int = BUCKET_MIN,
+                bucket_ratio: float = BUCKET_RATIO,
+                donate: Optional[bool] = None) -> PlanCache:
+    """The shared PlanCache for (backend, p, ladder, donation) — every
+    code/engine on the same backend shares one executable cache."""
+    if donate is None:
+        donate = jax.default_backend() not in ("cpu",)
+    key = (getattr(backend, "name", id(backend)), int(p), int(bucket_min),
+           float(bucket_ratio), bool(donate))
+    with _LOCK:
+        pc = _REGISTRY.get(key)
+        if pc is None:
+            pc = PlanCache(backend, p, bucket_min=bucket_min,
+                           bucket_ratio=bucket_ratio, donate=donate)
+            _REGISTRY[key] = pc
+        return pc
+
+
+def plan_stats() -> PlanStats:
+    """Aggregate hits/misses/compiles over every live planner — the
+    number tests and ``bench_pipeline`` watch for steady-state zeros."""
+    h = m = c = 0
+    with _LOCK:
+        planners = list(_REGISTRY.values())
+    for pc in planners:
+        st = pc.plan_stats()
+        h += st.hits
+        m += st.misses
+        c += st.compiles
+    return PlanStats(h, m, c)
+
+
+def reset_plan_stats() -> None:
+    with _LOCK:
+        planners = list(_REGISTRY.values())
+    for pc in planners:
+        pc.reset_stats()
+
+
+def clear_planners() -> None:
+    """Drop every cached executable AND registry entry (tests only)."""
+    with _LOCK:
+        for pc in _REGISTRY.values():
+            pc.clear()
+        _REGISTRY.clear()
+
+
+__all__ = [
+    "BUCKET_MIN", "BUCKET_RATIO", "BATCH_BUCKET_MIN",
+    "bucket_symbols", "make_regen_fn",
+    "PlanCache", "PlanResult", "PlanStats",
+    "get_planner", "plan_stats", "reset_plan_stats", "clear_planners",
+    "set_planning", "planning_enabled", "planning_disabled",
+]

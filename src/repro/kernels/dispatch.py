@@ -170,6 +170,14 @@ class GFBackend:
         """Adapter for DoubleCirculantMSR(..., matmul=...)."""
         return lambda a, b, p: self.matmul(a, b, p)
 
+    def planner(self, p: int, **plan_kwargs):
+        """The shared execution planner for this backend at modulus p
+        (DESIGN.md §11): shape-bucketed AOT executables over this
+        backend's primitives.  Lazy import — the exec layer sits above
+        kernels and plain kernel users never pay for it."""
+        from repro.exec.plan import get_planner
+        return get_planner(self, p, **plan_kwargs)
+
 
 _REGISTRY: dict[str, GFBackend] = {}
 _default_override: Optional[str] = None
@@ -256,6 +264,10 @@ def select(p: int = 257, k: Optional[int] = None) -> GFBackend:
     """
     env = os.environ.get(ENV_VAR)
     if env:
+        if env not in _REGISTRY:
+            raise ValueError(
+                f"{ENV_VAR}={env!r} is not a registered GF backend; "
+                f"valid values: {', '.join(sorted(_REGISTRY))}")
         return get(env)
     if _default_override:
         return get(_default_override)

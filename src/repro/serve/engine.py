@@ -52,6 +52,12 @@ class CodedReadServer:
     but served one *row* at a time: block a_j is ``inv[j] @ downloads``
     with the (n, n) inverse LRU-cached per node subset, so an outage's
     worth of degraded reads costs one `gf.gauss_inverse` total.
+
+    Every degraded decode dispatches through the execution-plan layer
+    (DESIGN.md §11): shape-bucketed AOT executables, so a serving fleet
+    reading objects of arbitrarily mixed sizes performs zero XLA
+    recompiles at steady state — :meth:`plan_stats` is the live counter
+    an operator watches for that guarantee.
     """
 
     def __init__(self, sim, treedef=None, tspec=None):
@@ -59,6 +65,15 @@ class CodedReadServer:
         self.treedef = treedef
         self.tspec = tspec
         self._clock = 0.0
+
+    def plan_stats(self):
+        """Hits/misses/compiles of the code's execution-plan cache —
+        steady-state serving must show a frozen ``compiles`` count."""
+        from repro.exec.plan import PlanStats
+        planner = self.sim.code.planner
+        if planner is None:
+            return PlanStats(0, 0, 0)
+        return planner.plan_stats()
 
     @classmethod
     def for_pytree(cls, state: Any, spec, **sim_kwargs) -> "CodedReadServer":

@@ -6,14 +6,17 @@ The layer that turns the single-stripe engines (encode dispatch, fused
 repair, decode-inverse cache) into a multi-object storage subsystem:
 
 * `stripes.StripeManager` — chunk arbitrary objects into fixed stripes,
-  encode all stripes in one dispatched matmul, place shares rack-aware
-  on a physical node ring;
+  encode through one planned circulant dispatch per window, place
+  shares rack-aware on a physical node ring;
 * `object_store.CodedObjectStore` — the front-end: systematic fast-path
   reads, one cached-inverse decode matmul per failure pattern for
-  everything missing;
+  everything missing; put/get/repair all run through the store's
+  overlapped I/O⇄compute pipeline and the shape-bucketed execution-plan
+  cache (DESIGN.md §11) — zero recompiles at steady state;
 * `scheduler.RepairScheduler` — failure-event-driven repair queue,
   priority = remaining redundancy, single-loss stripes coalesced into
-  one `regenerate_batch`, throttled by a link-bandwidth budget.
+  windowed `regenerate_batch` dispatches, throttled by a link-bandwidth
+  budget.
 """
 from .object_store import (FAILED, UP, CodedObjectStore, GetResult,
                            ObjectStat, StoreMetrics)

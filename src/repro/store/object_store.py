@@ -39,6 +39,7 @@ from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
 from repro.cluster.events import Event
 from repro.cluster.metrics import LinkModel, MetricsLog
+from repro.exec.pipeline import Pipeline
 
 from .stripes import StripeManager, StripeMap
 
@@ -113,6 +114,19 @@ class CodedObjectStore:
         Deterministic service-time model for read/repair latencies.
     backend : str, optional
         Pin a GF dispatch backend for encode/decode.
+    io_workers, pipeline_depth : int
+        The store's overlapped I/O⇄compute engine (DESIGN.md §11.3):
+        share placement / download gathering runs on ``io_workers`` pool
+        threads while the next window's planned GF dispatch computes;
+        ``pipeline_depth=1`` disables the overlap (serial baseline).
+    put_tile_stripes : int
+        Stripes per encode window on the put path — each window is one
+        planned circulant dispatch whose share placement overlaps the
+        next window's encode.
+    repair_tile_tasks : int
+        Repair tasks per coalesced ``regenerate_batch`` dispatch in
+        :meth:`repair_stripes_embedded` (the batch axis is bucketed, so
+        variable task counts share executables).
 
     Examples
     --------
@@ -127,7 +141,10 @@ class CodedObjectStore:
                  n_racks: Optional[int] = None, stripe_symbols: int = 1 << 12,
                  link: Optional[LinkModel] = None,
                  backend: Optional[str] = None,
-                 code: Optional[DoubleCirculantMSR] = None):
+                 code: Optional[DoubleCirculantMSR] = None,
+                 io_workers: int = 4, pipeline_depth: int = 2,
+                 put_tile_stripes: int = 64,
+                 repair_tile_tasks: int = 64):
         self.spec = spec
         self.k, self.n, self.p = spec.k, spec.n, spec.p
         self.n_nodes = int(n_nodes if n_nodes is not None else spec.n)
@@ -151,6 +168,11 @@ class CodedObjectStore:
         self._next_stripe = 0          # rotation phase for the next put
         self.metrics = StoreMetrics()
         self._subscribers: list[Callable[[Event], None]] = []
+        self.put_tile_stripes = max(1, int(put_tile_stripes))
+        self.repair_tile_tasks = max(1, int(repair_tile_tasks))
+        # persistent overlapped I/O⇄compute engine (DESIGN.md §11.3):
+        # pool threads are reused across put/get/repair calls
+        self.pipeline = Pipeline(io_workers=io_workers, depth=pipeline_depth)
 
     @staticmethod
     def _default_racks(spec: CodeSpec, n_nodes: int) -> int:
@@ -171,6 +193,21 @@ class CodedObjectStore:
             if worst <= budget:
                 return cand
         return n_nodes
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Shut the store's pipeline pool down (its threads are
+        non-daemon; long-lived processes that churn store instances
+        should close them — or use the store as a context manager).
+        The store remains usable afterwards: the pool respawns lazily.
+        """
+        self.pipeline.close()
+
+    def __enter__(self) -> "CodedObjectStore":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     # ------------------------------------------------------------ node state
     def subscribe(self, fn: Callable[[Event], None]) -> None:
@@ -217,12 +254,14 @@ class CodedObjectStore:
             ) -> ObjectStat:
         """Store ``obj`` (bytes or numpy array) under ``key``.
 
-        The object is striped, encoded in one dispatched matmul
-        (`StripeManager.encode`) and its 2n blocks per stripe placed on
-        the ring.  Shares whose placed node is FAILED are simply absent
-        (lost-at-birth) — a later ``get`` degrades around them and the
-        scheduler can rebuild them once the slot is replaced.
-        Re-putting an existing key overwrites it.
+        The object is striped and encoded in ``put_tile_stripes``-wide
+        windows, each ONE planned circulant dispatch (shape-bucketed
+        AOT executable — no recompiles at steady state), with window
+        t's share placement overlapping window t+1's encode through the
+        store pipeline (DESIGN.md §11.3).  Shares whose placed node is
+        FAILED are simply absent (lost-at-birth) — a later ``get``
+        degrades around them and the scheduler can rebuild them once
+        the slot is replaced.  Re-putting an existing key overwrites it.
         """
         if key in self._stats:
             self.delete(key)
@@ -236,15 +275,33 @@ class CodedObjectStore:
             raise TypeError(f"store objects are bytes or numpy arrays, "
                             f"got {type(obj).__name__}")
         blocks, smap = self.stripes.chunk(payload)
-        red = self.stripes.encode(blocks)
         base = self._next_stripe
         self._next_stripe += smap.n_stripes
-        for t in range(smap.n_stripes):
-            pl = self.stripes.placement(base + t)
-            for j, phys in enumerate(pl):
-                if self.is_up(phys):
-                    self._shares[phys - 1][(key, t)] = \
-                        [j + 1, blocks[t, j].copy(), red[t, j].copy()]
+        tile = self.put_tile_stripes
+
+        def flatten_window(t0: int):
+            # host transpose on the pool — overlaps the previous window's
+            # encode and the one before's share placement
+            tb = blocks[t0: t0 + tile]
+            return tb.shape[0], self.stripes.flatten(tb)
+
+        def encode_window(t0: int, flat):
+            tt, view = flat
+            return tt, self.code.encode_planned(view)
+
+        def place_window(t0: int, res) -> None:
+            tt, planned = res
+            red = self.stripes.unflatten(planned.host(), tt)
+            for t in range(t0, t0 + tt):
+                pl = self.stripes.placement(base + t)
+                for j, phys in enumerate(pl):
+                    if self.is_up(phys):
+                        self._shares[phys - 1][(key, t)] = \
+                            [j + 1, blocks[t, j].copy(),
+                             red[t - t0, j].copy()]
+
+        self.pipeline.map(range(0, smap.n_stripes, tile),
+                          encode_window, place_window, read=flatten_window)
         stat = ObjectStat(key=key, size_bytes=smap.orig_bytes,
                           n_stripes=smap.n_stripes, stripe_symbols=self.S,
                           dtype=dtype, shape=shape, meta=dict(meta or {}))
@@ -266,7 +323,10 @@ class CodedObjectStore:
         All missing data blocks of the request are batched: stripes are
         grouped by (helper subset, missing set) and each group is decoded
         in ONE cached-inverse matmul over the symbol-axis-concatenated
-        downloads (DESIGN.md §10.2).
+        downloads (DESIGN.md §10.2).  Groups run through the store
+        pipeline — download gathering on the pool, the planned decode
+        dispatch overlapped with the previous group's scatter
+        (DESIGN.md §11.3).
 
         Raises
         ------
@@ -313,21 +373,35 @@ class CodedObjectStore:
                     bytes_read += self.S
             latency = max(latency, sys_lat)
             groups.setdefault((helpers, missing), []).append(t)
-        for (helpers, missing), ts in groups.items():
-            downloads = np.concatenate([self._downloads(key, t, helpers)
-                                        for t in ts], axis=1)   # (2k, G*S)
+        acct = {"bytes": 0, "latency": 0.0}
+
+        def gather(item):
+            (helpers, _missing), ts = item
+            return np.concatenate([self._downloads(key, t, helpers)
+                                   for t in ts], axis=1)        # (2k, G*S)
+
+        def decode(item, downloads):
+            (helpers, missing), _ts = item
             mat = self.code.repair.decode_matrix(helpers)
-            decoded = np.asarray(self.code.repair.apply(
-                mat[list(missing)], downloads), np.int32)
+            return self.code.repair.apply_planned(mat[list(missing)],
+                                                  downloads)
+
+        def scatter(item, res) -> None:
+            (_helpers, missing), ts = item
+            decoded = res.host()
             for g, t in enumerate(ts):
                 blocks[t, list(missing)] = \
                     decoded[:, g * self.S:(g + 1) * self.S]
             lat = self.link.degraded_read_s(2 * self.S, [1.0] * self.k)
             # one download set per stripe in the group
-            for g, t in enumerate(ts):
+            for _ in ts:
                 self.metrics.record_read("degraded", lat, 2 * self.k * self.S)
-            latency = max(latency, lat)
-            bytes_read += 2 * self.k * self.S * len(ts)
+            acct["latency"] = max(acct["latency"], lat)
+            acct["bytes"] += 2 * self.k * self.S * len(ts)
+
+        self.pipeline.map(groups.items(), decode, scatter, read=gather)
+        latency = max(latency, acct["latency"])
+        bytes_read += acct["bytes"]
         payload = self.stripes.assemble(
             blocks, StripeMap(stat.size_bytes, stat.n_stripes, self.S))
         obj: Any = payload
@@ -422,40 +496,61 @@ class CodedObjectStore:
         return all((key, t) in shares[pl[i - 1] - 1] for i in needed)
 
     def repair_stripes_embedded(self, tasks: Sequence[tuple[str, int, int]],
-                                ) -> int:
-        """Regenerate one lost share per task in ONE ``regenerate_batch``
-        call (the scheduler's coalesced path, DESIGN.md §10.3).
+                                ) -> tuple[int, int]:
+        """Regenerate one lost share per task through coalesced
+        ``regenerate_batch`` dispatches (the scheduler's path,
+        DESIGN.md §10.3), pipelined in ``repair_tile_tasks``-wide
+        windows: window t's helper gathering runs on the pool and its
+        share writes overlap window t+1's planned vmapped dispatch
+        (§11.3).  The batch axis is bucketed, so drains of different
+        sizes share one executable.
 
         tasks: (key, stripe, lost_code_node) triples, each single-loss
         with embedded helpers present (caller-checked).  The repair
         matrix is node-invariant, so stripes that lost DIFFERENT code
-        nodes still share the one vmapped dispatch.  Returns symbols
-        moved: ``len(tasks) * (k+1) * S`` — eq. (7) per share.
+        nodes still share a vmapped dispatch.  Returns (symbols moved
+        — ``len(tasks) * (k+1) * S``, eq. (7) per share — and dispatch
+        count).
         """
         if not tasks:
-            return 0
-        r_prevs, helper_data, placements = [], [], []
-        for key, t, node in tasks:
-            base = self.stat(key).meta["_base_stripe"]
-            pl = self.stripes.placement(base + t)
-            plan = self.code.repair_plan(node)
-            r_prevs.append(self._shares[pl[plan.prev_node - 1] - 1]
-                           [(key, t)][2])
-            helper_data.append(np.stack(
-                [self._shares[pl[i - 1] - 1][(key, t)][1]
-                 for i in plan.next_nodes]))
-            placements.append(pl)
-        pairs = np.asarray(self.code.regenerate_batch(
-            [node for _, _, node in tasks], np.stack(r_prevs),
-            np.stack(helper_data)), np.int32)
-        for (key, t, node), pl, pair in zip(tasks, placements, pairs):
-            phys = pl[node - 1]
-            if not self.is_up(phys):
-                raise RuntimeError(f"replace node {phys} before repairing "
-                                   f"onto it")
-            self._shares[phys - 1][(key, t)] = [node, pair[0].copy(),
-                                                pair[1].copy()]
-        return len(tasks) * (self.k + 1) * self.S
+            return 0, 0
+        tasks = list(tasks)
+        tile = self.repair_tile_tasks
+        windows = [tasks[i: i + tile] for i in range(0, len(tasks), tile)]
+
+        def gather(window):
+            r_prevs, helper_data, placements = [], [], []
+            for key, t, node in window:
+                base = self.stat(key).meta["_base_stripe"]
+                pl = self.stripes.placement(base + t)
+                plan = self.code.repair_plan(node)
+                r_prevs.append(self._shares[pl[plan.prev_node - 1] - 1]
+                               [(key, t)][2])
+                helper_data.append(np.stack(
+                    [self._shares[pl[i - 1] - 1][(key, t)][1]
+                     for i in plan.next_nodes]))
+                placements.append(pl)
+            return np.stack(r_prevs), np.stack(helper_data), placements
+
+        def regen(window, gathered):
+            r_prevs, helper_data, placements = gathered
+            res = self.code.repair.regenerate_batch_planned(
+                [node for _, _, node in window], r_prevs, helper_data)
+            return res, placements
+
+        def land(window, out) -> None:
+            res, placements = out
+            pairs = res.host()
+            for (key, t, node), pl, pair in zip(window, placements, pairs):
+                phys = pl[node - 1]
+                if not self.is_up(phys):
+                    raise RuntimeError(f"replace node {phys} before "
+                                       f"repairing onto it")
+                self._shares[phys - 1][(key, t)] = [node, pair[0].copy(),
+                                                    pair[1].copy()]
+
+        self.pipeline.map(windows, regen, land, read=gather)
+        return len(tasks) * (self.k + 1) * self.S, len(windows)
 
     def repair_stripe_full(self, key: str, t: int,
                            lost: Sequence[int]) -> int:
@@ -471,10 +566,11 @@ class CodedObjectStore:
             raise RuntimeError(f"stripe {t} of {key!r} unrecoverable")
         use = tuple(present[: self.k])
         downloads = self._downloads(key, t, use)
-        data, red_f = self.code.repair.reconstruct_with_repair(
-            use, downloads[: self.k], downloads[self.k:], list(lost))
-        data = np.asarray(data, np.int32)
-        red_f = np.asarray(red_f, np.int32)
+        # planned one-matmul decode + re-encode (combined matrix rides on
+        # the cached inverse; same math as reconstruct_with_repair)
+        mat = self.code.repair.decode_repair_matrix(use, list(lost))
+        data, red_f = self.code.repair.split_decode_output(
+            self.code.repair.apply_planned(mat, downloads).host())
         for j, node in enumerate(lost):
             phys = pl[node - 1]
             if not self.is_up(phys):

@@ -14,10 +14,14 @@ primitives:
   share while queued jumps the line and a stripe repaired out of band
   is dropped;
 * **coalesce** — all single-loss stripes whose embedded d = k+1 helpers
-  are present fold into ONE ``regenerate_batch`` dispatch per drain
-  (the repair matrix is node-invariant, so stripes that lost different
-  code nodes still share the vmapped call); multi-loss stripes fall
-  back to the one-matmul full decode per stripe;
+  are present fold into coalesced ``regenerate_batch`` dispatches (one
+  per ``repair_tile_tasks`` window — a single dispatch for typical
+  drains; the repair matrix is node-invariant, so stripes that lost
+  different code nodes still share the vmapped call, and the window's
+  helper gathering / share writes overlap the neighbouring window's
+  planned compute through the store pipeline, DESIGN.md §11.3);
+  multi-loss stripes fall back to the one-matmul full decode per
+  stripe;
 * **throttle** — each ``drain`` tick moves at most
   ``budget_symbols_per_tick`` repair symbols, derived from the link
   model's bandwidth and the configurable ``repair_bandwidth_fraction``
@@ -241,8 +245,9 @@ class RepairScheduler:
         try:
             self._replace_target_nodes(embedded, full)
             if embedded:
-                report.symbols_moved += store.repair_stripes_embedded(embedded)
-                report.batch_calls += 1
+                moved, dispatches = store.repair_stripes_embedded(embedded)
+                report.symbols_moved += moved
+                report.batch_calls += dispatches
                 report.repaired_stripes += len(embedded)
                 report.repaired_shares += len(embedded)
                 completed.update((key, t) for key, t, _ in embedded)

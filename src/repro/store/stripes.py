@@ -115,22 +115,34 @@ class StripeManager:
         return gf.symbols_to_bytes(sym)[: smap.orig_bytes]
 
     # ---------------------------------------------------------------- encode
+    def flatten(self, blocks: np.ndarray) -> np.ndarray:
+        """(T, n, S) data blocks -> the (n, T*S) stream view the encode
+        dispatches over (the stripe axis folds into the symbol axis —
+        the circulant encode is independent per symbol column)."""
+        t, n, s = blocks.shape
+        if n != self.n:
+            raise ValueError(f"expected {self.n} blocks per stripe, got {n}")
+        return np.ascontiguousarray(
+            np.transpose(blocks, (1, 0, 2))).reshape(n, t * s)
+
+    def unflatten(self, flat: np.ndarray, t: int) -> np.ndarray:
+        """Inverse of :meth:`flatten`: (n, T*S) -> (T, n, S)."""
+        return np.ascontiguousarray(np.transpose(
+            np.asarray(flat, np.int32).reshape(self.n, t, -1), (1, 0, 2)))
+
     def encode(self, blocks: np.ndarray) -> np.ndarray:
         """(T, n, S) data blocks -> (T, n, S) redundancy blocks.
 
         One dispatched circulant matmul for the whole object: the stripe
         axis is folded into the symbol axis ((n, T*S) view), encoded
         once, and unfolded — encode cost is independent of how many
-        stripes the object spans.
+        stripes the object spans.  (The store's put path tiles the same
+        flatten/encode/unflatten over stripe windows so share placement
+        overlaps the next window's encode — DESIGN.md §11.3.)
         """
-        t, n, s = blocks.shape
-        if n != self.n:
-            raise ValueError(f"expected {self.n} blocks per stripe, got {n}")
-        flat = np.ascontiguousarray(
-            np.transpose(blocks, (1, 0, 2))).reshape(n, t * s)
+        flat = self.flatten(blocks)
         red = np.asarray(self.code.encode(jnp.asarray(flat)), np.int32)
-        return np.ascontiguousarray(
-            np.transpose(red.reshape(n, t, s), (1, 0, 2)))
+        return self.unflatten(red, blocks.shape[0])
 
 
 __all__ = ["StripeMap", "StripeManager"]

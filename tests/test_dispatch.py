@@ -152,8 +152,10 @@ def test_cpu_never_selects_interpret():
 def test_env_override(monkeypatch):
     monkeypatch.setenv(dispatch.ENV_VAR, "jnp-f32")
     assert dispatch.select(257, 8).name == "jnp-f32"
+    # an unknown env value is a config error: a clear ValueError naming
+    # the valid backends, not a bare KeyError deep in selection
     monkeypatch.setenv(dispatch.ENV_VAR, "no-such-backend")
-    with pytest.raises(KeyError):
+    with pytest.raises(ValueError, match="jnp-int32.*pallas"):
         dispatch.select(257, 8)
 
 

@@ -149,8 +149,8 @@ class TestObjectStore:
         store.fail_node(2)
         store.code.repair.decode_cache.clear()
         calls = []
-        orig = store.code.repair.apply
-        monkeypatch.setattr(store.code.repair, "apply",
+        orig = store.code.repair.apply_planned
+        monkeypatch.setattr(store.code.repair, "apply_planned",
                             lambda *a: calls.append(1) or orig(*a))
         res = store.get_ext("x")
         info = store.code.repair.decode_cache.cache_info()
@@ -228,8 +228,8 @@ class TestScheduler:
         store.fail_node(4)
         assert sched.pending() > 1
         calls = []
-        orig = store.code.regenerate_batch
-        monkeypatch.setattr(store.code, "regenerate_batch",
+        orig = store.code.repair.regenerate_batch_planned
+        monkeypatch.setattr(store.code.repair, "regenerate_batch_planned",
                             lambda *a, **k: calls.append(1) or orig(*a, **k))
         rep = sched.drain_all()
         assert len(calls) == 1 and rep.batch_calls == 1
