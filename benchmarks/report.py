@@ -96,6 +96,15 @@ def _bench_headline(stem: str, rec) -> str:
                     f"{rc['planned_steady_compiles']} (warmup "
                     f"{rc['planned_warmup_compiles']}); get p99 "
                     f"{rec['store']['get_latency_s']['p99']*1e3:.1f} ms")
+        if stem == "BENCH_drills":
+            oh = rec["checkpoint_overhead"]
+            worst = max(r["resume_s"] for r in rec["time_to_resume"]["rows"])
+            return (f"{len(rec['drills']['results'])} drills "
+                    f"bit_exact={rec['all_bit_exact']} "
+                    f"orphans={rec['orphans_total']}; write-behind ckpt "
+                    f"+{oh['write_behind']['overhead_pct']}% vs stop-world "
+                    f"+{oh['stop_world']['overhead_pct']}%; worst resume "
+                    f"{worst*1e3:.0f} ms")
         if stem == "BENCH_store":
             r = rec[-1]
             d = r["drain"][0]

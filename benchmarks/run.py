@@ -17,7 +17,7 @@ import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from benchmarks import (bench_checkpoint, bench_cluster,
+from benchmarks import (bench_checkpoint, bench_cluster, bench_drills,
                         bench_encode_throughput, bench_field_size,
                         bench_pipeline, bench_regeneration,
                         bench_repair_bandwidth, bench_store, roofline)
@@ -30,9 +30,9 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # been deleted (the field_scaling.json case) or a new bench that forgot
 # to register here — both fail the run loudly instead of silently
 # shipping stale JSON.
-KNOWN_RESULTS = {"checkpoint", "cluster", "encode_throughput", "field_size",
-                 "pipeline", "regeneration", "repair_bandwidth", "roofline",
-                 "store"}
+KNOWN_RESULTS = {"checkpoint", "cluster", "drills", "encode_throughput",
+                 "field_size", "pipeline", "regeneration",
+                 "repair_bandwidth", "roofline", "store"}
 
 
 def check_results_dir() -> None:
@@ -155,6 +155,18 @@ def main() -> None:
                      f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
                      f"put_mbps={rows[-1]['put_mbps']};"
                      f"drain_ratio_vs_rs={rows[-1]['drain'][0]['ratio_vs_rs']}"))
+
+    print("== crash consistency: drills + zero-stall checkpointing ===")
+    t0 = time.perf_counter()
+    rec = bench_drills.run(fast=args.fast, quiet=quiet)
+    (OUT / "drills.json").write_text(json.dumps(rec, indent=1))
+    (REPO_ROOT / "BENCH_drills.json").write_text(json.dumps(rec, indent=1))
+    assert rec["all_bit_exact"] and rec["all_passed"], \
+        f"drill failure: {rec['drills']['results']}"
+    csv_rows.append(("drills",
+                     f"{(time.perf_counter()-t0)*1e6:.0f}",
+                     f"all_passed={rec['all_passed']};wb_overhead_ratio="
+                     f"{rec['checkpoint_overhead']['wb_vs_stw_overhead_ratio']}"))
 
     print("== exec layer: plan cache + overlapped pipeline ===========")
     t0 = time.perf_counter()

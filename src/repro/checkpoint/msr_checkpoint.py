@@ -40,27 +40,85 @@ redundancy is delegated to a coded object store — one object per pytree
 leaf group plus a manifest — and restores ride the store's transparent
 degraded reads; all byte metering funnels through ONE ``_read_block``
 accounting path shared with directory mode.
+
+Crash consistency (DESIGN.md §12): every byte goes through a
+`repro.io.BlobBackend` wrapped in a `repro.io.RetryPolicy` (bounded
+retries, exponential backoff + deterministic jitter, typed
+`GiveUpError`), and a save is *atomic*: files land in ``step_X.tmp``
+(fsync'd), the manifest — carrying per-block content CRCs — is written
+last, and one directory rename publishes the generation.  ``steps()``
+and ``restore`` only ever see committed generations; ``recover()``
+(run at construction) garbage-collects orphaned temp dirs and
+manifest-less step dirs from crashed writers.  ``save_async`` is the
+zero-stall write-behind mode: the state is snapshotted on device
+(donation-safe copies) and encoded + committed on a background writer
+— at most ONE checkpoint in flight, ``barrier()`` is the completion
+fence — so training continues while the previous step's bytes drain.
 """
 from __future__ import annotations
 
 import dataclasses
+import io as _pyio
 import json
 import pathlib
-import shutil
-from concurrent.futures import Future
+import re
+import zlib
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gf, placement
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
 from repro.exec.pipeline import Pipeline
+from repro.io.blob import BlobBackend, LocalBlob
+from repro.io.retry import RetryPolicy, RetryStats
 
 # Stream-axis tile (symbols) for the streaming encode: bounds the int32
 # intermediates on device and lets host file writes overlap device compute.
 SAVE_TILE_SYMBOLS = 1 << 20
+
+_STEP_DIR_RE = re.compile(r"step_(\d+)$")
+
+
+def _npy_bytes(arr: np.ndarray) -> bytes:
+    buf = _pyio.BytesIO()
+    np.save(buf, arr)
+    return buf.getvalue()
+
+
+def _npz_bytes(**arrs: np.ndarray) -> bytes:
+    buf = _pyio.BytesIO()
+    np.savez(buf, **arrs)
+    return buf.getvalue()
+
+
+def _crc_data(block: np.ndarray) -> int:
+    """Content CRC of a systematic block (over its stored uint8 bytes)."""
+    return zlib.crc32(np.ascontiguousarray(block, np.uint8).tobytes())
+
+
+def _crc_red(low: np.ndarray, hi: np.ndarray) -> int:
+    """Content CRC of a packed redundancy block — over the logical
+    (low, hi) payload, NOT the .npz container bytes, so a bit-exact
+    repair rewrite keeps the manifest CRC valid without a manifest
+    rewrite."""
+    c = zlib.crc32(np.ascontiguousarray(low, np.uint8).tobytes())
+    return zlib.crc32(np.ascontiguousarray(hi, np.int64).tobytes(), c)
+
+
+def _snapshot_leaf(x):
+    """Donation-safe snapshot of one pytree leaf: device arrays get a
+    device-side copy (dispatched before the caller's next donating step,
+    so program order protects it), host arrays a host copy."""
+    if isinstance(x, jax.Array):
+        return jnp.copy(x)
+    if isinstance(x, np.ndarray):
+        return np.copy(x)
+    return x
 
 
 @dataclasses.dataclass
@@ -148,10 +206,17 @@ class MSRCheckpointer:
                  save_tile_symbols: int = SAVE_TILE_SYMBOLS,
                  io_workers: int = 4, pipeline_depth: int = 2, store=None,
                  object_prefix: str = "ckpt",
-                 leaf_group_bytes: int = 1 << 20):
+                 leaf_group_bytes: int = 1 << 20,
+                 io_backend: Optional[BlobBackend] = None,
+                 retry: Optional[RetryPolicy] = None):
         self._store = store
         self._prefix = object_prefix.rstrip("/")
         self.leaf_group_bytes = max(1, leaf_group_bytes)
+        self.iob = io_backend or LocalBlob()
+        self.retry = retry or RetryPolicy()
+        self.retry_stats = RetryStats()
+        self._writer_ex: Optional[ThreadPoolExecutor] = None
+        self._inflight: Optional[Future] = None
         if store is not None:
             if directory is not None:
                 raise ValueError(
@@ -172,9 +237,12 @@ class MSRCheckpointer:
         self.dir = None
         if directory is not None:
             self.dir = pathlib.Path(directory)
-            self.dir.mkdir(parents=True, exist_ok=True)
+            self.iob.mkdir(self.dir)
         elif store is None:
             raise ValueError("need a directory (or a store=)")
+        # startup recovery: a crashed writer's orphans must not survive
+        # into this process's view of the generation sequence
+        self.recover()
 
     def _pipe(self, io_workers: Optional[int] = None) -> Pipeline:
         """One streaming engine per operation (DESIGN.md §11.3): pooled
@@ -200,20 +268,128 @@ class MSRCheckpointer:
         d = self._step_dir(step)
         return d / f"node_{i:02d}.a.npy", d / f"node_{i:02d}.r.npz"
 
+    # ------------------------------------------------------ retried blob I/O
+    def _write_blob(self, path: pathlib.Path, data: bytes, *,
+                    atomic: bool = False) -> None:
+        """Retry-wrapped backend write.  ``atomic=True`` uses the
+        single-file tmp+rename protocol — required for any write into an
+        already-committed generation (repair/restore rewrites), where a
+        torn write would corrupt a good checkpoint."""
+        if atomic:
+            tmp = path.parent / (path.name + ".tmp")
+            self.retry.call(lambda: self.iob.write(tmp, data),
+                            op=f"write:{path.name}", stats=self.retry_stats)
+            self.retry.call(lambda: self.iob.rename(tmp, path),
+                            op=f"rename:{path.name}", stats=self.retry_stats)
+        else:
+            self.retry.call(lambda: self.iob.write(path, data),
+                            op=f"write:{path.name}", stats=self.retry_stats)
+
+    def _read_bytes(self, path: pathlib.Path) -> bytes:
+        return self.retry.call(lambda: self.iob.read(path),
+                               op=f"read:{path.name}",
+                               stats=self.retry_stats)
+
+    def _load(self, path: pathlib.Path):
+        """np.load through the retried backend (npy and npz payloads)."""
+        return np.load(_pyio.BytesIO(self._read_bytes(path)))
+
     def _write_node_pair(self, a_path: pathlib.Path, r_path: pathlib.Path,
                          a_block: np.ndarray, r_low: np.ndarray,
                          r_hi: np.ndarray) -> None:
-        np.save(a_path, a_block.astype(np.uint8))
-        np.savez(r_path, low=r_low, hi=r_hi)
+        # repair writes land in committed generations: atomic per file
+        self._write_blob(a_path, _npy_bytes(a_block.astype(np.uint8)),
+                         atomic=True)
+        self._write_blob(r_path, _npz_bytes(low=r_low, hi=r_hi), atomic=True)
 
     def steps(self) -> list[int]:
+        """Committed generations only: a step counts iff its manifest
+        exists — uncommitted ``*.tmp`` staging dirs and torn generations
+        from crashed writers are invisible (and recover() removes them).
+        """
         if self._store is not None:
             pre = f"{self._prefix}/step_"
             return sorted(int(key[len(pre):].split("/")[0])
                           for key in self._store.keys()
                           if key.startswith(pre)
                           and key.endswith("/manifest"))
-        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+        out = []
+        for name in self.iob.listdir(self.dir):
+            m = _STEP_DIR_RE.fullmatch(name)
+            if m and self.iob.exists(self.dir / name / "manifest.json"):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    # --------------------------------------------------------------- recovery
+    def recover(self) -> list[str]:
+        """Garbage-collect orphans a crashed writer left behind; returns
+        what was removed.  Three orphan classes: ``*.tmp`` staging dirs
+        and files (save or atomic rewrite died before its rename),
+        ``step_*`` dirs without a manifest (pre-protocol torn saves),
+        and — store-backed — leaf-group objects of a step whose manifest
+        never committed."""
+        removed: list[str] = []
+        if self._store is not None:
+            committed = {f"{self._prefix}/step_{s:06d}/" for s in self.steps()}
+            pre = f"{self._prefix}/step_"
+            for key in list(self._store.keys()):
+                if not key.startswith(pre):
+                    continue
+                gen = key.rsplit("/", 1)[0] + "/"
+                if gen not in committed:
+                    self._store.delete(key)
+                    removed.append(key)
+            return removed
+        for name in self.iob.listdir(self.dir):
+            p = self.dir / name
+            if name.endswith(".tmp"):
+                self.iob.rmtree(p) if self.iob.isdir(p) else self.iob.remove(p)
+                removed.append(name)
+            elif _STEP_DIR_RE.fullmatch(name) and self.iob.isdir(p):
+                if not self.iob.exists(p / "manifest.json"):
+                    self.iob.rmtree(p)
+                    removed.append(name)
+                else:
+                    for f in self.iob.listdir(p):
+                        if f.endswith(".tmp"):    # torn atomic rewrite
+                            self.iob.remove(p / f)
+                            removed.append(f"{name}/{f}")
+        return removed
+
+    # --------------------------------------------------- write-behind (async)
+    def save_async(self, step: int, state: Any) -> Future:
+        """Zero-stall save: snapshot ``state`` (device-side, donation-safe
+        copies) and encode + commit on a background writer thread while
+        the caller keeps training.  At most ONE checkpoint is in flight:
+        a second call first waits out (and surfaces) the previous one.
+        The returned future resolves to the manifest; :meth:`barrier` is
+        the completion fence."""
+        self.barrier()
+        snap = jax.tree_util.tree_map(_snapshot_leaf, state)
+        if self._writer_ex is None:
+            self._writer_ex = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="ckpt-writer")
+        fut = self._writer_ex.submit(self.save, step, snap)
+        self._inflight = fut
+        return fut
+
+    def barrier(self) -> Optional[dict]:
+        """Wait for the in-flight write-behind save (if any); returns its
+        manifest or re-raises its failure (typed `GiveUpError` for I/O
+        give-ups).  Idempotent."""
+        fut, self._inflight = self._inflight, None
+        if fut is not None:
+            return fut.result()
+        return None
+
+    def close(self) -> None:
+        """Fence and shut down the write-behind writer thread."""
+        try:
+            self.barrier()
+        finally:
+            if self._writer_ex is not None:
+                self._writer_ex.shutdown(wait=True)
+                self._writer_ex = None
 
     # ------------------------------------------------------- store-backed save
     def _leaf_groups(self, metas: list[dict]) -> list[tuple[int, int]]:
@@ -282,42 +458,89 @@ class MSRCheckpointer:
         n = self.spec.n
         blocks, treedef, tspec = placement.pytree_to_blocks(state, n, self.spec.p)
         d = self._step_dir(step)
-        tmp = d.with_suffix(".tmp")
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
+        tmp = d.parent / (d.name + ".tmp")
+        if self.iob.exists(tmp):
+            self.iob.rmtree(tmp)
+        self.iob.mkdir(tmp)
         s_total = blocks.shape[1]
         tile = self.save_tile_symbols
-        with self._pipe() as pipe:
-            # systematic blocks are raw bytes — no compute, write immediately
-            for i in range(1, n + 1):
-                pipe.submit(np.save, tmp / f"node_{i:02d}.a.npy",
-                            blocks[i - 1].astype(np.uint8))
-            # depth-bounded pipeline over PLANNED encode tiles: tile t+1 is
-            # dispatched (AOT executable, bucketed shape — zero recompiles
-            # at steady state) before tile t lands in the host buffer
-            red = np.empty((n, s_total), np.int32)
-            pipe.stream_tiles(
-                s_total, tile,
-                lambda sl: self.code.encode_planned(blocks[:, sl]),
-                lambda sl, res: red.__setitem__(
-                    (slice(None), sl), res.host()))
-            # vectorized pack over all nodes at once (no per-node loop)
-            low, his = gf.pack257_rows(red)
-            for i in range(1, n + 1):
-                pipe.submit(np.savez, tmp / f"node_{i:02d}.r.npz",
-                            low=low[i - 1], hi=his[i - 1])
-            # context exit joins every write and surfaces any I/O error
-        manifest = {
-            "step": step, "k": self.spec.k, "p": self.spec.p,
-            "c": list(self.spec.c), "tree": tspec.to_json(),
-        }
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        if d.exists():
-            shutil.rmtree(d)
-        tmp.rename(d)                       # atomic-ish publish
+        crcs: dict[str, int] = {}
+        try:
+            with self._pipe() as pipe:
+                # systematic blocks are raw bytes — no compute, write
+                # immediately (retried, fsync'd, content CRC recorded)
+                for i in range(1, n + 1):
+                    pipe.submit(self._save_data_block, tmp, i,
+                                blocks[i - 1], crcs)
+                # depth-bounded pipeline over PLANNED encode tiles: tile t+1
+                # is dispatched (AOT executable, bucketed shape — zero
+                # recompiles at steady state) before tile t lands in the
+                # host buffer
+                red = np.empty((n, s_total), np.int32)
+                pipe.stream_tiles(
+                    s_total, tile,
+                    lambda sl: self.code.encode_planned(blocks[:, sl]),
+                    lambda sl, res: red.__setitem__(
+                        (slice(None), sl), res.host()))
+                # vectorized pack over all nodes at once (no per-node loop)
+                low, his = gf.pack257_rows(red)
+                for i in range(1, n + 1):
+                    pipe.submit(self._save_red_block, tmp, i,
+                                low[i - 1], his[i - 1], crcs)
+                # context exit joins every write and surfaces any I/O error
+            # the manifest commits LAST: a generation without one is, by
+            # definition, torn — steps()/restore never see it and
+            # recover() deletes it
+            manifest = {
+                "step": step, "k": self.spec.k, "p": self.spec.p,
+                "c": list(self.spec.c), "tree": tspec.to_json(),
+                "crc": dict(sorted(crcs.items())),
+            }
+            self._write_blob(tmp / "manifest.json",
+                             json.dumps(manifest).encode())
+            self._commit_dir(tmp, d)
+        except Exception:
+            # best-effort immediate GC; a hard crash leaves the orphan
+            # for recover() instead
+            try:
+                if self.iob.exists(tmp):
+                    self.iob.rmtree(tmp)
+            except OSError:
+                pass
+            raise
         self._gc()
         return manifest
+
+    def _save_data_block(self, tmp: pathlib.Path, i: int,
+                         block: np.ndarray, crcs: dict) -> None:
+        raw = block.astype(np.uint8)
+        crcs[f"node_{i:02d}.a"] = _crc_data(raw)
+        self._write_blob(tmp / f"node_{i:02d}.a.npy", _npy_bytes(raw))
+
+    def _save_red_block(self, tmp: pathlib.Path, i: int, low: np.ndarray,
+                        hi: np.ndarray, crcs: dict) -> None:
+        crcs[f"node_{i:02d}.r"] = _crc_red(low, hi)
+        self._write_blob(tmp / f"node_{i:02d}.r.npz",
+                         _npz_bytes(low=low, hi=hi))
+
+    def _commit_dir(self, tmp: pathlib.Path, final: pathlib.Path) -> None:
+        """Publish a fully-written staging dir with one rename (retried;
+        an existing generation is parked under ``*.old.tmp`` first so a
+        crash at any point leaves either the old or the new generation
+        committed, never a mix — the park/GC windows leave only
+        tmp-suffixed orphans recover() sweeps)."""
+        old = None
+        if self.iob.exists(final):
+            old = final.parent / (final.name + ".old.tmp")
+            if self.iob.exists(old):
+                self.iob.rmtree(old)
+            self.retry.call(lambda: self.iob.rename(final, old),
+                            op=f"park:{final.name}", stats=self.retry_stats)
+        self.retry.call(lambda: self.iob.rename(tmp, final),
+                        op=f"commit:{final.name}", stats=self.retry_stats)
+        if old is not None:
+            self.iob.rmtree(old)
+        self.iob.fsync_dir(final.parent)
 
     def _gc(self):
         steps = self.steps()
@@ -328,7 +551,10 @@ class MSRCheckpointer:
                     if key.startswith(pre):
                         self._store.delete(key)
             else:
-                shutil.rmtree(self._step_dir(s), ignore_errors=True)
+                try:
+                    self.iob.rmtree(self._step_dir(s))
+                except OSError:
+                    pass
 
     # ------------------------------------------------------------- block I/O
     def _read_block(self, ref) -> tuple[np.ndarray, int]:
@@ -346,17 +572,17 @@ class MSRCheckpointer:
             res = self._store.get_ext(ref)
             return np.frombuffer(res.obj, np.uint8), res.bytes_read
         if ref.suffix == ".npz":
-            z = np.load(ref)
+            z = self._load(ref)
             low, hi = z["low"], z["hi"]
             return gf.unpack257(low, hi), low.nbytes + hi.nbytes
-        arr = np.load(ref)
+        arr = self._load(ref)
         return arr.astype(np.int32), arr.nbytes
 
     def _read_packed(self, ref) -> tuple[tuple[np.ndarray, np.ndarray], int]:
         """One packed redundancy read -> ((low, hi), bytes) — the raw
         pack257 parts, NOT unpacked: row-batched callers collect n of
         these and expand them in one `gf.unpack257_rows` pass."""
-        z = np.load(ref)
+        z = self._load(ref)
         low, hi = z["low"], z["hi"]
         return (low, hi), low.nbytes + hi.nbytes
 
@@ -427,7 +653,7 @@ class MSRCheckpointer:
         if self._store is not None:
             return self._restore_store(template, step, failed_nodes)
         d = self._step_dir(step)
-        manifest = json.loads((d / "manifest.json").read_text())
+        manifest = json.loads(self._read_bytes(d / "manifest.json"))
         tspec = placement.TreeSpec.from_json(manifest["tree"])
         n, k = self.spec.n, self.spec.k
         failed = sorted(set(failed_nodes))
@@ -622,6 +848,9 @@ class MSRCheckpointer:
         """
         self._require_directory("scrub")
         n, k = self.spec.n, self.spec.k
+        manifest = json.loads(
+            self._read_bytes(self._step_dir(step) / "manifest.json"))
+        crcs = manifest.get("crc") or {}
         with self._pipe() as pipe:
             reader = _MeteredReader(self, pipe)
             futs_a = [reader.submit(self._node_files(step, i)[0])
@@ -631,6 +860,16 @@ class MSRCheckpointer:
             rows_a = [reader.take(f) for f in futs_a]
             packed = [reader.take(f) for f in futs_r]
             data = np.stack(rows_a)
+            # manifest content CRCs convict a damaged block exactly (the
+            # algebraic pass below only localizes); checked when present
+            mismatched: set[int] = set()
+            for i in range(1, n + 1):
+                ca = crcs.get(f"node_{i:02d}.a")
+                cr = crcs.get(f"node_{i:02d}.r")
+                if ca is not None and _crc_data(rows_a[i - 1]) != ca:
+                    mismatched.add(i)
+                if cr is not None and _crc_red(*packed[i - 1]) != cr:
+                    mismatched.add(i)
             # all n redundancy rows expanded in ONE vectorized unpack
             red = gf.unpack257_rows(np.stack([lo for lo, _ in packed]),
                                     [hi for _, hi in packed])
@@ -639,7 +878,6 @@ class MSRCheckpointer:
                                for i in nodes])
             helper_idx = np.asarray([self.code.repair_plan(i).data_indices
                                      for i in nodes])              # (n, k)
-            mismatched: set[int] = set()
 
             def flag(sl: slice, res) -> None:
                 out = res.host()

@@ -7,7 +7,14 @@ correlated rack failures, rolling restarts) drive the fused repair
 engine against real encoded bytes, with repair traffic accounted against
 the classical-RS re-download baseline and every recovery checked
 bit-exactly.
+
+`drills` (DESIGN.md §12.5) is the crash-consistency counterpart: scripted
+failure timelines (crash mid-save, rack loss under write-behind, crash
+mid-put, corruption + scrub, restart mid-drain, transient-fault storms)
+run against the real durability stack and assert bit-exact resume,
+bounded data loss, and zero orphans.
 """
+from .drills import DRILLS, DrillResult, run_drills
 from .events import (Event, Scenario, corrupt, default_layout, down, fail,
                      latent_corruption, multi_node_loss, rack_failure, read,
                      read_traffic, rolling_restart, scrub, single_node_loss,
@@ -23,4 +30,5 @@ __all__ = [
     "standard_scenarios", "default_layout", "LinkModel", "MetricsLog",
     "ClusterSimulator",
     "ScenarioReport", "run_scenario", "UP", "DOWN", "FAILED",
+    "DrillResult", "DRILLS", "run_drills",
 ]

@@ -1,0 +1,21 @@
+"""Fault-injectable I/O substrate: blob backends, retry policy, fault
+injection (DESIGN.md §12).
+
+The durability seam beneath `repro.checkpoint.MSRCheckpointer` and
+`repro.store.CodedObjectStore`: every byte they persist flows through a
+:class:`BlobBackend` (or the store's share-op guard) wrapped in a
+:class:`RetryPolicy`, so the drill harness (`repro.cluster.drills`) can
+inject torn writes, corrupt/partial reads, transient ``OSError``s and
+per-node latency and assert the system recovers bit-exactly.
+"""
+from .blob import BlobBackend, LocalBlob, count_tmp_orphans
+from .faults import FaultInjector, FaultSpec, FaultyBlob
+from .retry import (TRANSIENT_ERRORS, GiveUpError, RetryPolicy, RetryStats,
+                    fast_retry)
+
+__all__ = [
+    "BlobBackend", "LocalBlob", "count_tmp_orphans",
+    "FaultInjector", "FaultSpec", "FaultyBlob",
+    "RetryPolicy", "RetryStats", "GiveUpError", "TRANSIENT_ERRORS",
+    "fast_retry",
+]

@@ -19,10 +19,10 @@ repair, decode-inverse cache) into a multi-object storage subsystem:
   budget.
 """
 from .object_store import (FAILED, UP, CodedObjectStore, GetResult,
-                           ObjectStat, StoreMetrics)
+                           ObjectStat, StoreAudit, StoreMetrics)
 from .scheduler import DrainReport, RepairScheduler
 from .stripes import StripeManager, StripeMap
 
-__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreMetrics",
-           "RepairScheduler", "DrainReport", "StripeManager", "StripeMap",
-           "UP", "FAILED"]
+__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreAudit",
+           "StoreMetrics", "RepairScheduler", "DrainReport", "StripeManager",
+           "StripeMap", "UP", "FAILED"]

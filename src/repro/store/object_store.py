@@ -40,6 +40,8 @@ from repro.core.msr import DoubleCirculantMSR
 from repro.cluster.events import Event
 from repro.cluster.metrics import LinkModel, MetricsLog
 from repro.exec.pipeline import Pipeline
+from repro.io.faults import FaultInjector
+from repro.io.retry import RetryPolicy, RetryStats
 
 from .stripes import StripeManager, StripeMap
 
@@ -94,6 +96,26 @@ class GetResult:
     latency_s: float
 
 
+@dataclasses.dataclass
+class StoreAudit:
+    """:meth:`CodedObjectStore.audit` receipt (DESIGN.md §12.2).
+
+    ``orphan_shares`` are (phys_node, key, stripe, reason) tuples for
+    shares that no committed object accounts for — the residue a crash
+    between share placement and the ``_stats`` commit would leave if
+    ``put`` were not commit-last, or that direct state corruption
+    leaves.  ``stat``/``get`` never see orphans (they walk ``_stats``);
+    the audit exists so :meth:`CodedObjectStore.gc_orphans` and the
+    drill harness can prove there are none.
+    """
+    orphan_shares: list = dataclasses.field(default_factory=list)
+    shares_checked: int = 0
+
+    @property
+    def clean(self) -> bool:
+        return not self.orphan_shares
+
+
 class CodedObjectStore:
     """Multi-object MSR storage over a physical node ring.
 
@@ -127,6 +149,15 @@ class CodedObjectStore:
         Repair tasks per coalesced ``regenerate_batch`` dispatch in
         :meth:`repair_stripes_embedded` (the batch axis is bucketed, so
         variable task counts share executables).
+    faults : FaultInjector, optional
+        Fault-injection seam (DESIGN.md §12.4): every share read/write
+        consults ``faults.apply(op, "node:NN")`` so drills inject
+        per-node transient failures and latency.  ``None`` (production)
+        short-circuits the guard entirely.
+    retry : RetryPolicy, optional
+        How guarded share ops retry transient faults (DESIGN.md §12.3);
+        give-ups surface as typed ``GiveUpError``.  Accounting lands in
+        ``self.retry_stats``.
 
     Examples
     --------
@@ -144,7 +175,9 @@ class CodedObjectStore:
                  code: Optional[DoubleCirculantMSR] = None,
                  io_workers: int = 4, pipeline_depth: int = 2,
                  put_tile_stripes: int = 64,
-                 repair_tile_tasks: int = 64):
+                 repair_tile_tasks: int = 64,
+                 faults: Optional[FaultInjector] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.spec = spec
         self.k, self.n, self.p = spec.k, spec.n, spec.p
         self.n_nodes = int(n_nodes if n_nodes is not None else spec.n)
@@ -170,6 +203,12 @@ class CodedObjectStore:
         self._subscribers: list[Callable[[Event], None]] = []
         self.put_tile_stripes = max(1, int(put_tile_stripes))
         self.repair_tile_tasks = max(1, int(repair_tile_tasks))
+        # fault-injection seam (DESIGN.md §12): every share read/write is
+        # guarded by faults.apply("read"/"write", "node:NN") under the
+        # retry policy; faults=None short-circuits to zero overhead
+        self.faults = faults
+        self.retry = retry or RetryPolicy()
+        self.retry_stats = RetryStats()
         # persistent overlapped I/O⇄compute engine (DESIGN.md §11.3):
         # pool threads are reused across put/get/repair calls
         self.pipeline = Pipeline(io_workers=io_workers, depth=pipeline_depth)
@@ -249,6 +288,24 @@ class CodedObjectStore:
             raise ValueError(f"node {node} out of range 1..{self.n_nodes}")
         return node
 
+    # --------------------------------------------------------- fault seam
+    def _guard(self, op: str, phys: int) -> None:
+        """Route a share operation on physical node ``phys`` through the
+        fault seam under the retry policy.  No injector → no overhead;
+        persistent injected faults surface as ``GiveUpError``."""
+        if self.faults is None:
+            return
+        ref = f"node:{phys:02d}"
+        self.retry.call(lambda: self.faults.apply(op, ref),
+                        op=f"{op}:{ref}", stats=self.retry_stats)
+
+    def _read_share(self, phys: int, key: str, t: int) -> list:
+        """The (code_node, a_block, r_block) share of stripe (key, t) on
+        ``phys`` — every read path funnels through here so drills can
+        inject per-node read faults."""
+        self._guard("read", phys)
+        return self._shares[phys - 1][(key, t)]
+
     # -------------------------------------------------------------- put path
     def put(self, key: str, obj: Any, *, meta: Optional[dict] = None,
             ) -> ObjectStat:
@@ -262,9 +319,14 @@ class CodedObjectStore:
         FAILED are simply absent (lost-at-birth) — a later ``get``
         degrades around them and the scheduler can rebuild them once
         the slot is replaced.  Re-putting an existing key overwrites it.
+
+        **Atomicity** (DESIGN.md §12.2): shares are *staged* while the
+        windows stream and only installed — ``_stats`` entry last —
+        after every share write succeeded.  A put that dies mid-flight
+        (injected ``GiveUpError``, encode error) leaves the store
+        exactly as it was: no partial shares, and on overwrite the old
+        object still fully readable.
         """
-        if key in self._stats:
-            self.delete(key)
         dtype = shape = None
         if isinstance(obj, np.ndarray):
             dtype, shape = str(obj.dtype), tuple(obj.shape)
@@ -289,6 +351,8 @@ class CodedObjectStore:
             tt, view = flat
             return tt, self.code.encode_planned(view)
 
+        staged: list[tuple[int, int, list]] = []    # (phys, t, share)
+
         def place_window(t0: int, res) -> None:
             tt, planned = res
             red = self.stripes.unflatten(planned.host(), tt)
@@ -296,12 +360,22 @@ class CodedObjectStore:
                 pl = self.stripes.placement(base + t)
                 for j, phys in enumerate(pl):
                     if self.is_up(phys):
-                        self._shares[phys - 1][(key, t)] = \
-                            [j + 1, blocks[t, j].copy(),
-                             red[t - t0, j].copy()]
+                        self._guard("write", phys)
+                        staged.append((phys, t,
+                                       [j + 1, blocks[t, j].copy(),
+                                        red[t - t0, j].copy()]))
 
         self.pipeline.map(range(0, smap.n_stripes, tile),
                           encode_window, place_window, read=flatten_window)
+        # commit point: every share write succeeded.  Retire the old
+        # generation (overwrite case), install the staged shares, and
+        # only THEN publish the key — a crash or give-up before this
+        # line leaves no observable trace of the new put.
+        if key in self._stats:
+            self.delete(key)
+        for phys, t, share in staged:
+            if self.is_up(phys):        # node may have died mid-put
+                self._shares[phys - 1][(key, t)] = share
         stat = ObjectStat(key=key, size_bytes=smap.orig_bytes,
                           n_stripes=smap.n_stripes, stripe_symbols=self.S,
                           dtype=dtype, shape=shape, meta=dict(meta or {}))
@@ -349,7 +423,7 @@ class CodedObjectStore:
                             if j + 1 not in present)
             if not missing:
                 for j in range(self.n):
-                    blocks[t, j] = self._shares[pl[j] - 1][(key, t)][1]
+                    blocks[t, j] = self._read_share(pl[j], key, t)[1]
                 lat = self.link.fetch_s(self.S)
                 self.metrics.record_read("systematic", lat, self.n * self.S)
                 latency = max(latency, lat)
@@ -368,7 +442,7 @@ class CodedObjectStore:
             sys_lat = self.link.fetch_s(self.S)
             for j in range(self.n):
                 if j + 1 in present:
-                    blocks[t, j] = self._shares[pl[j] - 1][(key, t)][1]
+                    blocks[t, j] = self._read_share(pl[j], key, t)[1]
                     self.metrics.record_read("systematic", sys_lat, self.S)
                     bytes_read += self.S
             latency = max(latency, sys_lat)
@@ -421,9 +495,9 @@ class CodedObjectStore:
                    helpers: Sequence[int]) -> np.ndarray:
         """(2k, S) stacked [data; red] blocks of the helper code nodes."""
         pl = self.stripes.placement(self.stat(key).meta["_base_stripe"] + t)
-        rows_a = [self._shares[pl[i - 1] - 1][(key, t)][1] for i in helpers]
-        rows_r = [self._shares[pl[i - 1] - 1][(key, t)][2] for i in helpers]
-        return np.concatenate([np.stack(rows_a), np.stack(rows_r)], axis=0)
+        shares = [self._read_share(pl[i - 1], key, t) for i in helpers]
+        return np.concatenate([np.stack([s[1] for s in shares]),
+                               np.stack([s[2] for s in shares])], axis=0)
 
     # ----------------------------------------------------------- delete/stat
     def delete(self, key: str) -> None:
@@ -524,10 +598,10 @@ class CodedObjectStore:
                 base = self.stat(key).meta["_base_stripe"]
                 pl = self.stripes.placement(base + t)
                 plan = self.code.repair_plan(node)
-                r_prevs.append(self._shares[pl[plan.prev_node - 1] - 1]
-                               [(key, t)][2])
+                r_prevs.append(
+                    self._read_share(pl[plan.prev_node - 1], key, t)[2])
                 helper_data.append(np.stack(
-                    [self._shares[pl[i - 1] - 1][(key, t)][1]
+                    [self._read_share(pl[i - 1], key, t)[1]
                      for i in plan.next_nodes]))
                 placements.append(pl)
             return np.stack(r_prevs), np.stack(helper_data), placements
@@ -546,6 +620,7 @@ class CodedObjectStore:
                 if not self.is_up(phys):
                     raise RuntimeError(f"replace node {phys} before "
                                        f"repairing onto it")
+                self._guard("write", phys)
                 self._shares[phys - 1][(key, t)] = [node, pair[0].copy(),
                                                     pair[1].copy()]
 
@@ -576,6 +651,7 @@ class CodedObjectStore:
             if not self.is_up(phys):
                 raise RuntimeError(f"replace node {phys} before repairing "
                                    f"onto it")
+            self._guard("write", phys)
             self._shares[phys - 1][(key, t)] = \
                 [node, data[node - 1].copy(), red_f[j].copy()]
         return 2 * self.k * self.S
@@ -586,9 +662,43 @@ class CodedObjectStore:
         return baselines.rs_scenario_repair_symbols(self.k, self.S, n_shares)
 
     # ------------------------------------------------------------ inspection
+    def audit(self) -> StoreAudit:
+        """Walk every physically-held share and flag orphans — shares no
+        committed object accounts for (DESIGN.md §12.2): unknown key,
+        stripe index past the object's extent, or a share sitting on a
+        node its stripe's placement never assigned it to."""
+        report = StoreAudit()
+        for node0, shares in enumerate(self._shares):
+            for (key, t), share in shares.items():
+                report.shares_checked += 1
+                stat = self._stats.get(key)
+                if stat is None:
+                    report.orphan_shares.append(
+                        (node0 + 1, key, t, "unknown key"))
+                elif t >= stat.n_stripes:
+                    report.orphan_shares.append(
+                        (node0 + 1, key, t, "stripe out of range"))
+                else:
+                    pl = self.stripes.placement(stat.meta["_base_stripe"] + t)
+                    if pl[share[0] - 1] != node0 + 1:
+                        report.orphan_shares.append(
+                            (node0 + 1, key, t, "placement mismatch"))
+        return report
+
+    def gc_orphans(self) -> int:
+        """Drop every orphan share :meth:`audit` flags; returns how many
+        were collected (startup-recovery hygiene, DESIGN.md §12.2)."""
+        orphans = self.audit().orphan_shares
+        for phys, key, t, _reason in orphans:
+            self._shares[phys - 1].pop((key, t), None)
+        return len(orphans)
+
     def verify(self) -> bool:
-        """Ground-truth audit: every present share equals a fresh encode
-        of its object (the simulator's ``bit_exact`` check, store-wide)."""
+        """Ground-truth audit: no orphan shares, and every present share
+        equals a fresh encode of its object (the simulator's
+        ``bit_exact`` check, store-wide)."""
+        if not self.audit().clean:
+            return False
         for key, stat in self._stats.items():
             base = stat.meta["_base_stripe"]
             obj = self.get(key)
@@ -611,5 +721,5 @@ class CodedObjectStore:
                    for key, t in self.stripe_refs())
 
 
-__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreMetrics",
-           "UP", "FAILED"]
+__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreAudit",
+           "StoreMetrics", "UP", "FAILED"]

@@ -138,6 +138,18 @@ class RepairScheduler:
             added += self.enqueue_stripe(key, t)
         return added
 
+    def enqueue_scan(self) -> int:
+        """Full-store scan: queue every stripe with ANY lost share —
+        restart recovery (DESIGN.md §12.5).  A scheduler created after a
+        crash has no memory of the failure events that preceded it; one
+        scan rebuilds the queue from the store's ground truth (a
+        restart-mid-drain drill is ``enqueue_scan()`` + ``drain_all()``).
+        Returns how many stripes were newly enqueued."""
+        added = 0
+        for key, t in list(self.store.stripe_refs()):
+            added += self.enqueue_stripe(key, t)
+        return added
+
     def enqueue_stripe(self, key: str, t: int) -> int:
         lost = self.store.lost_code_nodes(key, t)
         if not lost:

@@ -85,30 +85,82 @@ class HeartbeatMonitor:
     """Progress-based straggler detection: a node whose reported step lags
     the median by > `lag_threshold` steps, or whose last heartbeat is older
     than `timeout_s`, is flagged.  Mitigation at the caller: re-dispatch the
-    laggard's microbatch to a spare (backup-task / speculative execution)."""
+    laggard's microbatch to a spare (backup-task / speculative execution).
+
+    Nodes the control plane declared dead (`declare_dead`) stay in the
+    ``dead()`` set regardless of clock math until they heartbeat again —
+    a beat from a removed node is a *rejoin* (recorded in ``rejoined()``),
+    the elastic re-admission path a restarted host takes.
+
+    ``straggler_s`` (optional) adds a wall-clock straggler criterion: a
+    node whose last beat is older than ``straggler_s`` (but within
+    ``timeout_s``) is flagged even if its reported progress looks fine —
+    the hung-but-not-dead shape.  Must be strictly less than
+    ``timeout_s``; thresholds are validated at construction so a
+    misconfigured monitor fails loudly instead of silently never firing.
+    """
 
     def __init__(self, n_nodes: int, *, timeout_s: float = 60.0,
-                 lag_threshold: int = 2):
+                 lag_threshold: int = 2,
+                 straggler_s: Optional[float] = None):
+        if n_nodes < 1:
+            raise ValueError("n_nodes must be >= 1")
+        if timeout_s <= 0:
+            raise ValueError(f"timeout_s must be positive, got {timeout_s}")
+        if lag_threshold < 0:
+            raise ValueError(f"lag_threshold must be >= 0, "
+                             f"got {lag_threshold}")
+        if straggler_s is not None and not 0 < straggler_s < timeout_s:
+            raise ValueError(
+                f"straggler_s must be in (0, timeout_s={timeout_s}), got "
+                f"{straggler_s} — a straggler window at or past the death "
+                f"timeout can never fire")
         self.n_nodes = n_nodes
         self.timeout_s = timeout_s
         self.lag_threshold = lag_threshold
+        self.straggler_s = straggler_s
         self._last_beat = {i: 0.0 for i in range(1, n_nodes + 1)}
         self._progress = {i: 0 for i in range(1, n_nodes + 1)}
+        self._removed: set[int] = set()
+        self._rejoined: list[int] = []
 
     def beat(self, node: int, step: int, now: float):
+        if node not in self._last_beat:
+            raise ValueError(f"unknown node {node} (1..{self.n_nodes})")
+        if node in self._removed:           # rejoin: re-admit the host
+            self._removed.discard(node)
+            self._rejoined.append(node)
         self._last_beat[node] = now
         self._progress[node] = max(self._progress[node], step)
 
+    def declare_dead(self, node: int) -> None:
+        """Control-plane removal: the node stays dead until it beats again
+        (crash recovery marks the crashed host here; a later beat is the
+        rejoin)."""
+        if node not in self._last_beat:
+            raise ValueError(f"unknown node {node} (1..{self.n_nodes})")
+        self._removed.add(node)
+
+    def rejoined(self) -> list[int]:
+        """Nodes that heartbeat after being declared dead, in rejoin order."""
+        return list(self._rejoined)
+
     def dead(self, now: float) -> list[int]:
-        return [i for i, t in self._last_beat.items() if now - t > self.timeout_s]
+        return sorted(set(self._removed) |
+                      {i for i, t in self._last_beat.items()
+                       if now - t > self.timeout_s})
 
     def stragglers(self, now: float) -> list[int]:
-        alive = [i for i in self._last_beat if i not in self.dead(now)]
+        dead = set(self.dead(now))
+        alive = [i for i in self._last_beat if i not in dead]
         if not alive:
             return []
         med = float(np.median([self._progress[i] for i in alive]))
-        return [i for i in alive
-                if med - self._progress[i] > self.lag_threshold]
+        out = {i for i in alive if med - self._progress[i] > self.lag_threshold}
+        if self.straggler_s is not None:
+            out |= {i for i in alive
+                    if now - self._last_beat[i] > self.straggler_s}
+        return sorted(out)
 
 
 # ------------------------------------------------------------------ elastic
@@ -152,18 +204,52 @@ class Supervisor:
     The loop is synchronous-SPMD, so a crash loses at most the steps since
     the last checkpoint; the MSR layer's job is to make the *storage* repair
     cheap and deterministic.
+
+    **Write-behind mode** (``write_behind=True``, DESIGN.md §12.5): save
+    points call ``checkpointer.save_async`` — the state is snapshotted on
+    device and encoded/written on a background thread while training
+    continues ("zero-stall" checkpointing).  At most one save is in
+    flight; the supervisor fences (``barrier``) before any crash-recovery
+    restore and before returning, so recovery never races a write and the
+    returned state is always durably backed.  A background save that
+    FAILS surfaces at the barrier: ``on_save_error="raise"`` re-raises
+    (strict durability), ``"log"`` records a ``ckpt_failed`` event and
+    continues — the previous committed generation still bounds the loss.
     """
 
     def __init__(self, checkpointer, injector: Optional[FailureInjector] = None,
-                 *, ckpt_every: int = 10, metrics=None):
+                 *, ckpt_every: int = 10, metrics=None,
+                 write_behind: bool = False, on_save_error: str = "raise"):
         """``metrics``: optional `repro.cluster.MetricsLog` — repair
         traffic from crash recovery is accounted there against the RS
         re-download baseline, alongside any serving-scenario traffic."""
+        if on_save_error not in ("raise", "log"):
+            raise ValueError(f"on_save_error must be 'raise' or 'log', "
+                             f"got {on_save_error!r}")
+        if write_behind and not hasattr(checkpointer, "save_async"):
+            raise ValueError("write_behind=True needs a checkpointer with "
+                             "save_async/barrier (MSRCheckpointer)")
         self.ckpt = checkpointer
         self.injector = injector
         self.ckpt_every = ckpt_every
         self.metrics = metrics
+        self.write_behind = write_behind
+        self.on_save_error = on_save_error
         self.log: list[dict] = []
+
+    def _barrier(self, step: int) -> None:
+        """Fence the in-flight background save (no-op when none).  A save
+        failure surfaces HERE — logged, then re-raised unless
+        ``on_save_error="log"``."""
+        if not hasattr(self.ckpt, "barrier"):
+            return
+        try:
+            self.ckpt.barrier()
+        except Exception as e:
+            self.log.append({"step": step, "event": "ckpt_failed",
+                             "error": repr(e)})
+            if self.on_save_error == "raise":
+                raise
 
     def run(self, state, step_fn: Callable, data_fn: Callable, n_steps: int,
             start_step: int = 0):
@@ -176,6 +262,10 @@ class Supervisor:
             crashes = [e for e in events if e.kind == "crash"
                        and (e.step, e.node) not in consumed]
             consumed.update((e.step, e.node) for e in crashes)
+            if crashes:
+                # recovery must see a settled checkpoint directory: fence
+                # the in-flight write-behind save BEFORE listing steps()
+                self._barrier(step)
             if crashes and self.ckpt.steps():
                 last = self.ckpt.steps()[-1]
                 failed = [e.node for e in crashes]
@@ -207,6 +297,17 @@ class Supervisor:
                              "loss": float(metrics["loss"])})
             step += 1
             if step % self.ckpt_every == 0:
-                self.ckpt.save(step, state)
-                self.log.append({"step": step, "event": "ckpt"})
+                if self.write_behind:
+                    # fence (with policy) BEFORE submitting: save_async's
+                    # own internal barrier would re-raise a previous
+                    # failure past the on_save_error="log" handling
+                    self._barrier(step)
+                    self.ckpt.save_async(step, state)
+                    self.log.append({"step": step, "event": "ckpt_async"})
+                else:
+                    self.ckpt.save(step, state)
+                    self.log.append({"step": step, "event": "ckpt"})
+        # the state handed back must be durably backed: fence the last
+        # background save before returning
+        self._barrier(step)
         return state

@@ -29,6 +29,7 @@ class TrainConfig:
     ckpt_every: int = 20
     log_every: int = 10
     seed: int = 0
+    write_behind: bool = False   # zero-stall checkpointing (DESIGN.md §12.5)
 
 
 def init_state(model: Model, opt_cfg: adamw.AdamWConfig, seed: int = 0) -> dict:
@@ -60,7 +61,8 @@ def train(cfg: ModelConfig, tcfg: TrainConfig,
         return {k: jnp.asarray(v) for k, v in b.items()}
 
     if checkpointer is not None:
-        sup = Supervisor(checkpointer, injector, ckpt_every=tcfg.ckpt_every)
+        sup = Supervisor(checkpointer, injector, ckpt_every=tcfg.ckpt_every,
+                         write_behind=tcfg.write_behind)
         state = sup.run(state, step_fn, data_fn, tcfg.n_steps,
                         start_step=start_step)
         history = sup.log

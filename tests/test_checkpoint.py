@@ -185,3 +185,137 @@ def test_bit_exact_across_dtypes(tmp_path):
     ckpt.save(1, state)
     got, _ = ckpt.restore(state, 1, failed_nodes=[2])
     assert_state_equal(got, state)
+
+
+# ------------------------------------------- crash consistency (DESIGN.md §12)
+from repro.io import (FaultInjector, FaultyBlob, GiveUpError, LocalBlob,
+                      count_tmp_orphans, fast_retry)
+
+
+class TestCrashConsistency:
+    def test_steps_ignores_uncommitted(self, ckpt, tmp_path):
+        ckpt.save(1, make_state())
+        # orphans a crashed writer could leave: a staging dir and a
+        # manifest-less (torn, pre-protocol) generation
+        (tmp_path / "step_000002.tmp").mkdir()
+        (tmp_path / "step_000003").mkdir()
+        (tmp_path / "step_000003" / "node_01.a.npy").write_bytes(b"x")
+        assert ckpt.steps() == [1]
+        got, rep = ckpt.restore(make_state())       # latest = committed latest
+        assert rep.step == 1
+
+    def test_recover_sweeps_orphans(self, ckpt, tmp_path):
+        ckpt.save(1, make_state())
+        (tmp_path / "step_000002.tmp").mkdir()
+        (tmp_path / "step_000002.tmp" / "junk").write_bytes(b"x")
+        (tmp_path / "step_000003").mkdir()
+        d1 = ckpt._step_dir(1)
+        (d1 / "node_01.a.npy.tmp").write_bytes(b"x")   # torn atomic rewrite
+        removed = ckpt.recover()
+        assert set(removed) == {"step_000002.tmp", "step_000003",
+                                "step_000001/node_01.a.npy.tmp"}
+        assert count_tmp_orphans(tmp_path) == 0
+        assert not (tmp_path / "step_000003").exists()
+        assert ckpt.steps() == [1]
+        assert ckpt.scrub(1).clean                     # committed gen intact
+
+    def test_recover_runs_at_construction(self, tmp_path):
+        (tmp_path / "step_000009.tmp").mkdir()
+        ck = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257))
+        assert count_tmp_orphans(tmp_path) == 0
+
+    def test_manifest_carries_content_crcs(self, ckpt):
+        import json
+        m = ckpt.save(4, make_state())
+        n = ckpt.spec.n
+        assert len(m["crc"]) == 2 * n
+        on_disk = json.loads(
+            (ckpt._step_dir(4) / "manifest.json").read_text())
+        assert on_disk["crc"] == m["crc"]
+        # repair rewrites are bit-exact: CRCs stay valid, no manifest churn
+        ckpt.repair_node(4, 1)
+        assert ckpt.scrub(4).clean
+
+    def test_save_heals_transient_faults(self, tmp_path):
+        faults = FaultInjector(seed=0)
+        faults.add(op="write", kind="transient", times=3)
+        ck = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257),
+                             io_backend=FaultyBlob(LocalBlob(), faults),
+                             retry=fast_retry())
+        state = make_state()
+        ck.save(1, state)
+        got, _ = ck.restore(state, 1)
+        assert_state_equal(got, state)
+        assert ck.retry_stats.retries >= 3 and ck.retry_stats.giveups == 0
+
+    def test_persistent_fault_gives_up_leaves_no_generation(self, tmp_path):
+        faults = FaultInjector(seed=0)
+        faults.add(op="write", match="step_000002", kind="transient")
+        ck = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257),
+                             io_backend=FaultyBlob(LocalBlob(), faults),
+                             retry=fast_retry())
+        state = make_state()
+        ck.save(1, state)
+        with pytest.raises(GiveUpError):
+            ck.save(2, state)
+        assert ck.steps() == [1]
+        assert count_tmp_orphans(tmp_path) == 0
+        got, _ = ck.restore(state)                  # previous gen still good
+        assert_state_equal(got, state)
+
+    def test_overwrite_same_step_is_atomic(self, ckpt):
+        s1, s2 = make_state(1), make_state(2)
+        ckpt.save(1, s1)
+        ckpt.save(1, s2)                            # park-old + commit path
+        assert ckpt.steps() == [1]
+        got, _ = ckpt.restore(s1, 1)
+        assert_state_equal(got, s2)
+        assert ckpt.scrub(1).clean
+
+
+class TestWriteBehind:
+    def test_save_async_roundtrip_and_barrier(self, ckpt):
+        state = make_state()
+        fut = ckpt.save_async(7, state)
+        manifest = ckpt.barrier()
+        assert manifest["step"] == 7 and fut.done()
+        assert ckpt.barrier() is None               # idempotent
+        got, _ = ckpt.restore(state, 7)
+        assert_state_equal(got, state)
+        ckpt.close()
+
+    def test_snapshot_isolates_from_mutation(self, ckpt):
+        """The write-behind snapshot must capture the state AT CALL TIME:
+        host-side mutation after save_async (the donation stand-in) must
+        not leak into the checkpoint."""
+        state = {"w": np.arange(64, dtype=np.int32)}
+        want = state["w"].copy()
+        ckpt.save_async(1, state)
+        state["w"] += 999                           # "donated"/reused buffer
+        ckpt.barrier()
+        got, _ = ckpt.restore({"w": want}, 1)
+        np.testing.assert_array_equal(np.asarray(got["w"]), want)
+        ckpt.close()
+
+    def test_single_inflight(self, ckpt):
+        """A second save_async fences the first: generations commit in
+        order, never interleaved."""
+        for s in (1, 2, 3):
+            ckpt.save_async(s, make_state(s))
+        ckpt.barrier()
+        assert ckpt.steps() == [1, 2, 3]
+        got, _ = ckpt.restore(make_state(), 3)
+        assert_state_equal(got, make_state(3))
+        ckpt.close()
+
+    def test_failure_surfaces_at_barrier(self, tmp_path):
+        faults = FaultInjector(seed=0)
+        faults.add(op="write", match="step_000002", kind="transient")
+        ck = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257),
+                             io_backend=FaultyBlob(LocalBlob(), faults),
+                             retry=fast_retry())
+        ck.save_async(2, make_state())
+        with pytest.raises(GiveUpError):
+            ck.barrier()
+        assert ck.steps() == []
+        ck.close()

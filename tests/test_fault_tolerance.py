@@ -87,3 +87,125 @@ def test_repair_event_reads_less_than_full_restore(tmp_path):
     # gamma = (k+1)/(2k) of B: for k=4 that's 5/8 of the systematic read
     sys_read = [e for e in log if e["event"] == "ckpt"]
     assert rep["repair_bytes"] > 0
+
+
+# ---------------------------------------- heartbeat rejoin + validation (§12)
+def test_heartbeat_threshold_validation():
+    with pytest.raises(ValueError):
+        ft.HeartbeatMonitor(4, timeout_s=0)
+    with pytest.raises(ValueError):
+        ft.HeartbeatMonitor(4, timeout_s=-5.0)
+    with pytest.raises(ValueError):
+        ft.HeartbeatMonitor(4, lag_threshold=-1)
+    with pytest.raises(ValueError, match="straggler_s"):
+        ft.HeartbeatMonitor(4, timeout_s=10, straggler_s=10)  # >= timeout
+    with pytest.raises(ValueError, match="straggler_s"):
+        ft.HeartbeatMonitor(4, timeout_s=10, straggler_s=0)
+    with pytest.raises(ValueError):
+        ft.HeartbeatMonitor(0)
+
+
+def test_heartbeat_declare_dead_and_rejoin():
+    mon = ft.HeartbeatMonitor(3, timeout_s=10)
+    for node in (1, 2, 3):
+        mon.beat(node, step=1, now=0.0)
+    mon.declare_dead(2)
+    assert mon.dead(now=1.0) == [2]          # removed regardless of clock
+    assert mon.rejoined() == []
+    mon.beat(2, step=2, now=3.0)             # the restarted host re-admits
+    assert mon.dead(now=3.5) == []
+    assert mon.rejoined() == [2]
+    with pytest.raises(ValueError):
+        mon.declare_dead(9)
+    with pytest.raises(ValueError):
+        mon.beat(9, 1, 0.0)
+
+
+def test_heartbeat_wall_clock_straggler():
+    mon = ft.HeartbeatMonitor(3, timeout_s=100, lag_threshold=2,
+                              straggler_s=10)
+    for node in (1, 2, 3):
+        mon.beat(node, step=5, now=0.0)
+    mon.beat(1, 6, 50.0)
+    mon.beat(2, 6, 50.0)
+    # node 3's progress is within lag_threshold but its beat is stale:
+    # hung-but-not-dead is flagged by the wall-clock criterion
+    assert mon.stragglers(now=55.0) == [3]
+    assert mon.dead(now=55.0) == []
+
+
+# -------------------------------- write-behind supervisor (DESIGN.md §12.5)
+def _int_step(state, batch):
+    return {"w": state["w"] + batch["x"]}, {"loss": float(batch["x"][0])}
+
+
+def _int_data(step):
+    return {"x": np.full(256, step + 1, np.int64)}
+
+
+def _int_ref(n_steps):
+    state = {"w": np.zeros(256, np.int64)}
+    for s in range(n_steps):
+        state, _ = _int_step(state, _int_data(s))
+    return state
+
+
+def test_write_behind_bit_exact_vs_stop_world(tmp_path):
+    outs = {}
+    for mode in (False, True):
+        ck = MSRCheckpointer(tmp_path / f"wb{mode}", CodeSpec.make(2, 257))
+        sup = ft.Supervisor(ck, ckpt_every=3, write_behind=mode)
+        out = sup.run({"w": np.zeros(256, np.int64)}, _int_step, _int_data, 10)
+        ck.close()
+        outs[mode] = out
+        expected = "ckpt_async" if mode else "ckpt"
+        assert any(e["event"] == expected for e in sup.log)
+        # run returns only after the last save committed (final barrier)
+        assert ck.steps()[-1] == 9
+    np.testing.assert_array_equal(outs[False]["w"], outs[True]["w"])
+    np.testing.assert_array_equal(outs[True]["w"], _int_ref(10)["w"])
+
+
+def test_crash_mid_save_restores_previous_generation(tmp_path):
+    """Satellite: the step-8 background save dies; a crash at step 9 must
+    fence the failed save, fall back to generation 4, and resume
+    BIT-EXACTLY from it — no orphan residue on disk."""
+    from repro.io import (FaultInjector, FaultyBlob, LocalBlob,
+                          count_tmp_orphans, fast_retry)
+    faults = FaultInjector(seed=0)
+    faults.add(op="write", match="step_000008", kind="transient")
+    ck = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257),
+                         io_backend=FaultyBlob(LocalBlob(), faults),
+                         retry=fast_retry())
+    inj = ft.FailureInjector(4, schedule=[ft.FailureEvent(step=9, node=2)])
+    sup = ft.Supervisor(ck, inj, ckpt_every=4, write_behind=True,
+                        on_save_error="log")
+    out = sup.run({"w": np.zeros(256, np.int64)}, _int_step, _int_data, 12)
+    ck.close()
+    events = [e["event"] for e in sup.log]
+    assert "ckpt_failed" in events            # the fenced failure, logged
+    repair = [e for e in sup.log if e["event"] == "repair"][0]
+    assert repair["ckpt_step"] == 4           # previous generation, not 8
+    np.testing.assert_array_equal(out["w"], _int_ref(12)["w"])  # bit-exact
+    assert count_tmp_orphans(tmp_path) == 0
+
+
+def test_write_behind_save_error_raise_mode(tmp_path):
+    from repro.io import FaultInjector, FaultyBlob, GiveUpError, LocalBlob, fast_retry
+    faults = FaultInjector(seed=0)
+    faults.add(op="write", match="step_000004", kind="transient")
+    ck = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257),
+                         io_backend=FaultyBlob(LocalBlob(), faults),
+                         retry=fast_retry())
+    sup = ft.Supervisor(ck, ckpt_every=4, write_behind=True)  # default: raise
+    with pytest.raises(GiveUpError):
+        sup.run({"w": np.zeros(256, np.int64)}, _int_step, _int_data, 8)
+    ck.close()
+
+
+def test_supervisor_config_validation(tmp_path):
+    ck = MSRCheckpointer(tmp_path, CodeSpec.make(2, 257))
+    with pytest.raises(ValueError, match="on_save_error"):
+        ft.Supervisor(ck, on_save_error="ignore")
+    with pytest.raises(ValueError, match="save_async"):
+        ft.Supervisor(object(), write_behind=True)

@@ -1,0 +1,224 @@
+"""The fault-injectable I/O substrate (DESIGN.md §12): blob backends,
+retry policy, fault injection."""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.io import (TRANSIENT_ERRORS, FaultInjector, FaultyBlob,
+                      GiveUpError, LocalBlob, RetryPolicy, RetryStats,
+                      count_tmp_orphans, fast_retry)
+
+
+# ------------------------------------------------------------------ blob
+class TestLocalBlob:
+    def test_roundtrip_and_metadata(self, tmp_path):
+        b = LocalBlob()
+        p = tmp_path / "x.bin"
+        b.write(p, b"payload")
+        assert b.read(p) == b"payload"
+        assert b.exists(p) and not b.isdir(p)
+        assert b.listdir(tmp_path) == ["x.bin"]
+        b.mkdir(tmp_path / "d")
+        assert b.isdir(tmp_path / "d")
+        b.rename(p, tmp_path / "d" / "y.bin")
+        assert b.read(tmp_path / "d" / "y.bin") == b"payload"
+        b.rmtree(tmp_path / "d")
+        assert not b.exists(tmp_path / "d")
+
+    def test_count_tmp_orphans(self, tmp_path):
+        assert count_tmp_orphans(tmp_path) == 0
+        (tmp_path / "step_000001.tmp").mkdir()
+        (tmp_path / "step_000002").mkdir()
+        (tmp_path / "step_000002" / "f.npy.tmp").write_bytes(b"x")
+        (tmp_path / "step_000002" / "f.npy").write_bytes(b"x")
+        assert count_tmp_orphans(tmp_path) == 2
+        assert count_tmp_orphans(tmp_path / "missing") == 0
+
+
+# ----------------------------------------------------------------- retry
+class TestRetryPolicy:
+    def test_success_first_try_no_sleep(self):
+        calls = []
+        pol = RetryPolicy(sleep=lambda s: calls.append(s))
+        stats = RetryStats()
+        assert pol.call(lambda: 42, op="x", stats=stats) == 42
+        assert calls == [] and stats.summary() == {
+            "ops": 1, "attempts": 1, "retries": 0, "giveups": 0,
+            "amplification": 1.0}
+
+    def test_transient_heals(self):
+        state = {"n": 0}
+
+        def flaky():
+            state["n"] += 1
+            if state["n"] < 3:
+                raise OSError("flaky")
+            return "ok"
+
+        stats = RetryStats()
+        assert fast_retry().call(flaky, op="x", stats=stats) == "ok"
+        assert stats.attempts == 3 and stats.retries == 2
+        assert stats.giveups == 0
+
+    def test_typed_giveup_carries_cause(self):
+        pol = fast_retry(max_attempts=3)
+        stats = RetryStats()
+        with pytest.raises(GiveUpError) as ei:
+            pol.call(self._always_fail, op="w:node_01", stats=stats)
+        assert ei.value.op == "w:node_01" and ei.value.attempts == 3
+        assert isinstance(ei.value.__cause__, OSError)
+        # a give-up is NOT retryable by an outer policy layer
+        assert not isinstance(ei.value, TRANSIENT_ERRORS)
+        assert stats.giveups == 1 and stats.amplification == 3.0
+
+    @staticmethod
+    def _always_fail():
+        raise OSError("dead disk")
+
+    def test_non_transient_propagates_immediately(self):
+        def boom():
+            raise ValueError("logic error")
+
+        with pytest.raises(ValueError):
+            fast_retry().call(boom, op="x")
+
+    def test_deterministic_jitter(self):
+        pol = RetryPolicy(base_delay_s=0.01, jitter=0.5)
+        d1 = [pol.delay_s("op-a", a) for a in range(4)]
+        assert d1 == [pol.delay_s("op-a", a) for a in range(4)]
+        # jitter stays in [1-j, 1+j] of the raw exponential curve
+        for a, d in enumerate(d1):
+            raw = min(0.01 * 2.0 ** a, pol.max_delay_s)
+            assert 0.5 * raw <= d <= 1.5 * raw
+        # different op names take different (but fixed) backoff paths
+        assert d1 != [pol.delay_s("op-b", a) for a in range(4)]
+
+    def test_op_timeout_bounds_wall_clock(self):
+        clock = {"t": 0.0}
+
+        def tick():
+            clock["t"] += 10.0
+            raise OSError("slow fail")
+
+        pol = RetryPolicy(max_attempts=100, op_timeout_s=25.0,
+                          sleep=lambda s: None, clock=lambda: clock["t"])
+        with pytest.raises(GiveUpError) as ei:
+            pol.call(tick, op="x")
+        assert ei.value.attempts < 100  # budget, not attempts, stopped it
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(jitter=1.5)
+        with pytest.raises(ValueError):
+            RetryPolicy(op_timeout_s=0)
+
+
+# ---------------------------------------------------------------- faults
+class TestFaultInjector:
+    def test_times_caps_firing(self):
+        inj = FaultInjector()
+        inj.add(op="write", kind="transient", times=2)
+        fired = 0
+        for _ in range(5):
+            try:
+                inj.apply("write", "p")
+            except OSError:
+                fired += 1
+        assert fired == 2
+
+    def test_op_and_match_filtering(self):
+        inj = FaultInjector()
+        inj.add(op="write", match="node_03", kind="transient")
+        inj.apply("read", "node_03.a.npy")        # wrong op: no fire
+        inj.apply("write", "node_01.a.npy")       # wrong ref: no fire
+        with pytest.raises(OSError):
+            inj.apply("write", "x/node_03.a.npy")
+
+    def test_prob_deterministic_given_seed(self):
+        def seq(seed):
+            inj = FaultInjector(seed=seed)
+            inj.add(kind="transient", prob=0.5)
+            out = []
+            for i in range(32):
+                try:
+                    inj.apply("write", f"p{i}")
+                    out.append(0)
+                except OSError:
+                    out.append(1)
+            return out
+
+        a = seq(7)
+        assert a == seq(7) and 0 < sum(a) < 32
+        assert a != seq(8)
+
+    def test_latency_sleeps_instead_of_raising(self):
+        slept = []
+        inj = FaultInjector(sleep=slept.append)
+        inj.add(kind="latency", latency_s=0.25)
+        inj.apply("read", "p")
+        assert slept == [0.25]
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultInjector().add(kind="meteor")
+
+
+class TestFaultyBlob:
+    def _blob(self, faults):
+        return FaultyBlob(LocalBlob(fsync=False), faults)
+
+    def test_transient_write_leaves_no_bytes(self, tmp_path):
+        inj = FaultInjector()
+        inj.add(op="write", kind="transient", times=1)
+        fb = self._blob(inj)
+        with pytest.raises(OSError):
+            fb.write(tmp_path / "f", b"data")
+        assert not fb.exists(tmp_path / "f")
+        fb.write(tmp_path / "f", b"data")          # rule exhausted
+        assert fb.read(tmp_path / "f") == b"data"
+
+    def test_torn_write_leaves_prefix_then_raises(self, tmp_path):
+        inj = FaultInjector()
+        inj.add(op="write", kind="torn", torn_fraction=0.5, times=1)
+        fb = self._blob(inj)
+        with pytest.raises(OSError):
+            fb.write(tmp_path / "f", b"0123456789")
+        assert fb.read(tmp_path / "f") == b"01234"   # the torn prefix
+
+    def test_torn_write_heals_under_retry(self, tmp_path):
+        inj = FaultInjector()
+        inj.add(op="write", kind="torn", times=1)
+        fb = self._blob(inj)
+        fast_retry().call(lambda: fb.write(tmp_path / "f", b"0123456789"),
+                          op="w")
+        assert fb.read(tmp_path / "f") == b"0123456789"
+
+    def test_corrupt_flips_exactly_one_byte(self, tmp_path):
+        inj = FaultInjector()
+        inj.add(op="read", kind="corrupt", times=1)
+        fb = self._blob(inj)
+        fb.write(tmp_path / "f", bytes(64))
+        bad = fb.read(tmp_path / "f")
+        assert bad != bytes(64) and len(bad) == 64
+        assert sum(a != b for a, b in zip(bad, bytes(64))) == 1
+        assert fb.read(tmp_path / "f") == bytes(64)  # rule exhausted
+
+    def test_torn_read_returns_prefix(self, tmp_path):
+        inj = FaultInjector()
+        inj.add(op="read", kind="torn", torn_fraction=0.25, times=1)
+        fb = self._blob(inj)
+        fb.write(tmp_path / "f", b"x" * 100)
+        assert len(fb.read(tmp_path / "f")) == 25
+
+    def test_rename_fault_kills_commit(self, tmp_path):
+        inj = FaultInjector()
+        inj.add(op="rename", match="final", kind="transient")
+        fb = self._blob(inj)
+        fb.write(tmp_path / "stage", b"x")
+        with pytest.raises(OSError):
+            fb.rename(tmp_path / "stage", tmp_path / "final")
+        assert fb.exists(tmp_path / "stage")
+        assert not fb.exists(tmp_path / "final")

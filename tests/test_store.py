@@ -443,3 +443,107 @@ def test_serving_engine_reads_param_pytree_from_store():
     out2 = _read_coded_params(store, "params")   # transparent degraded
     assert np.array_equal(out2["layer"]["w"], params["layer"]["w"])
     assert np.array_equal(out2["layer"]["b"], params["layer"]["b"])
+
+
+# ------------------------------------ atomic put + audit (DESIGN.md §12.2)
+class TestAtomicPut:
+    """A put that dies mid-flight must be invisible: the old value (if
+    any) stays readable, a new key never appears half-written."""
+
+    def _faulty_store(self, match="node:03", times=None):
+        from repro.io import FaultInjector, fast_retry
+        faults = FaultInjector(seed=0)
+        kw = {} if times is None else {"times": times}
+        faults.add(op="write", match=match, kind="transient", **kw)
+        # n_nodes == n so every stripe places a share on the faulted node
+        store = make_store(spec=SPEC4, n_nodes=SPEC4.n, faults=faults,
+                           retry=fast_retry(max_attempts=2))
+        return store
+
+    def test_failed_overwrite_keeps_old_value(self):
+        from repro.io import GiveUpError
+        store = self._faulty_store()
+        store.faults.clear()                   # healthy while the first
+        old = payload_bytes(3000, seed=1)      # generation lands...
+        store.put("k", old)
+        store.faults.add(op="write", match="node:03", kind="transient")
+        with pytest.raises(GiveUpError):
+            store.put("k", payload_bytes(3000, seed=2))
+        assert store.get("k") == old           # old generation intact
+        audit = store.audit()
+        assert audit.clean and store.verify()
+
+    def test_failed_new_key_put_is_invisible(self):
+        from repro.io import GiveUpError
+        store = self._faulty_store()
+        with pytest.raises(GiveUpError):
+            store.put("ghost", payload_bytes(2000))
+        assert "ghost" not in store.keys()
+        with pytest.raises(KeyError):
+            store.get("ghost")
+        assert store.audit().clean
+        store.faults.clear()                   # disk healed: put succeeds
+        data = payload_bytes(2000, seed=9)
+        store.put("ghost", data)
+        assert store.get("ghost") == data
+
+    def test_transient_fault_heals_within_retry_budget(self):
+        from repro.io import FaultInjector, fast_retry
+        faults = FaultInjector(seed=0)
+        faults.add(op="write", match="node:02", kind="transient", times=2)
+        store = make_store(spec=SPEC4, n_nodes=SPEC4.n, faults=faults,
+                           retry=fast_retry(max_attempts=4))
+        data = payload_bytes(4000, seed=5)
+        store.put("k", data)                   # retries absorb both faults
+        assert store.get("k") == data
+        assert store.retry_stats.giveups == 0
+        assert store.retry_stats.retries >= 2
+
+    def test_audit_flags_and_gc_collects_orphans(self):
+        store = make_store()
+        store.put("k", payload_bytes(3000))
+        assert store.audit().clean
+        # plant a ghost share: unknown key on some node
+        store._shares[0][("zombie", 0)] = [1, np.zeros(64, np.int32),
+                                           np.zeros(64, np.int32)]
+        audit = store.audit()
+        assert not audit.clean and not store.verify()
+        (phys, key, t, reason) = audit.orphan_shares[0]
+        assert (phys, key, t) == (1, "zombie", 0) and "unknown" in reason
+        assert store.gc_orphans() == 1
+        assert store.audit().clean and store.verify()
+
+    def test_audit_flags_out_of_range_stripe(self):
+        store = make_store()
+        store.put("k", payload_bytes(1000))
+        n_stripes = store._stats["k"].n_stripes
+        store._shares[2][("k", n_stripes + 5)] = [3, np.zeros(64, np.int32),
+                                                  np.zeros(64, np.int32)]
+        audit = store.audit()
+        assert [o[3] for o in audit.orphan_shares] == ["stripe out of range"]
+        store.gc_orphans()
+        assert store.audit().clean
+
+
+# --------------------------------- scheduler restart recovery (§12.5)
+class TestSchedulerRestart:
+    def test_enqueue_scan_resumes_interrupted_drain(self):
+        store = make_store(spec=SPEC4, n_nodes=8, stripe_symbols=16)
+        for i in range(3):
+            store.put(f"obj{i}", payload_bytes(2500, seed=i))
+        sched = RepairScheduler(store)
+        store.fail_node(2)
+        sched.enqueue_node(2)
+        sched.drain(budget_symbols=(SPEC4.k + 1) * 16)  # partial, then "crash"
+        del sched
+        fresh = RepairScheduler(store)          # restarted with empty queue
+        assert fresh.enqueue_scan() > 0         # rebuilt from store metadata
+        fresh.drain_all()
+        assert store.verify()
+        assert store.total_lost_shares() == 0
+
+    def test_enqueue_scan_noop_when_healthy(self):
+        store = make_store()
+        store.put("k", payload_bytes(1000))
+        sched = RepairScheduler(store)
+        assert sched.enqueue_scan() == 0
