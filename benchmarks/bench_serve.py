@@ -1,0 +1,398 @@
+"""Robust serving front end under stress (DESIGN.md §13) — emits the
+repo-root ``BENCH_serve.json`` the CI ``serve-smoke`` job gates on.
+
+Six sections, every robustness claim asserted in-bench:
+
+* **healthy** — closed-loop reads against an all-up store: request
+  throughput + wall-latency tail (p50/p99/p999); zero failures, every
+  payload bit-exact, p99 within the configured deadline;
+* **degraded** — n-k physical nodes down: every read decodes around
+  the losses bit-exactly with zero failures, and degraded stripes
+  coalesce ACROSS concurrent requests by failure pattern (decode
+  dispatches < degraded stripes);
+* **churn** — serving interleaved with bandwidth-throttled repair
+  drains of a failed node's stripes (one :class:`LinkModel` budget for
+  both): zero failures while the queue drains to empty;
+* **corrupt_storm** — seeded read-path corrupt rules on every node
+  plus real storage rot on one: CRC rejects every flip, transient
+  flips are re-read, rotten shares are dropped + repaired, quarantined
+  nodes re-admitted only after a clean scrub — and not one corrupt
+  payload reaches a caller;
+* **hedge_ab** — the headline A/B: identical injected stragglers,
+  hedged front end vs unhedged baseline; hedging + learned-latency
+  avoidance must cut read p99 by >= 30% (``p99_cut_target``);
+* **overload** — a bounded admission queue over capacity: excess load
+  is shed with typed :class:`Overloaded` (never a hang or silent
+  drop), low priority sheds first, and served + shed == submitted.
+
+Run directly (``python -m benchmarks.bench_serve [--fast]``) or via
+``benchmarks.run``.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import numpy as np
+
+from benchmarks import _timing
+from repro.core.circulant import CodeSpec
+from repro.io import FaultInjector, fast_retry
+from repro.serve import Overloaded, ReadFrontEnd
+from repro.store import CodedObjectStore, RepairScheduler
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+K = 4                    # n = 2k = 8 shares/stripe
+N_NODES = 12             # any n-k = 4 physical losses leave >= k shares
+STRIPE_SYMBOLS = 128
+DEADLINE_S = 0.25
+P99_CUT_TARGET = 0.30
+
+
+def _build(seed: int, *, n_objects: int = 6, obj_bytes: int = 4096,
+           faults=None, with_scheduler: bool = False):
+    """A populated store (+ optional subscribed scheduler) and the
+    seeded payloads reads are checked bit-exactly against."""
+    store = CodedObjectStore(
+        CodeSpec.make(K, 257), n_nodes=N_NODES,
+        stripe_symbols=STRIPE_SYMBOLS, faults=faults,
+        retry=fast_retry(max_attempts=6))
+    rng = _timing.rng(seed)
+    objects = {}
+    for i in range(n_objects):
+        key = f"obj-{i:02d}"
+        objects[key] = rng.integers(0, 256, size=obj_bytes,
+                                    dtype=np.uint8).tobytes()
+        store.put(key, objects[key])
+    sched = None
+    if with_scheduler:
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+    return store, sched, objects
+
+
+def _serve_loop(fe: ReadFrontEnd, objects: dict, n_requests: int) -> dict:
+    """Closed-loop requests cycling over the keys; returns wall
+    throughput + how many payloads came back corrupt/failed."""
+    keys = sorted(objects)
+    corrupt = failed = 0
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        tk = fe.read_ext(keys[i % len(keys)], deadline_s=DEADLINE_S)
+        if tk.error is not None:
+            failed += 1
+        elif tk.obj != objects[tk.key]:
+            corrupt += 1
+    wall = time.perf_counter() - t0
+    return {"requests": n_requests, "wall_s": round(wall, 4),
+            "req_per_s": round(n_requests / wall, 1),
+            "corrupt_served": corrupt, "failed": failed}
+
+
+def healthy_section(fast: bool, seed: int, quiet: bool) -> dict:
+    n_requests = 120 if fast else 400
+    store, _, objects = _build(seed)
+    with ReadFrontEnd(store, default_deadline_s=DEADLINE_S) as fe:
+        loop = _serve_loop(fe, objects, n_requests)
+        lat = fe.metrics.latency_percentiles()
+        out = {**loop, "latency": {k: round(v, 6) for k, v in lat.items()},
+               "deadline_misses": fe.metrics.deadline_misses,
+               "p99_within_deadline": lat["p99_s"] <= DEADLINE_S}
+    assert out["failed"] == 0 and out["corrupt_served"] == 0, out
+    assert out["p99_within_deadline"], out
+    if not quiet:
+        print(f"[healthy] {out['req_per_s']} req/s  "
+              f"p50={lat['p50_s']*1e3:.2f}ms p99={lat['p99_s']*1e3:.2f}ms "
+              f"p999={lat['p999_s']*1e3:.2f}ms")
+    return out
+
+
+def degraded_section(fast: bool, seed: int, quiet: bool) -> dict:
+    """n-k nodes down; all keys submitted concurrently so degraded
+    stripes coalesce across requests by failure pattern."""
+    store, _, objects = _build(seed + 1)
+    n_lost = store.n - store.k
+    for node in range(1, n_lost + 1):
+        store.fail_node(node)
+    rounds = 4 if fast else 12
+    with ReadFrontEnd(store, default_deadline_s=DEADLINE_S) as fe:
+        corrupt = failed = 0
+        for _ in range(rounds):
+            tickets = [fe.submit(key, deadline_s=DEADLINE_S)
+                       for key in sorted(objects) for _rep in range(2)]
+            fe.pump()
+            for tk in tickets:
+                if tk.error is not None:
+                    failed += 1
+                elif tk.obj != objects[tk.key]:
+                    corrupt += 1
+        m = fe.metrics
+        out = {"nodes_failed": n_lost, "requests": m.requests,
+               "failed": failed, "corrupt_served": corrupt,
+               "degraded_stripes": m.degraded_stripes,
+               "decode_dispatches": m.decode_dispatches,
+               "coalesced_requests": m.coalesced_requests,
+               "latency": {k: round(v, 6)
+                           for k, v in m.latency_percentiles().items()}}
+    assert out["failed"] == 0 and out["corrupt_served"] == 0, out
+    assert out["degraded_stripes"] > 0, out
+    # the cross-request coalescer: one planned dispatch per failure
+    # pattern, not one per degraded stripe
+    assert out["decode_dispatches"] < out["degraded_stripes"], out
+    assert out["coalesced_requests"] > 0, out
+    if not quiet:
+        print(f"[degraded] {n_lost} nodes down: {out['requests']} reads, "
+              f"{out['degraded_stripes']} degraded stripes -> "
+              f"{out['decode_dispatches']} decode dispatches, 0 failed")
+    return out
+
+
+def churn_section(fast: bool, seed: int, quiet: bool) -> dict:
+    """Foreground serving interleaved with throttled repair drains
+    after a node failure — the tick loop shares the link budget."""
+    store, sched, objects = _build(seed + 2, with_scheduler=True)
+    store.fail_node(2)
+    pending0 = sched.pending()
+    budget = (store.k + 1) * store.S * 2       # ~2 repaired stripes/tick
+    keys = sorted(objects)
+    corrupt = failed = ticks = 0
+    with ReadFrontEnd(store, scheduler=sched,
+                      default_deadline_s=DEADLINE_S) as fe:
+        i = 0
+        while sched.pending() and ticks < 100:
+            for _ in range(3):
+                fe.submit(keys[i % len(keys)], deadline_s=DEADLINE_S)
+                i += 1
+            fe.tick(repair_budget_symbols=budget)
+            ticks += 1
+        served = fe.read_ext  # noqa: F841  (keep fe alive for metrics)
+        for key in keys:      # post-drain: every key reads clean
+            tk = fe.read_ext(key, deadline_s=DEADLINE_S)
+            if tk.error is not None:
+                failed += 1
+            elif tk.obj != objects[key]:
+                corrupt += 1
+        m = fe.metrics
+        out = {"pending_at_failure": pending0, "ticks": ticks,
+               "repair_budget_symbols": budget,
+               "requests": m.requests, "served": m.served,
+               "failed": m.failed + failed, "corrupt_served": corrupt,
+               "degraded_stripes": m.degraded_stripes,
+               "pending_after": sched.pending()}
+    assert pending0 > 0 and out["pending_after"] == 0, out
+    assert out["failed"] == 0 and out["corrupt_served"] == 0, out
+    if not quiet:
+        print(f"[churn] {pending0} stripes repaired over {ticks} ticks "
+              f"while serving {out['served']} reads, 0 failed")
+    return out
+
+
+def corrupt_storm_section(fast: bool, seed: int, quiet: bool) -> dict:
+    """Read-path corrupt rules on every node + storage rot on one, with
+    n-k nodes ALSO down: CRC catches every flip, nothing corrupt is
+    served, the rotten node quarantines and only a clean scrub
+    re-admits it.  Unhedged (fetches stay serial) so the seeded fault
+    sequence is deterministic."""
+    faults = FaultInjector(seed=seed)
+    store, sched, objects = _build(seed + 3, faults=faults,
+                                   with_scheduler=True)
+    keys = sorted(objects)
+    n_lost = store.n - store.k
+    failed_nodes = set(range(1, n_lost + 1))
+    # storage rot: two shares on node 7 (bypasses the fault seam) —
+    # chosen on stripes that keep total erasures (rot + the node
+    # failures below) within n-k, so no stripe is over-injured
+    rotten = []
+    for (key, t), share in sorted(store._shares[6].items()):
+        if len(rotten) == 2:
+            break
+        if len(set(store.placement_of(key, t)) & failed_nodes) <= 2:
+            share[1][0] ^= 0x55
+            rotten.append([key, t])
+    for node in sorted(failed_nodes):
+        store.fail_node(node)
+    faults.add(op="read", kind="corrupt", prob=0.12)
+    rounds = 6 if fast else 16
+    corrupt = failed = 0
+    with ReadFrontEnd(store, scheduler=sched, hedge_after_s=None,
+                      quarantine_threshold=3.0,
+                      default_deadline_s=DEADLINE_S) as fe:
+        for r in range(rounds):
+            for key in keys:
+                tk = fe.read_ext(key, deadline_s=DEADLINE_S)
+                if tk.error is not None:
+                    failed += 1
+                elif tk.obj != objects[key]:
+                    corrupt += 1
+            fe.tick(repair_budget_symbols=(store.k + 1) * store.S * 4)
+        faults.clear()                      # storm over: drain + scrub
+        for _ in range(50):
+            if not sched.pending() and not fe.quarantined_nodes():
+                break
+            fe.tick(repair_budget_symbols=None)
+        m = fe.metrics
+        out = {"read_corrupt_prob": 0.12, "nodes_failed": n_lost,
+               "rotten_shares": rotten, "requests": m.requests,
+               "failed": failed, "corrupt_served": corrupt,
+               "crc_rejected": m.crc_rejected,
+               "quarantines": m.quarantines,
+               "readmissions": m.readmissions,
+               "crc_drops": sum(1 for e in fe.events
+                                if e["what"] == "crc_drop"),
+               "quarantined_after": fe.quarantined_nodes(),
+               "pending_after": sched.pending()}
+    assert out["corrupt_served"] == 0 and out["failed"] == 0, out
+    assert out["crc_rejected"] > 0 and out["quarantines"] > 0, out
+    assert out["quarantined_after"] == [] and out["pending_after"] == 0, out
+    audit = store.audit()
+    out["audit_orphans"] = len(audit.orphan_shares)
+    assert out["audit_orphans"] == 0, audit.orphan_shares
+    if not quiet:
+        print(f"[corrupt_storm] {out['crc_rejected']} CRC rejects, "
+              f"{out['quarantines']} quarantines, "
+              f"{out['readmissions']} readmissions — 0 corrupt served, "
+              f"0 failed of {out['requests']}")
+    return out
+
+
+def hedge_section(fast: bool, seed: int, quiet: bool) -> dict:
+    """The headline A/B: three straggler nodes (injected 5 ms read
+    latency), hedged front end vs unhedged baseline on identical
+    stores.  Hedging + learned-latency avoidance must cut p99 by
+    >= P99_CUT_TARGET."""
+    n_requests = 60 if fast else 150
+    straggle_s = 0.005
+    rows = {}
+    for mode, hedge in (("unhedged", None), ("hedged", 0.001)):
+        faults = FaultInjector(seed=seed)
+        for node in (5, 7, 9):
+            faults.add(op="read", kind="latency", match=f"node:{node:02d}",
+                       latency_s=straggle_s)
+        store, _, objects = _build(seed + 4, n_objects=4, obj_bytes=1024,
+                                   faults=faults)
+        with ReadFrontEnd(store, hedge_after_s=hedge,
+                          default_deadline_s=DEADLINE_S) as fe:
+            loop = _serve_loop(fe, objects, n_requests)
+            lat = fe.metrics.latency_percentiles()
+            rows[mode] = {**loop,
+                          "latency": {k: round(v, 6) for k, v in lat.items()},
+                          "hedged_fetches": fe.metrics.hedged_fetches}
+        assert loop["failed"] == 0 and loop["corrupt_served"] == 0, loop
+    p99_cut = 1.0 - (rows["hedged"]["latency"]["p99_s"]
+                     / rows["unhedged"]["latency"]["p99_s"])
+    out = {"straggler_nodes": [5, 7, 9], "straggle_s": straggle_s,
+           **rows, "p99_cut": round(p99_cut, 4),
+           "p99_cut_target": P99_CUT_TARGET,
+           "meets_target": p99_cut >= P99_CUT_TARGET}
+    assert out["meets_target"], out
+    assert rows["hedged"]["hedged_fetches"] > 0, rows
+    if not quiet:
+        print(f"[hedge_ab] p99 {rows['unhedged']['latency']['p99_s']*1e3:.2f}ms"
+              f" unhedged -> {rows['hedged']['latency']['p99_s']*1e3:.2f}ms "
+              f"hedged: cut {p99_cut:.0%} (target >= {P99_CUT_TARGET:.0%})")
+    return out
+
+
+def overload_section(fast: bool, seed: int, quiet: bool) -> dict:
+    """Admission queue over capacity: low-priority requests shed with
+    typed Overloaded, high priority always admitted, every ticket
+    resolved — served + shed == submitted."""
+    store, _, objects = _build(seed + 5, n_objects=4, obj_bytes=1024)
+    keys = sorted(objects)
+    max_queue = 8
+    with ReadFrontEnd(store, max_queue=max_queue,
+                      default_deadline_s=DEADLINE_S) as fe:
+        tickets = [fe.submit(keys[i % len(keys)], priority=0)
+                   for i in range(max_queue)]
+        tickets += [fe.submit(keys[i % len(keys)], priority=2)
+                    for i in range(6)]
+        tickets += [fe.submit(keys[i % len(keys)], priority=0)
+                    for i in range(4)]
+        fe.pump()
+        shed = [tk for tk in tickets if isinstance(tk.error, Overloaded)]
+        served = [tk for tk in tickets if tk.done and tk.error is None]
+        unresolved = [tk for tk in tickets if not tk.done]
+        out = {"max_queue": max_queue, "submitted": len(tickets),
+               "served": len(served), "shed": len(shed),
+               "unresolved": len(unresolved),
+               "shed_priorities": sorted({tk.priority for tk in shed}),
+               "high_priority_served": sum(1 for tk in served
+                                           if tk.priority == 2),
+               "typed_errors": all(isinstance(tk.error, Overloaded)
+                                   for tk in shed),
+               "corrupt_served": sum(1 for tk in served
+                                     if tk.obj != objects[tk.key])}
+    assert out["shed"] > 0 and out["unresolved"] == 0, out
+    assert out["served"] + out["shed"] == out["submitted"], out
+    assert out["typed_errors"] and out["corrupt_served"] == 0, out
+    # low priority sheds first: no high-priority request was shed while
+    # priority-0 requests sat in the queue
+    assert out["shed_priorities"] == [0], out
+    assert out["high_priority_served"] == 6, out
+    if not quiet:
+        print(f"[overload] {out['submitted']} submitted at queue bound "
+              f"{max_queue}: {out['served']} served + {out['shed']} shed "
+              f"(typed, low-priority first), 0 unresolved")
+    return out
+
+
+def run(fast: bool = False, seed: int = 0, quiet: bool = False) -> dict:
+    rec = {
+        "config": {"k": K, "n": 2 * K, "n_nodes": N_NODES,
+                   "stripe_symbols": STRIPE_SYMBOLS,
+                   "deadline_s": DEADLINE_S,
+                   "p99_cut_target": P99_CUT_TARGET, "seed": seed},
+        "healthy": healthy_section(fast, seed, quiet),
+        "degraded": degraded_section(fast, seed, quiet),
+        "churn": churn_section(fast, seed, quiet),
+        "corrupt_storm": corrupt_storm_section(fast, seed, quiet),
+        "hedge_ab": hedge_section(fast, seed, quiet),
+        "overload": overload_section(fast, seed, quiet),
+    }
+    rec["assertions"] = {
+        "healthy_zero_failed": rec["healthy"]["failed"] == 0,
+        "healthy_p99_within_deadline":
+            rec["healthy"]["p99_within_deadline"],
+        "degraded_zero_failed": rec["degraded"]["failed"] == 0,
+        "degraded_coalesces_patterns":
+            rec["degraded"]["decode_dispatches"]
+            < rec["degraded"]["degraded_stripes"],
+        "churn_zero_failed": rec["churn"]["failed"] == 0,
+        "churn_drained": rec["churn"]["pending_after"] == 0,
+        "storm_zero_corrupt_served":
+            rec["corrupt_storm"]["corrupt_served"] == 0,
+        "storm_zero_failed": rec["corrupt_storm"]["failed"] == 0,
+        "storm_quarantine_cycle":
+            rec["corrupt_storm"]["quarantines"] > 0
+            and rec["corrupt_storm"]["quarantined_after"] == [],
+        "hedge_p99_cut_met": rec["hedge_ab"]["meets_target"],
+        "overload_typed_sheds": rec["overload"]["typed_errors"]
+            and rec["overload"]["shed"] > 0,
+        "overload_nothing_unresolved":
+            rec["overload"]["unresolved"] == 0,
+    }
+    rec["all_passed"] = all(rec["assertions"].values())
+    assert rec["all_passed"], rec["assertions"]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rec = run(fast=args.fast, seed=args.seed, quiet=args.quiet)
+    out = REPO_ROOT / "BENCH_serve.json"
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"wrote {out}  all_passed={rec['all_passed']} "
+          f"p99_cut={rec['hedge_ab']['p99_cut']} "
+          f"shed={rec['overload']['shed']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -105,6 +105,15 @@ def _bench_headline(stem: str, rec) -> str:
                     f"+{oh['write_behind']['overhead_pct']}% vs stop-world "
                     f"+{oh['stop_world']['overhead_pct']}%; worst resume "
                     f"{worst*1e3:.0f} ms")
+        if stem == "BENCH_serve":
+            h = rec["healthy"]
+            ab = rec["hedge_ab"]
+            return (f"{h['req_per_s']} req/s healthy, p99 "
+                    f"{h['latency']['p99_s']*1e3:.2f} ms; hedging cuts "
+                    f"straggler p99 {ab['p99_cut']:.0%}; degraded failed="
+                    f"{rec['degraded']['failed']}, corrupt served="
+                    f"{rec['corrupt_storm']['corrupt_served']}, shed="
+                    f"{rec['overload']['shed']} (typed)")
         if stem == "BENCH_store":
             r = rec[-1]
             d = r["drain"][0]

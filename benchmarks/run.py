@@ -20,7 +20,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 from benchmarks import (bench_checkpoint, bench_cluster, bench_drills,
                         bench_encode_throughput, bench_field_size,
                         bench_pipeline, bench_regeneration,
-                        bench_repair_bandwidth, bench_store, roofline)
+                        bench_repair_bandwidth, bench_serve, bench_store,
+                        roofline)
 
 OUT = pathlib.Path(__file__).resolve().parent / "results"
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -32,7 +33,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # shipping stale JSON.
 KNOWN_RESULTS = {"checkpoint", "cluster", "drills", "encode_throughput",
                  "field_size", "pipeline", "regeneration",
-                 "repair_bandwidth", "roofline", "store"}
+                 "repair_bandwidth", "roofline", "serve", "store"}
 
 
 def check_results_dir() -> None:
@@ -167,6 +168,18 @@ def main() -> None:
                      f"{(time.perf_counter()-t0)*1e6:.0f}",
                      f"all_passed={rec['all_passed']};wb_overhead_ratio="
                      f"{rec['checkpoint_overhead']['wb_vs_stw_overhead_ratio']}"))
+
+    print("== robust serving: hedged reads + quarantine + shedding ===")
+    t0 = time.perf_counter()
+    # every robustness claim is asserted inside the bench itself
+    rec = bench_serve.run(fast=args.fast, quiet=quiet)
+    (OUT / "serve.json").write_text(json.dumps(rec, indent=1))
+    (REPO_ROOT / "BENCH_serve.json").write_text(json.dumps(rec, indent=1))
+    csv_rows.append(("serve",
+                     f"{(time.perf_counter()-t0)*1e6:.0f}",
+                     f"req_per_s={rec['healthy']['req_per_s']};"
+                     f"p99_cut={rec['hedge_ab']['p99_cut']};"
+                     f"shed={rec['overload']['shed']}"))
 
     print("== exec layer: plan cache + overlapped pipeline ===========")
     t0 = time.perf_counter()

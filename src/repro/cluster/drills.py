@@ -365,6 +365,99 @@ def transient_fault_storm(root: pathlib.Path, seed: int = 0) -> DrillResult:
                        detail=f"retry={stats}")
 
 
+def serve_under_churn(root: pathlib.Path, seed: int = 0) -> DrillResult:
+    """Concurrent gets through the serving front end while the cluster
+    churns (DESIGN.md §13): a node failure served mid-drain
+    (`restart_mid_drain`'s shape), a ~10% transient read-fault storm
+    (`transient_fault_storm`'s shape), then storage bit-rot on one node.
+    Contract: every response bit-exact, ZERO corrupt payloads reach a
+    caller, and the rotten node walks the full quarantine state machine
+    — quarantined on the CRC catch, held through a dirty scrub that
+    finds the rest of its rot, re-admitted only after repair + a clean
+    scrub (the event log proves the ordering)."""
+    rng = np.random.default_rng(seed)
+    CodedObjectStore, RepairScheduler = _store_classes()
+    from repro.serve.frontend import ReadFrontEnd   # deferred like the store
+    faults = FaultInjector(seed=seed)
+    store = CodedObjectStore(_spec(), n_nodes=8, stripe_symbols=64,
+                             faults=faults, retry=fast_retry(max_attempts=6))
+    objs = {f"o{i}": rng.integers(0, 256, 2048).astype(np.uint8).tobytes()
+            for i in range(3)}
+    for key, val in objs.items():
+        store.put(key, val)
+    sched = RepairScheduler(store)
+    store.subscribe(sched.on_event)
+    fe = ReadFrontEnd(store, scheduler=sched, quarantine_threshold=2.0,
+                      hedge_after_s=0.25, fetch_workers=4)
+    corrupt_served = 0
+
+    def serve_all() -> bool:
+        nonlocal corrupt_served
+        tickets = [fe.submit(key) for key in objs for _ in range(2)]
+        fe.pump()
+        ok = True
+        for tk in tickets:
+            if tk.error is not None:
+                ok = False
+            elif tk.obj != objs[tk.key]:
+                corrupt_served += 1
+                ok = False
+        return ok
+
+    # phase A: node failure served mid-drain (restart_mid_drain shape)
+    store.fail_node(2)
+    sched.drain(budget_symbols=(store.k + 1) * store.S)  # half-drained queue
+    a_ok = serve_all()
+    sched.drain_all()
+
+    # phase B: transient read-fault storm (transient_fault_storm shape)
+    faults.add(op="read", kind="transient", prob=0.1)
+    b_ok = serve_all()
+    faults.clear()
+
+    # phase C: storage bit-rot on node 5 — two shares of DIFFERENT keys,
+    # only one of which the next reads touch, so re-admission provably
+    # requires the dirty scrub to find the second
+    victim = 5
+    by_key: dict[str, tuple[str, int]] = {}
+    for key, t in sorted(store._shares[victim - 1]):
+        by_key.setdefault(key, (key, t))
+    (k1, t1), (k2, t2) = list(by_key.values())[:2]
+    store._shares[victim - 1][(k1, t1)][1][0] ^= 0x55
+    store._shares[victim - 1][(k2, t2)][1][0] ^= 0x55
+    c_ok = fe.read(k1) == objs[k1]          # CRC catch -> quarantine
+    quarantined = victim in fe.quarantined_nodes()
+    t0 = time.perf_counter()
+    first_scrub = fe.scrub_quarantined()    # dirty: finds (k2, t2)'s rot
+    held = victim in fe.quarantined_nodes()
+    sched.drain_all()                       # rebuild both dropped shares
+    second_scrub = fe.scrub_quarantined()   # clean: re-admit
+    t_recover = time.perf_counter() - t0
+    readmitted = victim not in fe.quarantined_nodes()
+    c_ok = c_ok and serve_all()             # serving clean again
+    seqs = {e["what"]: e["seq"] for e in fe.events
+            if e.get("node") == victim
+            and e["what"] in ("quarantine", "scrub_dirty", "readmit")}
+    ordered = (len(seqs) == 3 and
+               seqs["quarantine"] < seqs["scrub_dirty"] < seqs["readmit"])
+    audit = store.audit()
+    verified = store.verify() and store.total_lost_shares() == 0
+    fe.close()
+    store.close()
+    bit_exact = a_ok and b_ok and c_ok
+    passed = (bit_exact and corrupt_served == 0 and quarantined and held
+              and not first_scrub[0]["readmitted"]
+              and second_scrub[0]["readmitted"] and readmitted
+              and ordered and audit.clean and verified)
+    return DrillResult("serve_under_churn", passed, bit_exact,
+                       len(audit.orphan_shares),
+                       time_to_resume_s=t_recover,
+                       detail=f"corrupt_served={corrupt_served} "
+                              f"quarantine_order={ordered} "
+                              f"crc_rejected={fe.metrics.crc_rejected} "
+                              f"served={fe.metrics.served}")
+
+
 DRILLS: dict[str, Callable[[pathlib.Path, int], DrillResult]] = {
     "crash_mid_save": crash_mid_save,
     "kill_rack_write_behind": kill_rack_write_behind,
@@ -372,6 +465,7 @@ DRILLS: dict[str, Callable[[pathlib.Path, int], DrillResult]] = {
     "corrupt_then_scrub": corrupt_then_scrub,
     "restart_mid_drain": restart_mid_drain,
     "transient_fault_storm": transient_fault_storm,
+    "serve_under_churn": serve_under_churn,
 }
 
 
@@ -399,4 +493,4 @@ def run_drills(root: Optional[pathlib.Path] = None,
 
 __all__ = ["DrillResult", "DRILLS", "run_drills", "crash_mid_save",
            "kill_rack_write_behind", "crash_mid_put", "corrupt_then_scrub",
-           "restart_mid_drain", "transient_fault_storm"]
+           "restart_mid_drain", "transient_fault_storm", "serve_under_churn"]

@@ -17,6 +17,7 @@ Event kinds
 ``scrub``    degraded-read verification pass; flagged nodes are repaired
 ``slow``     node becomes a straggler (service time x ``factor``)
 ``read``     client read of one data block (the serving workload)
+``delete``   a store object was deleted (key in ``key``) — queue purge feed
 """
 from __future__ import annotations
 
@@ -25,7 +26,7 @@ from typing import Iterable, Sequence
 
 from repro.core.placement import RackLayout
 
-KINDS = ("fail", "down", "up", "corrupt", "scrub", "slow", "read")
+KINDS = ("fail", "down", "up", "corrupt", "scrub", "slow", "read", "delete")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,9 @@ class Event:
         For ``corrupt``: which stored block to damage, ``"a"`` or ``"r"``.
     positions : tuple of int
         For ``corrupt``: symbol offsets to damage (empty = offset 0).
+    key : str
+        For ``delete``: the deleted object's store key (the repair
+        scheduler drops that key's queued tasks on this event).
     """
     t: float
     kind: str
@@ -56,11 +60,14 @@ class Event:
     factor: float = 1.0
     where: str = "a"
     positions: tuple[int, ...] = ()
+    key: str = ""
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown event kind {self.kind!r}; "
                              f"expected one of {KINDS}")
+        if self.kind == "delete" and not self.key:
+            raise ValueError("delete events carry the deleted store key")
         if self.where not in ("a", "r"):
             raise ValueError(f"corrupt target must be 'a' or 'r', "
                              f"got {self.where!r}")
@@ -99,6 +106,10 @@ def slow(t: float, node: int, factor: float) -> Event:
 
 def read(t: float, block: int) -> Event:
     return Event(t=t, kind="read", block=block)
+
+
+def delete(t: float, key: str) -> Event:
+    return Event(t=t, kind="delete", key=key)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,7 +265,8 @@ def default_layout(n: int, k: int) -> RackLayout:
 
 
 __all__ = ["Event", "Scenario", "KINDS", "fail", "down", "up", "corrupt",
-           "scrub", "slow", "read", "read_traffic", "single_node_loss",
+           "scrub", "slow", "read", "delete", "read_traffic",
+           "single_node_loss",
            "multi_node_loss", "latent_corruption", "straggler",
            "rack_failure", "rolling_restart", "standard_scenarios",
            "default_layout"]

@@ -139,10 +139,11 @@ class MetricsLog:
     def latency_stats(self) -> dict:
         lat = sorted(self.read_latencies)
         if not lat:
-            return {"mean_s": 0.0, "p50_s": 0.0, "max_s": 0.0}
+            return {"mean_s": 0.0, "p50_s": 0.0, "p99_s": 0.0, "max_s": 0.0}
         return {
             "mean_s": sum(lat) / len(lat),
             "p50_s": lat[len(lat) // 2],
+            "p99_s": lat[min(len(lat) - 1, (99 * len(lat)) // 100)],
             "max_s": lat[-1],
         }
 

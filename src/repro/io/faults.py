@@ -110,6 +110,29 @@ class FaultInjector:
             return
         raise OSError(f"injected {spec.kind} fault: {op} {ref}")
 
+    def apply_share(self, op: str, ref: PathLike, share: list) -> list:
+        """Share-payload seam (the store's read path, DESIGN.md §13.2):
+        ``latency`` sleeps then returns the share untouched, ``corrupt``
+        returns a DAMAGED COPY — one data symbol xor-flipped, backing
+        storage intact — the read-path bit-rot an end-to-end checksum
+        must catch, and anything else raises a transient ``OSError``.
+        The caller's stored share list is never mutated."""
+        spec = self.match(op, ref)
+        if spec is None:
+            return share
+        if spec.kind == "latency":
+            self._sleep(spec.latency_s)
+            return share
+        if spec.kind == "corrupt":
+            node, a, r = share
+            a = np.array(a, dtype=np.int32, copy=True)
+            if a.size:
+                with self._lock:
+                    i = int(self._rng.integers(a.size))
+                a[i] ^= 0x55        # stays < 256: still a valid data symbol
+            return [node, a, r]
+        raise OSError(f"injected {spec.kind} fault: {op} {ref}")
+
 
 def _flip_byte(data: bytes, rng: np.random.Generator) -> bytes:
     if not data:

@@ -132,9 +132,19 @@ class RetryPolicy:
         return d * (1.0 - self.jitter + 2.0 * self.jitter * h)
 
     def call(self, fn: Callable[[], object], *, op: str = "io",
-             stats: Optional[RetryStats] = None):
+             stats: Optional[RetryStats] = None,
+             budget_s: Optional[float] = None):
         """Run ``fn()`` under the policy; returns its value or raises
-        :class:`GiveUpError` once the attempt/time budget is spent."""
+        :class:`GiveUpError` once the attempt/time budget is spent.
+
+        ``budget_s`` caps the wall-clock budget below ``op_timeout_s``
+        for this one call — deadline propagation (DESIGN.md §13.1): a
+        serving request's remaining deadline bounds how long any of its
+        share fetches may keep retrying.  The first attempt always
+        runs, even on an exhausted budget, so a zero budget degrades to
+        try-once rather than fail-without-trying."""
+        limit = self.op_timeout_s if budget_s is None \
+            else min(self.op_timeout_s, max(0.0, budget_s))
         t0 = self.clock()
         last: Optional[BaseException] = None
         attempts = 0
@@ -149,10 +159,10 @@ class RetryPolicy:
                     stats.record(attempts, gave_up=False)
                 return out
             elapsed = self.clock() - t0
-            if attempts >= self.max_attempts or elapsed >= self.op_timeout_s:
+            if attempts >= self.max_attempts or elapsed >= limit:
                 break
             d = self.delay_s(op, attempts - 1)
-            if elapsed + d > self.op_timeout_s:
+            if elapsed + d > limit:
                 break
             self.sleep(d)
         if stats is not None:

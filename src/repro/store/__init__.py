@@ -19,10 +19,13 @@ repair, decode-inverse cache) into a multi-object storage subsystem:
   budget.
 """
 from .object_store import (FAILED, UP, CodedObjectStore, GetResult,
-                           ObjectStat, StoreAudit, StoreMetrics)
+                           ObjectStat, ShareIntegrityError, StoreAudit,
+                           StoreMetrics, UnknownKeyError, share_crc)
 from .scheduler import DrainReport, RepairScheduler
 from .stripes import StripeManager, StripeMap
 
 __all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreAudit",
-           "StoreMetrics", "RepairScheduler", "DrainReport", "StripeManager",
+           "StoreMetrics", "UnknownKeyError", "ShareIntegrityError",
+           "share_crc",
+           "RepairScheduler", "DrainReport", "StripeManager",
            "StripeMap", "UP", "FAILED"]

@@ -29,12 +29,13 @@ queue drains.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Callable, Iterator, Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.core import baselines, placement
+from repro.core import baselines, gf, placement
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
 from repro.cluster.events import Event
@@ -46,6 +47,47 @@ from repro.io.retry import RetryPolicy, RetryStats
 from .stripes import StripeManager, StripeMap
 
 UP, FAILED = "up", "failed"
+
+
+class UnknownKeyError(KeyError):
+    """``get``/``stat``/``delete`` on a key the store has never committed
+    (or has deleted).  A ``KeyError`` subclass, so generic key-miss
+    handling — the repair scheduler's pop-time revalidation, ``except
+    KeyError`` call sites — keeps working unchanged."""
+
+    def __init__(self, key: str):
+        super().__init__(f"unknown key {key!r}")
+        self.key = key
+
+
+class ShareIntegrityError(OSError):
+    """A helper share repeatedly failed its put-time CRC on the read
+    path feeding a repair or degraded decode (DESIGN.md §13.2).  Raised
+    only after re-reads rule out a transient read-path flip — the
+    stored copy is rotten; the caller should scrub/drop it (the repair
+    scheduler requeues the stripe instead of installing a share rebuilt
+    from garbage)."""
+
+    def __init__(self, phys: int, key: str, t: int, attempts: int):
+        super().__init__(
+            f"share (key={key!r}, stripe={t}) on node {phys} failed its "
+            f"CRC {attempts} times — storage rot, not a read-path flip")
+        self.phys = phys
+        self.key = key
+        self.stripe = t
+
+
+def share_crc(a: np.ndarray, r: np.ndarray) -> int:
+    """CRC32 of one node share's LOGICAL payload — PR 6's checkpoint
+    manifest convention (DESIGN.md §12.2) applied per share: the data
+    block as raw uint8 bytes chained with the redundancy block's
+    ``pack257`` halves (low bytes, then int64 indexes of 256).  Repairs
+    are bit-exact, so a rebuilt share matches its put-time CRC without
+    any ledger rewrite."""
+    c = zlib.crc32(np.ascontiguousarray(a, np.uint8).tobytes())
+    low, hi = gf.pack257(np.asarray(r, np.int32))
+    c = zlib.crc32(np.ascontiguousarray(low, np.uint8).tobytes(), c)
+    return zlib.crc32(np.ascontiguousarray(hi, np.int64).tobytes(), c)
 
 
 class StoreMetrics(MetricsLog):
@@ -76,7 +118,10 @@ class ObjectStat:
 
     ``dtype``/``shape`` are set for array objects so ``get`` returns the
     original array type; ``meta`` carries caller extras (e.g. the
-    checkpointer's tree spec).
+    checkpointer's tree spec).  ``share_crcs[t][j]`` is the put-time
+    :func:`share_crc` of stripe ``t``'s code-node ``j+1`` share — the
+    ground truth end-to-end read integrity (DESIGN.md §13.2) verifies
+    against; ``None`` only for stats built by callers that predate it.
     """
     key: str
     size_bytes: int
@@ -85,6 +130,7 @@ class ObjectStat:
     dtype: Optional[str] = None
     shape: Optional[tuple[int, ...]] = None
     meta: dict = dataclasses.field(default_factory=dict)
+    share_crcs: Optional[list] = None
 
 
 @dataclasses.dataclass
@@ -299,12 +345,45 @@ class CodedObjectStore:
         self.retry.call(lambda: self.faults.apply(op, ref),
                         op=f"{op}:{ref}", stats=self.retry_stats)
 
-    def _read_share(self, phys: int, key: str, t: int) -> list:
+    def read_share(self, phys: int, key: str, t: int, *,
+                   budget_s: Optional[float] = None) -> list:
         """The (code_node, a_block, r_block) share of stripe (key, t) on
         ``phys`` — every read path funnels through here so drills can
-        inject per-node read faults."""
-        self._guard("read", phys)
-        return self._shares[phys - 1][(key, t)]
+        inject per-node read faults.  Matched ``corrupt`` rules return a
+        damaged COPY (backing storage intact — the read-path bit-rot a
+        CRC-checking caller must catch); ``latency`` sleeps; transient
+        kinds retry under the policy, capped by ``budget_s`` when a
+        serving deadline bounds the fetch (DESIGN.md §13.1).  Raises
+        ``KeyError`` when the share is absent, ``GiveUpError`` when the
+        retry budget is spent."""
+        if self.faults is None:
+            return self._shares[phys - 1][(key, t)]
+        ref = f"node:{phys:02d}"
+        return self.retry.call(
+            lambda: self.faults.apply_share(
+                "read", ref, self._shares[phys - 1][(key, t)]),
+            op=f"read:{ref}", stats=self.retry_stats, budget_s=budget_s)
+
+    def _read_share(self, phys: int, key: str, t: int) -> list:
+        return self.read_share(phys, key, t)
+
+    def _read_share_verified(self, phys: int, key: str, t: int,
+                             attempts: int = 3) -> list:
+        """A share fetch CRC-gated against the put-time ledger — the
+        read path feeding repairs and degraded decodes, where one
+        corrupt helper silently poisons every rebuilt block.  A
+        mismatch is re-read (transient read-path flip); persistent
+        mismatch raises :class:`ShareIntegrityError` (storage rot —
+        decode around it, don't decode FROM it).  Objects without a
+        ledger pass through unchecked."""
+        stat = self._stats.get(key)
+        for _ in range(attempts):
+            share = self.read_share(phys, key, t)
+            if stat is None or stat.share_crcs is None \
+                    or share_crc(share[1], share[2]) == \
+                    stat.share_crcs[t][share[0] - 1]:
+                return share
+        raise ShareIntegrityError(phys, key, t, attempts)
 
     # -------------------------------------------------------------- put path
     def put(self, key: str, obj: Any, *, meta: Optional[dict] = None,
@@ -352,6 +431,9 @@ class CodedObjectStore:
             return tt, self.code.encode_planned(view)
 
         staged: list[tuple[int, int, list]] = []    # (phys, t, share)
+        # put-time integrity ledger: share_crcs[t][j] covers EVERY share,
+        # including lost-at-birth ones a repair rebuilds later bit-exactly
+        crcs: list[list[int]] = [[0] * self.n for _ in range(smap.n_stripes)]
 
         def place_window(t0: int, res) -> None:
             tt, planned = res
@@ -359,6 +441,7 @@ class CodedObjectStore:
             for t in range(t0, t0 + tt):
                 pl = self.stripes.placement(base + t)
                 for j, phys in enumerate(pl):
+                    crcs[t][j] = share_crc(blocks[t, j], red[t - t0, j])
                     if self.is_up(phys):
                         self._guard("write", phys)
                         staged.append((phys, t,
@@ -378,7 +461,8 @@ class CodedObjectStore:
                 self._shares[phys - 1][(key, t)] = share
         stat = ObjectStat(key=key, size_bytes=smap.orig_bytes,
                           n_stripes=smap.n_stripes, stripe_symbols=self.S,
-                          dtype=dtype, shape=shape, meta=dict(meta or {}))
+                          dtype=dtype, shape=shape, meta=dict(meta or {}),
+                          share_crcs=crcs)
         stat.meta["_base_stripe"] = base
         self._stats[key] = stat
         self.metrics.record_put(smap.n_stripes * self.n * self.S,
@@ -404,8 +488,8 @@ class CodedObjectStore:
 
         Raises
         ------
-        KeyError
-            Unknown key.
+        UnknownKeyError
+            Key never committed (a ``KeyError`` subclass).
         RuntimeError
             Some stripe has fewer than k shares left (data loss).
         """
@@ -476,41 +560,65 @@ class CodedObjectStore:
         self.pipeline.map(groups.items(), decode, scatter, read=gather)
         latency = max(latency, acct["latency"])
         bytes_read += acct["bytes"]
-        payload = self.stripes.assemble(
-            blocks, StripeMap(stat.size_bytes, stat.n_stripes, self.S))
-        obj: Any = payload
-        if stat.dtype is not None:
-            obj = np.frombuffer(payload, dtype=np.dtype(stat.dtype)) \
-                .reshape(stat.shape).copy()
-        return GetResult(obj=obj, bytes_read=bytes_read,
+        return GetResult(obj=self.materialize(stat, blocks),
+                         bytes_read=bytes_read,
                          degraded_stripes=sum(len(v) for v in groups.values()),
                          latency_s=latency)
+
+    def materialize(self, stat: ObjectStat, blocks: np.ndarray) -> Any:
+        """(n_stripes, n, S) data blocks -> the stored object (bytes or
+        the original array type) — the shared tail of every read path
+        (``get_ext`` and the serving front end's coalesced decodes)."""
+        payload = self.stripes.assemble(
+            blocks, StripeMap(stat.size_bytes, stat.n_stripes, self.S))
+        if stat.dtype is None:
+            return payload
+        return np.frombuffer(payload, dtype=np.dtype(stat.dtype)) \
+            .reshape(stat.shape).copy()
 
     def _present_code_nodes(self, key: str, t: int,
                             pl: Sequence[int]) -> set[int]:
         return {j + 1 for j, phys in enumerate(pl)
                 if (key, t) in self._shares[phys - 1]}
 
+    def placement_of(self, key: str, t: int) -> tuple[int, ...]:
+        """Physical nodes hosting stripe ``t`` of ``key``, by code node
+        (index j holds code node j+1) — the front end's placement seam."""
+        return self.stripes.placement(self.stat(key).meta["_base_stripe"] + t)
+
+    def present_code_nodes(self, key: str, t: int) -> set[int]:
+        """Code nodes (1-indexed) of stripe (key, t) whose share is
+        physically present."""
+        return self._present_code_nodes(key, t, self.placement_of(key, t))
+
     def _downloads(self, key: str, t: int,
                    helpers: Sequence[int]) -> np.ndarray:
-        """(2k, S) stacked [data; red] blocks of the helper code nodes."""
+        """(2k, S) stacked [data; red] blocks of the helper code nodes —
+        CRC-verified: a decode matmul multiplies every helper into every
+        output, so one rotten input corrupts the whole stripe."""
         pl = self.stripes.placement(self.stat(key).meta["_base_stripe"] + t)
-        shares = [self._read_share(pl[i - 1], key, t) for i in helpers]
+        shares = [self._read_share_verified(pl[i - 1], key, t)
+                  for i in helpers]
         return np.concatenate([np.stack([s[1] for s in shares]),
                                np.stack([s[2] for s in shares])], axis=0)
 
     # ----------------------------------------------------------- delete/stat
     def delete(self, key: str) -> None:
+        """Drop the object and notify subscribers with a ``delete`` event
+        so the repair scheduler purges its queued tasks instead of
+        re-validating them forever.  Raises :class:`UnknownKeyError`."""
         stat = self.stat(key)
         for t in range(stat.n_stripes):
             for shares in self._shares:
                 shares.pop((key, t), None)
         del self._stats[key]
+        self._notify(Event(t=0.0, kind="delete", key=key))
 
     def stat(self, key: str) -> ObjectStat:
-        if key not in self._stats:
-            raise KeyError(key)
-        return self._stats[key]
+        try:
+            return self._stats[key]
+        except KeyError:
+            raise UnknownKeyError(key) from None
 
     def keys(self) -> list[str]:
         return sorted(self._stats)
@@ -598,10 +706,10 @@ class CodedObjectStore:
                 base = self.stat(key).meta["_base_stripe"]
                 pl = self.stripes.placement(base + t)
                 plan = self.code.repair_plan(node)
-                r_prevs.append(
-                    self._read_share(pl[plan.prev_node - 1], key, t)[2])
+                r_prevs.append(self._read_share_verified(
+                    pl[plan.prev_node - 1], key, t)[2])
                 helper_data.append(np.stack(
-                    [self._read_share(pl[i - 1], key, t)[1]
+                    [self._read_share_verified(pl[i - 1], key, t)[1]
                      for i in plan.next_nodes]))
                 placements.append(pl)
             return np.stack(r_prevs), np.stack(helper_data), placements
@@ -661,12 +769,55 @@ class CodedObjectStore:
         ``n_shares`` lost shares: the whole file per share (§II)."""
         return baselines.rs_scenario_repair_symbols(self.k, self.S, n_shares)
 
+    # ------------------------------------------------------ share integrity
+    def share_intact(self, phys: int, key: str, t: int) -> Optional[bool]:
+        """CRC-verify the STORED share directly (no fault seam): the
+        front end's arbiter between storage bit-rot and a transient
+        read-path flip after a fetched share fails its CRC
+        (DESIGN.md §13.2).  ``None`` when the share is absent or the
+        object predates CRC recording."""
+        self._check_node(phys)
+        share = self._shares[phys - 1].get((key, t))
+        stat = self._stats.get(key)
+        if share is None or stat is None or stat.share_crcs is None:
+            return None
+        return share_crc(share[1], share[2]) == \
+            stat.share_crcs[t][share[0] - 1]
+
+    def drop_share(self, phys: int, key: str, t: int) -> bool:
+        """Erase one stored share (the quarantine path: a share whose
+        storage failed its CRC is an erasure — reads decode around it
+        and the scheduler rebuilds it).  True if a share was dropped."""
+        self._check_node(phys)
+        return self._shares[phys - 1].pop((key, t), None) is not None
+
+    def scrub_node(self, phys: int) -> list[tuple[str, int]]:
+        """Targeted integrity scrub of one node: CRC-verify every stored
+        share on ``phys`` against its put-time ledger, bypassing the
+        fault seam (re-admission gate of the quarantine state machine,
+        DESIGN.md §13.3).  Returns the (key, stripe) mismatches; shares
+        without a ledger entry are skipped, not flagged."""
+        self._check_node(phys)
+        bad = []
+        for (key, t), share in self._shares[phys - 1].items():
+            stat = self._stats.get(key)
+            if stat is None or stat.share_crcs is None \
+                    or t >= stat.n_stripes:
+                continue
+            if share_crc(share[1], share[2]) != \
+                    stat.share_crcs[t][share[0] - 1]:
+                bad.append((key, t))
+        return sorted(bad)
+
     # ------------------------------------------------------------ inspection
     def audit(self) -> StoreAudit:
         """Walk every physically-held share and flag orphans — shares no
         committed object accounts for (DESIGN.md §12.2): unknown key,
-        stripe index past the object's extent, or a share sitting on a
-        node its stripe's placement never assigned it to."""
+        stripe index past the object's extent, a share sitting on a
+        node its stripe's placement never assigned it to, or (new
+        orphan class, DESIGN.md §13.2) a share whose content fails its
+        put-time CRC — silent bit-rot ``gc_orphans`` converts into an
+        honest erasure the scheduler can repair."""
         report = StoreAudit()
         for node0, shares in enumerate(self._shares):
             for (key, t), share in shares.items():
@@ -683,6 +834,11 @@ class CodedObjectStore:
                     if pl[share[0] - 1] != node0 + 1:
                         report.orphan_shares.append(
                             (node0 + 1, key, t, "placement mismatch"))
+                    elif stat.share_crcs is not None and \
+                            share_crc(share[1], share[2]) != \
+                            stat.share_crcs[t][share[0] - 1]:
+                        report.orphan_shares.append(
+                            (node0 + 1, key, t, "crc mismatch"))
         return report
 
     def gc_orphans(self) -> int:
@@ -722,4 +878,5 @@ class CodedObjectStore:
 
 
 __all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreAudit",
-           "StoreMetrics", "UP", "FAILED"]
+           "StoreMetrics", "UnknownKeyError", "ShareIntegrityError",
+           "share_crc", "UP", "FAILED"]

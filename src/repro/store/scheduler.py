@@ -42,7 +42,7 @@ from typing import Optional
 from repro.cluster.events import Event
 from repro.cluster.metrics import LinkModel
 
-from .object_store import CodedObjectStore
+from .object_store import CodedObjectStore, ShareIntegrityError
 
 
 @dataclasses.dataclass
@@ -126,9 +126,12 @@ class RepairScheduler:
         ``fail`` enqueues the dead node's stripes; ``up`` enqueues a
         replaced slot's still-lost stripes — that is how shares lost at
         birth (put while the node was down) get re-protected once a
-        newcomer takes the slot."""
+        newcomer takes the slot; ``delete`` purges the key's queued
+        tasks, so deleted objects stop costing pop-time revalidation."""
         if event.kind in ("fail", "up"):
             self.enqueue_node(event.node)
+        elif event.kind == "delete":
+            self.purge_key(event.key)
 
     def enqueue_node(self, node: int) -> int:
         """Queue every stripe that placed a share on ``node``; returns how
@@ -169,6 +172,15 @@ class RepairScheduler:
         self._seq += 1
         heapq.heappush(self._heap, (remaining, self._seq, key, t))
         self._queued.add((key, t))
+
+    def purge_key(self, key: str) -> int:
+        """Drop every queued task for ``key`` (the store's ``delete``
+        notification): membership leaves ``_queued`` now, and the stale
+        heap entries are discarded lazily at pop time like any other
+        duplicate.  Returns how many tasks were dropped."""
+        dropped = {kt for kt in self._queued if kt[0] == key}
+        self._queued -= dropped
+        return len(dropped)
 
     def pending(self) -> int:
         return len(self._queued)
@@ -257,14 +269,26 @@ class RepairScheduler:
         try:
             self._replace_target_nodes(embedded, full)
             if embedded:
-                moved, dispatches = store.repair_stripes_embedded(embedded)
-                report.symbols_moved += moved
-                report.batch_calls += dispatches
-                report.repaired_stripes += len(embedded)
-                report.repaired_shares += len(embedded)
-                completed.update((key, t) for key, t, _ in embedded)
+                # a rotten helper (persistent CRC failure) must not be
+                # decoded FROM: skip the batch, requeue via the finally
+                # block, and let a scrub drop the bad share first
+                try:
+                    moved, dispatches = \
+                        store.repair_stripes_embedded(embedded)
+                except ShareIntegrityError:
+                    pass
+                else:
+                    report.symbols_moved += moved
+                    report.batch_calls += dispatches
+                    report.repaired_stripes += len(embedded)
+                    report.repaired_shares += len(embedded)
+                    completed.update((key, t) for key, t, _ in embedded)
             for key, t, lost in full:
-                report.symbols_moved += store.repair_stripe_full(key, t, lost)
+                try:
+                    report.symbols_moved += \
+                        store.repair_stripe_full(key, t, lost)
+                except ShareIntegrityError:
+                    continue
                 report.decode_calls += 1
                 report.repaired_stripes += 1
                 report.repaired_shares += len(lost)

@@ -162,6 +162,15 @@ class HeartbeatMonitor:
                     if now - self._last_beat[i] > self.straggler_s}
         return sorted(out)
 
+    def suspects(self, now: float) -> dict[str, list[int]]:
+        """The heartbeat→helper-selection feed (DESIGN.md §13.3): nodes a
+        read front end should route around — ``dead`` (declared or past
+        ``timeout_s``) and ``stragglers`` (progress lag or the
+        wall-clock ``straggler_s`` criterion).  The serving layer
+        demotes both to last-resort helpers, so a straggler is avoided
+        BEFORE any hedge timer fires rather than merely raced."""
+        return {"dead": self.dead(now), "stragglers": self.stragglers(now)}
+
 
 # ------------------------------------------------------------------ elastic
 @dataclasses.dataclass(frozen=True)

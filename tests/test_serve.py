@@ -1,0 +1,355 @@
+"""Robust serving front end (DESIGN.md §13): deadlines + hedged reads,
+CRC quarantine + scrub re-admission, admission control with typed
+shedding, and cross-request decode coalescing."""
+import numpy as np
+import pytest
+
+from repro.core.circulant import CodeSpec
+from repro.io import FaultInjector, fast_retry
+from repro.io.retry import GiveUpError
+from repro.serve import (FrontEndMetrics, NodeHealth, Overloaded,
+                         ReadFrontEnd)
+from repro.store import (CodedObjectStore, RepairScheduler,
+                         UnknownKeyError)
+from repro.train.fault_tolerance import HeartbeatMonitor
+
+SPEC2 = CodeSpec.make(2, 257)
+
+
+def make_store(n_nodes=6, stripe_symbols=64, **kw):
+    return CodedObjectStore(SPEC2, n_nodes=n_nodes,
+                            stripe_symbols=stripe_symbols, **kw)
+
+
+def payload_bytes(size, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, size, dtype=np.uint8).tobytes()
+
+
+class FakeClock:
+    """Deterministic clock: advances a fixed step per call."""
+
+    def __init__(self, step=0.0):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+# -------------------------------------------------------- ticket lifecycle
+class TestTickets:
+    def test_submit_pump_result(self):
+        store = make_store()
+        data = payload_bytes(300)
+        store.put("a", data)
+        with ReadFrontEnd(store) as fe:
+            tk = fe.submit("a")
+            with pytest.raises(RuntimeError, match="not.*served"):
+                tk.result()
+            fe.pump()
+            assert tk.done and tk.result() == data
+            r = tk.receipt
+            assert r.key == "a" and r.deadline_met
+            assert r.degraded_stripes == 0 and r.crc_rejected == 0
+            assert fe.metrics.served == 1 and fe.metrics.failed == 0
+
+    def test_read_convenience_and_coalescing_per_key(self):
+        store = make_store()
+        data = payload_bytes(500, seed=1)
+        store.put("a", data)
+        with ReadFrontEnd(store) as fe:
+            t1, t2 = fe.submit("a"), fe.submit("a")
+            fe.pump()
+            assert t1.result() == data and t2.result() == data
+            assert t1.receipt.coalesced == 2
+            assert fe.metrics.coalesced_requests == 1
+            assert fe.read("a") == data       # submit+pump+result in one
+
+    def test_unknown_key_is_typed(self):
+        store = make_store()
+        with ReadFrontEnd(store) as fe:
+            with pytest.raises(UnknownKeyError) as ei:
+                fe.read("nope")
+            assert ei.value.key == "nope"
+            assert fe.metrics.failed == 1
+
+    def test_deadline_miss_is_accounted(self):
+        store = make_store()
+        store.put("a", payload_bytes(128, seed=2))
+        clock = FakeClock(step=0.05)          # every clock call costs 50ms
+        with ReadFrontEnd(store, clock=clock) as fe:
+            tk = fe.read_ext("a", deadline_s=0.01)
+            assert tk.error is None           # late beats refused
+            assert not tk.receipt.deadline_met
+            assert fe.metrics.deadline_misses == 1
+
+    def test_priority_order_within_pump(self):
+        store = make_store()
+        for key in ("lo", "hi"):
+            store.put(key, payload_bytes(64, seed=3))
+        with ReadFrontEnd(store) as fe:
+            a = fe.submit("lo", priority=0)
+            b = fe.submit("hi", priority=5)
+            batch = fe.pump()
+            assert [tk.key for tk in batch] == ["hi", "lo"]
+            assert a.done and b.done
+
+
+# -------------------------------------------------- deadline budget plumbing
+class TestDeadlineBudget:
+    def test_retry_budget_caps_wall_but_first_attempt_runs(self):
+        calls = []
+
+        def boom():
+            calls.append(1)
+            raise OSError("transient")
+
+        policy = fast_retry(max_attempts=5)
+        with pytest.raises(GiveUpError) as ei:
+            policy.call(boom, op="x", budget_s=0.0)
+        assert ei.value.attempts == 1 and len(calls) == 1
+
+    def test_read_share_budget_zero_still_reads(self):
+        store = make_store(faults=FaultInjector(seed=0), retry=fast_retry())
+        store.put("a", payload_bytes(64, seed=4))
+        pl = store.placement_of("a", 0)
+        share = store.read_share(pl[0], "a", 0, budget_s=0.0)
+        assert share[0] == 1                  # code node 1's share
+
+
+# ------------------------------------------------------------ CRC integrity
+class TestIntegrity:
+    def test_storage_rot_decoded_around_dropped_and_enqueued(self):
+        store = make_store()
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        data = payload_bytes(64, seed=5)
+        store.put("obj", data)
+        pl = store.placement_of("obj", 0)
+        phys = pl[0]
+        store._shares[phys - 1][("obj", 0)][1][0] ^= 0x55
+        assert store.share_intact(phys, "obj", 0) is False
+        with ReadFrontEnd(store, scheduler=sched) as fe:
+            assert fe.read("obj") == data
+            assert fe.metrics.crc_rejected == 1
+            assert [e["what"] for e in fe.events] == ["crc_drop"]
+            assert store.share_intact(phys, "obj", 0) is None   # dropped
+            assert sched.pending() == 1
+        sched.drain_all()
+        assert store.share_intact(phys, "obj", 0) is True       # rebuilt
+
+    def test_transient_read_flip_rereads_without_dropping(self):
+        faults = FaultInjector(seed=0)
+        faults.add(op="read", kind="corrupt", times=1)
+        store = make_store(faults=faults, retry=fast_retry())
+        data = payload_bytes(64, seed=6)
+        store.put("obj", data)
+        with ReadFrontEnd(store, hedge_after_s=None) as fe:
+            assert fe.read("obj") == data
+            assert fe.metrics.crc_rejected == 1
+            assert [e["what"] for e in fe.events] == ["crc_transient"]
+        # the stored copy was never touched: nothing dropped anywhere
+        assert all(store.share_intact(p, "obj", 0) for p in
+                   store.placement_of("obj", 0))
+
+    def test_suspicion_weights_rank_crc_over_hedge(self):
+        h = NodeHealth()
+        fe = ReadFrontEnd(make_store())
+        assert fe.crc_weight > fe.giveup_weight > fe.hedge_weight
+        h.observe(0.010)
+        h.observe(0.020)
+        assert h.ewma_read_s == pytest.approx(0.013)
+        fe.close()
+
+
+# ------------------------------------------------- quarantine state machine
+class TestQuarantine:
+    def test_quarantine_dirty_scrub_then_clean_readmit(self):
+        store = make_store()
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        k1, k2 = payload_bytes(64, seed=7), payload_bytes(64, seed=8)
+        store.put("k1", k1)
+        store.put("k2", k2)
+        # two rotten shares on ONE node, but only k1 is read: the first
+        # scrub must come back dirty (it finds k2's rot) and keep the
+        # node out; only the second, clean scrub re-admits
+        common = sorted(set(store.placement_of("k1", 0))
+                        & set(store.placement_of("k2", 0)))
+        assert common, "test setup: keys must share a node"
+        phys = common[0]
+        store._shares[phys - 1][("k1", 0)][1][0] ^= 0x55
+        store._shares[phys - 1][("k2", 0)][1][1] ^= 0x55
+        with ReadFrontEnd(store, scheduler=sched,
+                          quarantine_threshold=2.0) as fe:
+            assert fe.read("k1") == k1
+            assert fe.quarantined_nodes() == [phys]
+            out1 = fe.scrub_quarantined()
+            assert out1 == [{"node": phys, "bad_shares": 1,
+                             "readmitted": False}]
+            sched.drain_all()
+            out2 = fe.scrub_quarantined()
+            assert out2 == [{"node": phys, "bad_shares": 0,
+                             "readmitted": True}]
+            assert fe.quarantined_nodes() == []
+            kinds = [e["what"] for e in fe.events]
+            assert kinds.index("quarantine") < kinds.index("scrub_dirty") \
+                < kinds.index("readmit")
+            assert fe.read("k2") == k2
+            assert fe.metrics.quarantines == 1
+            assert fe.metrics.readmissions == 1
+
+    def test_quarantined_node_still_last_resort(self):
+        # with every other helper dead, a quarantined node IS used —
+        # graceful degradation beats refusal
+        store = make_store()
+        data = payload_bytes(64, seed=9)
+        store.put("obj", data)
+        pl = store.placement_of("obj", 0)
+        with ReadFrontEnd(store) as fe:
+            fe.health(pl[0]).quarantined = True
+            fe.health(pl[1]).quarantined = True
+            tk = fe.read_ext("obj")
+            assert tk.result() == data
+            assert set(tk.receipt.avoided_nodes) == {pl[0], pl[1]}
+
+
+# ----------------------------------------------------- heartbeat avoidance
+class TestHeartbeatAvoidance:
+    def test_straggler_and_dead_demoted_before_hedge(self):
+        store = make_store()
+        data = payload_bytes(64, seed=10)
+        store.put("obj", data)
+        pl = store.placement_of("obj", 0)
+        hb = HeartbeatMonitor(store.n_nodes, timeout_s=60.0,
+                              straggler_s=5.0)
+        now = 100.0
+        for node in range(1, store.n_nodes + 1):
+            hb.beat(node, step=10, now=now - 1.0)
+        hb.beat(pl[0], step=10, now=now - 10.0)   # wall-clock straggler
+        hb.declare_dead(pl[1])                    # control-plane dead
+        with ReadFrontEnd(store, heartbeat=hb,
+                          heartbeat_clock=lambda: now) as fe:
+            reasons = fe._avoid_reasons()
+            assert reasons[pl[0]] == "straggler"
+            assert reasons[pl[1]] == "dead-heartbeat"
+            tk = fe.read_ext("obj")
+            assert tk.result() == data
+            assert pl[0] in tk.receipt.avoided_nodes
+            assert pl[1] in tk.receipt.avoided_nodes
+
+
+# ------------------------------------------------------------------ hedging
+class TestHedging:
+    def test_hedged_read_abandons_straggler_and_learns(self):
+        faults = FaultInjector(seed=0)
+        store = make_store(faults=faults, retry=fast_retry())
+        data = payload_bytes(64, seed=11)
+        store.put("obj", data)
+        phys = store.placement_of("obj", 0)[0]
+        faults.add(op="read", kind="latency", match=f"node:{phys:02d}",
+                   latency_s=0.2)
+        with ReadFrontEnd(store, hedge_after_s=0.005) as fe:
+            assert fe.read("obj") == data     # decoded around the laggard
+            assert fe.metrics.hedged_fetches >= 1
+            assert fe.health(phys).timeouts >= 1
+            assert fe.metrics.degraded_stripes == 1
+
+    def test_unhedged_baseline_waits_and_serves(self):
+        faults = FaultInjector(seed=0)
+        store = make_store(faults=faults, retry=fast_retry())
+        data = payload_bytes(64, seed=12)
+        store.put("obj", data)
+        phys = store.placement_of("obj", 0)[0]
+        faults.add(op="read", kind="latency", match=f"node:{phys:02d}",
+                   latency_s=0.02)
+        with ReadFrontEnd(store, hedge_after_s=None) as fe:
+            assert fe.read("obj") == data
+            assert fe.metrics.hedged_fetches == 0
+            assert fe.metrics.degraded_stripes == 0
+
+
+# --------------------------------------------------------- admission control
+class TestOverload:
+    def test_shed_is_typed_low_priority_first(self):
+        store = make_store()
+        for i in range(2):
+            store.put(f"k{i}", payload_bytes(64, seed=13 + i))
+        with ReadFrontEnd(store, max_queue=3) as fe:
+            low = [fe.submit("k0", priority=0) for _ in range(3)]
+            hi = fe.submit("k1", priority=2)      # bumps a queued low
+            extra = fe.submit("k0", priority=0)   # loses to everything
+            shed = [tk for tk in low + [hi, extra]
+                    if isinstance(tk.error, Overloaded)]
+            assert len(shed) == 2 and all(tk.priority == 0 for tk in shed)
+            assert extra in shed and hi not in shed
+            err = shed[0].error
+            assert err.key == "k0" and err.priority == 0
+            assert err.queue_depth == 3
+            fe.pump()
+            resolved = [tk for tk in low + [hi, extra] if tk.done]
+            assert len(resolved) == 5             # nothing hangs
+            assert fe.metrics.shed == 2
+            assert fe.metrics.served + fe.metrics.shed == 5
+
+    def test_equal_priority_newest_loses(self):
+        store = make_store()
+        store.put("k", payload_bytes(64, seed=15))
+        with ReadFrontEnd(store, max_queue=1) as fe:
+            first = fe.submit("k", priority=1)
+            second = fe.submit("k", priority=1)
+            assert isinstance(second.error, Overloaded)
+            assert first.error is None and not first.done
+
+
+# ----------------------------------------------- cross-request coalescing
+class TestCoalescing:
+    def test_one_decode_dispatch_per_pattern_across_keys(self):
+        store = make_store()
+        a, b = payload_bytes(64, seed=16), payload_bytes(64, seed=17)
+        store.put("a", a)
+        # same base stripe phase for both keys -> same placement ->
+        # a shared failure pattern
+        store._next_stripe = store.stat("a").meta["_base_stripe"]
+        store.put("b", b)
+        assert store.placement_of("a", 0) == store.placement_of("b", 0)
+        store.fail_node(store.placement_of("a", 0)[0])
+        with ReadFrontEnd(store) as fe:
+            t1, t2 = fe.submit("a"), fe.submit("b")
+            fe.pump()
+            assert t1.result() == a and t2.result() == b
+            assert fe.metrics.degraded_stripes == 2
+            assert fe.metrics.decode_dispatches == 1   # pattern shared
+            assert t1.receipt.decode_dispatches == 1
+
+    def test_tick_interleaves_serving_scrub_and_repair(self):
+        store = make_store()
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        data = payload_bytes(400, seed=18)
+        store.put("obj", data)
+        store.fail_node(1)
+        assert sched.pending() > 0
+        with ReadFrontEnd(store, scheduler=sched) as fe:
+            fe.submit("obj")
+            out = fe.tick(repair_budget_symbols=10_000_000)
+            assert out["served"] == 1
+            assert out["repair_remaining"] == 0
+        assert store.get("obj") == data
+
+
+# ------------------------------------------------------------------ metrics
+class TestMetrics:
+    def test_percentiles_and_summary_shape(self):
+        m = FrontEndMetrics()
+        assert m.latency_percentiles() == {"p50_s": 0.0, "p99_s": 0.0,
+                                           "p999_s": 0.0, "max_s": 0.0}
+        m.wall_latencies = [float(i) for i in range(1, 101)]
+        lat = m.latency_percentiles()
+        assert lat["p50_s"] == 50.0 and lat["p99_s"] == 99.0
+        assert lat["p999_s"] == 100.0 and lat["max_s"] == 100.0
+        s = m.summary()
+        assert {"requests", "served", "failed", "shed",
+                "latency"} <= set(s)

@@ -547,3 +547,124 @@ class TestSchedulerRestart:
         store.put("k", payload_bytes(1000))
         sched = RepairScheduler(store)
         assert sched.enqueue_scan() == 0
+
+
+# ------------------------------------------ share integrity (DESIGN.md §13.2)
+class TestShareIntegrity:
+    def test_unknown_key_typed_on_get_stat_delete(self):
+        from repro.store import UnknownKeyError
+        store = make_store()
+        for op in (store.get, store.stat, store.delete):
+            with pytest.raises(UnknownKeyError) as ei:
+                op("ghost")
+            assert ei.value.key == "ghost"
+            assert isinstance(ei.value, KeyError)   # generic handlers work
+
+    def test_put_records_crc_for_every_share(self):
+        from repro.store import share_crc
+        store = make_store()
+        stat = store.put("a", payload_bytes(3000))
+        assert len(stat.share_crcs) == stat.n_stripes
+        for t in range(stat.n_stripes):
+            assert len(stat.share_crcs[t]) == store.n
+            pl = store.placement_of("a", t)
+            for j in range(1, store.n + 1):
+                share = store._shares[pl[j - 1] - 1][("a", t)]
+                assert share_crc(share[1], share[2]) \
+                    == stat.share_crcs[t][j - 1]
+
+    def test_lost_at_birth_shares_still_get_crcs(self):
+        store = make_store()
+        store.fail_node(1)
+        stat = store.put("a", payload_bytes(500))
+        assert all(crc != 0 or True for row in stat.share_crcs
+                   for crc in row)
+        assert all(len(row) == store.n for row in stat.share_crcs)
+        # the ledger covers the absent share: once rebuilt (repairs are
+        # bit-exact) it verifies against the put-time CRC
+        sched = RepairScheduler(store)
+        sched.enqueue_scan()
+        sched.drain_all()
+        for t in range(stat.n_stripes):
+            pl = store.placement_of("a", t)
+            for j in range(1, store.n + 1):
+                assert store.share_intact(pl[j - 1], "a", t) is True
+
+    def test_share_intact_drop_and_scrub(self):
+        store = make_store()
+        store.put("a", payload_bytes(200, seed=1))
+        pl = store.placement_of("a", 0)
+        phys = pl[0]
+        assert store.share_intact(phys, "a", 0) is True
+        store._shares[phys - 1][("a", 0)][1][3] ^= 0x55
+        assert store.share_intact(phys, "a", 0) is False
+        assert store.scrub_node(phys) == [("a", 0)]
+        assert store.drop_share(phys, "a", 0) is True
+        assert store.share_intact(phys, "a", 0) is None     # absent now
+        assert store.drop_share(phys, "a", 0) is False
+        assert store.scrub_node(phys) == []
+
+    def test_audit_flags_crc_mismatch_orphan_class(self):
+        store = make_store()
+        store.put("a", payload_bytes(200, seed=2))
+        assert store.audit().clean
+        phys = store.placement_of("a", 0)[0]
+        store._shares[phys - 1][("a", 0)][1][0] ^= 0x55
+        audit = store.audit()
+        assert not audit.clean
+        assert any(reason == "crc mismatch" and key == "a"
+                   for _, key, _, reason in audit.orphan_shares)
+
+    def test_degraded_get_refuses_rotten_helper(self):
+        from repro.store import ShareIntegrityError
+        store = make_store(spec=SPEC2, n_nodes=6)
+        store.put("a", payload_bytes(100, seed=3))
+        pl = store.placement_of("a", 0)
+        store.fail_node(pl[0])                   # force the decode path
+        # rot a helper the decode is guaranteed to pick: any-k uses the
+        # first k present code nodes
+        present = sorted(store.present_code_nodes("a", 0))
+        victim = present[0]
+        store._shares[pl[victim - 1] - 1][("a", 0)][1][0] ^= 0x55
+        with pytest.raises(ShareIntegrityError) as ei:
+            store.get("a")
+        assert ei.value.key == "a" and ei.value.stripe == 0
+
+    def test_repair_requeues_on_rotten_helper_then_recovers(self):
+        store = make_store(spec=SPEC2, n_nodes=6)
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        data = payload_bytes(100, seed=4)
+        store.put("a", data)
+        pl = store.placement_of("a", 0)
+        store.fail_node(pl[0])
+        assert sched.pending() == 1
+        # k=2: the embedded repair of the lost share uses every other
+        # share as a helper, so any rot is in its helper set
+        rot_phys = pl[1]
+        store._shares[rot_phys - 1][("a", 0)][1][0] ^= 0x55
+        rep = sched.drain(budget_symbols=10_000_000)
+        assert rep.repaired_stripes == 0        # refused to decode garbage
+        assert sched.pending() == 1             # requeued, not dropped
+        store.drop_share(rot_phys, "a", 0)      # the scrub path's move
+        sched.drain_all()
+        assert sched.pending() == 0
+        assert store.get("a") == data
+        assert store.verify()
+
+    def test_delete_event_purges_scheduler_queue(self):
+        store = make_store()
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        store.put("a", payload_bytes(1500, seed=5))
+        store.put("b", payload_bytes(1500, seed=6))
+        store.fail_node(1)
+        before = sched.pending()
+        assert before > 0
+        a_tasks = sum(1 for key, _, _ in sched.peek_order() if key == "a")
+        assert a_tasks > 0
+        store.delete("a")
+        assert sched.pending() == before - a_tasks
+        assert all(key != "a" for key, _, _ in sched.peek_order())
+        sched.drain_all()
+        assert store.get("b") == payload_bytes(1500, seed=6)
