@@ -1,0 +1,172 @@
+"""Multi-device sharded encode/repair scaling over the stream mesh
+(DESIGN.md §14).
+
+Measures circulant encode and fused batched regeneration throughput at
+mesh sizes 1/2/4/8, asserts every sharded result bit-exact against the
+unsharded planner BEFORE timing, and asserts zero steady-state
+recompiles on every sharded plan.
+
+The headline scaling claim is asserted in-bench where the numbers are
+made: with >= 4 host cores (every CI runner), 4-device encode must be
+>= 2x single-device.  On a core-starved host (this includes 1-core dev
+containers) the XLA CPU client cannot run the shards in parallel, so
+real 2x scaling is PHYSICALLY unavailable; the bench then asserts the
+weaker invariant that sharding never regresses below single-device
+(the per-shard working sets are smaller, which is worth ~1.7x even
+serialized) and records ``scaling_asserted: false`` with the reason —
+an honest number beats a lucky one.
+
+Ratios use ALTERNATING paired rounds (same rationale as
+bench_regeneration._timeit_pair): on burstable hosts, timing one side
+to completion and then the other skews the ratio by whichever capacity
+window each phase landed in.
+
+The measurement runs in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the parent
+bench process keeps the host's real device topology (jax locks the
+device count at first init).
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+MESHES = (1, 2, 4, 8)
+_INNER_ENV = "_BENCH_SHARD_INNER"
+
+
+def _timeit_pair(fn_a, fn_b, reps=2, rounds=10):
+    """Best-of timing of two alternatives in alternating rounds."""
+    import jax
+    jax.block_until_ready(fn_a())          # warm-up: compile + first call
+    jax.block_until_ready(fn_b())
+    best_a = best_b = float("inf")
+    for _ in range(rounds):
+        for which, fn in ((0, fn_a), (1, fn_b)):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = fn()
+            jax.block_until_ready(out)
+            t = (time.perf_counter() - t0) / reps
+            if which == 0:
+                best_a = min(best_a, t)
+            else:
+                best_b = min(best_b, t)
+    return best_a, best_b
+
+
+def _inner(fast: bool) -> dict:
+    import jax
+    import numpy as np
+
+    from benchmarks import _timing
+    from repro.core.circulant import CodeSpec
+    from repro.exec import plan
+    from repro.kernels import dispatch
+
+    k = 8
+    enc_symbols = 1 << 20       # large enough that shards beat one body
+    rep_symbols = 1 << 18
+    rounds = 4 if fast else 10
+    spec = CodeSpec.make(k, 257)
+    n = spec.n
+    c = tuple(int(x) for x in spec.c)
+    be = dispatch.get("jnp-int32")
+    rng = _timing.rng()
+    data = rng.integers(0, 257, (n, enc_symbols), dtype=np.int64
+                        ).astype(np.int32)
+    rmat = rng.integers(0, 257, (2, k + 1), dtype=np.int64).astype(np.int32)
+    rprev = rng.integers(0, 257, (2, rep_symbols), dtype=np.int64
+                         ).astype(np.int32)
+    downs = rng.integers(0, 257, (2, k, rep_symbols), dtype=np.int64
+                         ).astype(np.int32)
+    enc_mb = n * enc_symbols / 2**20
+    rep_mb = 2 * k * rep_symbols / 2**20
+
+    ref = plan.get_planner(be, 257)
+    want_enc = ref.circulant_encode(data, c).host()
+    want_reg = ref.regenerate_batch(rmat, rprev, downs).host()
+
+    cpus = os.cpu_count() or 1
+    rec = {"n_devices": len(jax.devices()), "host_cpus": cpus,
+           "k": k, "n": n, "enc_stream_mb": round(enc_mb, 2),
+           "backend": be.name, "encode": [], "repair": []}
+    for m in MESHES:
+        pl = plan.get_planner(be, 257, mesh=m)
+        # bit-exact parity gates the timing: a wrong fast number is
+        # worse than no number
+        np.testing.assert_array_equal(
+            pl.circulant_encode(data, c).host(), want_enc,
+            err_msg=f"sharded encode diverges at mesh={m}")
+        np.testing.assert_array_equal(
+            pl.regenerate_batch(rmat, rprev, downs).host(), want_reg,
+            err_msg=f"sharded regenerate diverges at mesh={m}")
+        pl.reset_stats()
+        # .raw is the device array; PlanResult itself is an opaque leaf
+        # jax.block_until_ready would silently NOT block on
+        t1, tm = _timeit_pair(
+            lambda: ref.circulant_encode(data, c).raw,
+            lambda: pl.circulant_encode(data, c).raw, rounds=rounds)
+        r1, rm = _timeit_pair(
+            lambda: ref.regenerate_batch(rmat, rprev, downs).raw,
+            lambda: pl.regenerate_batch(rmat, rprev, downs).raw,
+            rounds=max(4, rounds // 2))
+        st = pl.plan_stats()
+        if m > 1:
+            assert st.compiles == 0 and st.misses == 0, (m, st)
+        rec["encode"].append({"mesh": m, "s": round(tm, 5),
+                              "mbps": round(enc_mb / tm, 1),
+                              "speedup_vs_1dev": round(t1 / tm, 2)})
+        rec["repair"].append({"mesh": m, "s": round(rm, 5),
+                              "mbps": round(rep_mb / rm, 1),
+                              "speedup_vs_1dev": round(r1 / rm, 2)})
+    rec["parity_ok"] = True
+    rec["steady_recompiles"] = 0
+    speedup4 = next(r["speedup_vs_1dev"] for r in rec["encode"]
+                    if r["mesh"] == 4)
+    rec["encode_speedup_4dev"] = speedup4
+    rec["scaling_asserted"] = cpus >= 4
+    if cpus >= 4:
+        assert speedup4 >= 2.0, \
+            f"4-device encode only {speedup4}x single-device (need >= 2x)"
+    else:
+        # shards can't run in parallel on < 4 cores; hold the weaker bar
+        rec["scaling_skip_reason"] = (
+            f"host has {cpus} core(s): 4 shards serialize, 2x parallel "
+            f"scaling physically unavailable; asserted no-regression "
+            f"instead")
+        assert speedup4 >= 1.0, \
+            f"4-device encode regressed to {speedup4}x single-device"
+    return rec
+
+
+def run(fast: bool = False, quiet: bool = False) -> dict:
+    env = dict(os.environ)
+    env[_INNER_ENV] = "fast" if fast else "full"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src"), str(root), env.get("PYTHONPATH", "")])
+    res = subprocess.run([sys.executable, "-m", "benchmarks.bench_shard"],
+                         capture_output=True, text=True, env=env,
+                         cwd=root, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(f"bench_shard subprocess failed:\n{res.stdout}\n"
+                           f"{res.stderr}")
+    rec = json.loads(res.stdout.splitlines()[-1])
+    if not quiet:
+        for erow, rrow in zip(rec["encode"], rec["repair"]):
+            print(f"  mesh={erow['mesh']}: encode {erow['mbps']} MB/s "
+                  f"({erow['speedup_vs_1dev']}x), repair {rrow['mbps']} "
+                  f"MB/s ({rrow['speedup_vs_1dev']}x)")
+    return rec
+
+
+if __name__ == "__main__":
+    mode = os.environ.get(_INNER_ENV)
+    if mode is None:
+        print(json.dumps(run(), indent=1))
+    else:
+        print(json.dumps(_inner(fast=mode == "fast")))

@@ -4,8 +4,9 @@ plus the roofline report over the dry-run artifacts.
     PYTHONPATH=src python -m benchmarks.run [--fast] [--quiet]
 
 Emits the repo-root perf-trajectory files BENCH_encode.json,
-BENCH_checkpoint.json, BENCH_repair.json, BENCH_cluster.json and
-BENCH_store.json, and prints ``name,us_per_call,derived`` CSV rows at
+BENCH_checkpoint.json, BENCH_repair.json, BENCH_cluster.json,
+BENCH_store.json and BENCH_shard.json, and prints
+``name,us_per_call,derived`` CSV rows at
 the end.  Unknown files under results/ (superseded artifacts, benches
 missing from KNOWN_RESULTS) fail the run before any sweep starts.
 """
@@ -20,8 +21,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 from benchmarks import (bench_checkpoint, bench_cluster, bench_drills,
                         bench_encode_throughput, bench_field_size,
                         bench_pipeline, bench_regeneration,
-                        bench_repair_bandwidth, bench_serve, bench_store,
-                        roofline)
+                        bench_repair_bandwidth, bench_serve, bench_shard,
+                        bench_store, roofline)
 
 OUT = pathlib.Path(__file__).resolve().parent / "results"
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -33,7 +34,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # shipping stale JSON.
 KNOWN_RESULTS = {"checkpoint", "cluster", "drills", "encode_throughput",
                  "field_size", "pipeline", "regeneration",
-                 "repair_bandwidth", "roofline", "serve", "store"}
+                 "repair_bandwidth", "roofline", "serve", "shard", "store"}
 
 
 def check_results_dir() -> None:
@@ -191,6 +192,19 @@ def main() -> None:
                      f"ckpt_speedup={rec['restore']['speedup_vs_serial']}x;"
                      f"steady_recompiles="
                      f"{rec['recompiles']['planned_steady_compiles']}"))
+
+    print("== mesh sharding: multi-device encode/repair scaling ======")
+    t0 = time.perf_counter()
+    # parity, zero steady-state recompiles, and (given >= 4 cores) the
+    # 2x 4-device scaling claim are all asserted inside the bench
+    rec = bench_shard.run(fast=args.fast, quiet=quiet)
+    (OUT / "shard.json").write_text(json.dumps(rec, indent=1))
+    (REPO_ROOT / "BENCH_shard.json").write_text(json.dumps(rec, indent=1))
+    csv_rows.append(("shard",
+                     f"{(time.perf_counter()-t0)*1e6:.0f}",
+                     f"enc_speedup_4dev={rec['encode_speedup_4dev']}x;"
+                     f"asserted={rec['scaling_asserted']};"
+                     f"steady_recompiles={rec['steady_recompiles']}"))
 
     print("== roofline (dry-run artifacts) ===========================")
     t0 = time.perf_counter()

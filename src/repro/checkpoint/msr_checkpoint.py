@@ -208,7 +208,8 @@ class MSRCheckpointer:
                  object_prefix: str = "ckpt",
                  leaf_group_bytes: int = 1 << 20,
                  io_backend: Optional[BlobBackend] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 mesh=None):
         self._store = store
         self._prefix = object_prefix.rstrip("/")
         self.leaf_group_bytes = max(1, leaf_group_bytes)
@@ -228,8 +229,12 @@ class MSRCheckpointer:
         elif spec is None:
             raise ValueError("directory mode needs an explicit CodeSpec")
         self.spec = spec
+        # stream-axis mesh (DESIGN.md §14): the stream-tile save/restore
+        # pipeline inherits it through the code's planner; store-backed
+        # mode uses the store's (already mesh-aware) code
         self.code = store.code if store is not None else \
-            DoubleCirculantMSR(spec, matmul=matmul, backend=backend)
+            DoubleCirculantMSR(spec, matmul=matmul, backend=backend,
+                               mesh=mesh)
         self.keep_last = keep_last
         self.save_tile_symbols = max(1, save_tile_symbols)
         self.io_workers = max(1, io_workers)

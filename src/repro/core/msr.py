@@ -71,6 +71,12 @@ class DoubleCirculantMSR:
     inverse_cache_size : int
         LRU capacity of the decode-inverse cache (entries are keyed by
         the sorted k-node subset; there are C(2k, k) possible).
+    mesh : StreamMesh | int | None
+        Shard every planned op over this stream-axis device mesh
+        (DESIGN.md §14).  ``None`` inherits the ambient
+        ``repro.sharding.mesh.use_mesh(...)`` scope (or no mesh at
+        all); a 1-device mesh falls back to the plain dispatch planner.
+        Ignored for custom-matmul codes (nothing is lowered).
 
     Attributes
     ----------
@@ -92,13 +98,14 @@ class DoubleCirculantMSR:
 
     def __init__(self, spec: CodeSpec, matmul: MatmulFn | None = None,
                  backend: str | None = None,
-                 inverse_cache_size: int = 128):
+                 inverse_cache_size: int = 128, mesh=None):
         self.spec = spec
         self.k, self.n, self.p = spec.k, spec.n, spec.p
         self.c = np.asarray(spec.c, dtype=np.int32)
         self._custom_matmul = matmul is not None
         if matmul is None:
             from repro.kernels import dispatch
+            from repro.sharding import mesh as mesh_mod
             be = dispatch.get(backend) if backend else dispatch.select(
                 self.p, self.k)
             self.backend_name = be.name
@@ -106,14 +113,17 @@ class DoubleCirculantMSR:
             self._circulant = be.circulant_encode
             engine_mm = be.matmul            # module-level singleton: the
                                              # engine's jit cache is shared
-            # shared per (backend, p): every code on this backend hits one
-            # AOT executable cache (DESIGN.md §11)
-            self.planner = be.planner(self.p)
+            self.mesh = (mesh_mod.as_stream_mesh(mesh) if mesh is not None
+                         else mesh_mod.current_mesh())
+            # shared per (backend, p, mesh): every code on this backend +
+            # mesh hits one AOT executable cache (DESIGN.md §11, §14)
+            self.planner = be.planner(self.p, mesh=self.mesh)
         else:
             self.backend_name = "custom"
             self._matmul = matmul
             self._circulant = None
             engine_mm = matmul
+            self.mesh = None
             self.planner = None              # custom kernels are not lowered
         self._m = spec.matrix_m()            # (n, n) M[j, i] = coef of a_j in r_{i+1}
         self._mt = np.ascontiguousarray(self._m.T)  # (n, n): r = M^T @ a

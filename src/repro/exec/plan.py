@@ -29,10 +29,23 @@ The :class:`PlanCache` removes that cost structurally:
   after warm-up, a mixed-size put/get/restore workload performs ZERO
   new compiles.
 
-Planners are shared process-wide per ``(backend, p, ladder, donation)``
-via :func:`get_planner` so every code instance on the same backend hits
-one executable cache.  :func:`planning_disabled` restores the raw
-jit-per-shape dispatch (the pre-plan behavior) for A/B measurement.
+Planners are shared process-wide per ``(backend, p, ladder, donation,
+mesh)`` via :func:`get_planner` so every code instance on the same
+backend hits one executable cache.  :func:`planning_disabled` restores
+the raw jit-per-shape dispatch (the pre-plan behavior) for A/B
+measurement.
+
+Mesh-sharded plans (DESIGN.md §14): pass ``mesh=`` (a
+``repro.sharding.mesh.StreamMesh``, an int shard count, or None) and
+every executable is lowered as ``jit(shard_map(op))`` over the stream
+axis under the declarative rule registry.  The bucket ladder then runs
+*per shard*: the stream extent is split ceil(s / m) per device, THAT is
+bucketed, and the global operand pads to ``m * shard_bucket`` — so each
+shape bucket compiles once per-shard shape, stream lengths not
+divisible by the mesh just pad (still bit-exact: column-local ops),
+and a 1-device mesh normalizes to the plain unsharded planner (same
+object, same executables — no spurious recompiles when the device
+count collapses to one).
 """
 from __future__ import annotations
 
@@ -222,7 +235,13 @@ class PlanCache:
         device buffers the planner's host copy populated), False on CPU,
         where XLA may read the HOST numpy buffer in place: donating an
         exact-bucket-fit caller array there could let the output
-        overwrite caller memory.
+        overwrite caller memory.  Donation is disabled on sharded plans
+        (the padded staging buffer is host-side and gets scattered to
+        per-device shards; there is no whole-buffer alias to reuse).
+    mesh : StreamMesh | int | None, optional
+        Shard every plan over this stream-axis mesh (DESIGN.md §14).
+        A 1-device mesh is normalized to None — the plain dispatch
+        fallback.
 
     Notes
     -----
@@ -235,14 +254,21 @@ class PlanCache:
 
     def __init__(self, backend, p: int, *, bucket_min: int = BUCKET_MIN,
                  bucket_ratio: float = BUCKET_RATIO,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None, mesh=None):
+        from repro.sharding.mesh import as_stream_mesh
         self.backend = backend
         self.backend_name = getattr(backend, "name", "custom")
         self.p = int(p)
         self.bucket_min = int(bucket_min)
         self.bucket_ratio = float(bucket_ratio)
+        mesh = as_stream_mesh(mesh)
+        if mesh is not None and mesh.is_trivial:
+            mesh = None                 # single-device: plain dispatch
+        self.mesh = mesh
         if donate is None:
             donate = jax.default_backend() not in ("cpu",)
+        if mesh is not None:
+            donate = False              # see class docstring
         self.donate = bool(donate)
         self._plans: dict[tuple, Callable] = {}
         self._lock = threading.Lock()
@@ -259,8 +285,39 @@ class PlanCache:
         return bucket_symbols(f, bucket_min=BATCH_BUCKET_MIN,
                               ratio=self.bucket_ratio)
 
+    def stream_pad(self, s: int) -> tuple[int, int]:
+        """(plan-key bucket, padded stream extent) for a true extent s.
+
+        Unsharded: both are the ladder bucket.  Sharded: the ladder runs
+        per shard — bucket ceil(s / m), pad the global operand to
+        m * shard_bucket so every device sees the same bucketed shard
+        shape (one compile per-shard shape; lengths not divisible by the
+        mesh just pad, still bit-exact because the ops are column-local).
+        """
+        if self.mesh is None:
+            b = self.bucket(s)
+            return b, b
+        sb = self.bucket(self.mesh.shard_extent(s))
+        return sb, sb * self.mesh.size
+
     def _i32(self, *shapes):
         return [jax.ShapeDtypeStruct(s, jnp.int32) for s in shapes]
+
+    def _compile(self, op: str, fn: Callable, shapes, donate=()):
+        """Lower + AOT-compile ``fn`` at ``shapes``: plain jit when
+        unsharded, ``jit(shard_map(fn))`` under the op's registered
+        sharding rule when meshed (inputs/outputs pinned to the rule's
+        NamedShardings, so host numpy operands are scattered straight to
+        their per-device shards at call time)."""
+        if self.mesh is None:
+            jf = jax.jit(fn, donate_argnums=donate)
+        else:
+            from repro.sharding.mesh import get_rule, shard_body
+            rule = get_rule(op)
+            jf = jax.jit(shard_body(fn, op, self.mesh),
+                         in_shardings=self.mesh.shardings(rule.in_specs),
+                         out_shardings=self.mesh.sharding(rule.out_specs))
+        return jf.lower(*self._i32(*shapes)).compile()
 
     def _exe(self, key: tuple, build: Callable[[], Callable]) -> Callable:
         with self._lock:
@@ -302,7 +359,7 @@ class PlanCache:
         s = blocks.shape[-1]
         if not _ENABLED:
             return PlanResult(self.backend.matmul(mat, blocks, self.p), s)
-        b = self.bucket(s)
+        b, pad = self.stream_pad(s)
         key = ("matmul", mat.shape, blocks.shape[:-1], b)
         # donation is only usable when an output can alias the donated
         # buffer, i.e. the product has the stream operand's exact shape
@@ -313,11 +370,12 @@ class PlanCache:
 
         def build():
             fn = lambda a, x: self.backend.matmul(a, x, self.p)
-            jf = jax.jit(fn, donate_argnums=donate)
-            return jf.lower(*self._i32(mat.shape,
-                                       blocks.shape[:-1] + (b,))).compile()
+            return self._compile("matmul", fn,
+                                 (mat.shape, blocks.shape[:-1] + (pad,)),
+                                 donate)
 
-        return PlanResult(self._exe(key, build)(mat, _pad_last(blocks, b)), s)
+        return PlanResult(self._exe(key, build)(mat, _pad_last(blocks, pad)),
+                          s)
 
     def circulant_encode(self, data, c) -> PlanResult:
         """The paper's eq. (2) encode at a bucketed stream extent.
@@ -332,15 +390,16 @@ class PlanCache:
         if not _ENABLED:
             return PlanResult(self.backend.circulant_encode(data, c, self.p),
                               s)
-        b = self.bucket(s)
+        b, pad = self.stream_pad(s)
         key = ("circ", data.shape[0], c, b)
 
         def build():
             fn = lambda d: self.backend.circulant_encode(d, c, self.p)
-            jf = jax.jit(fn, donate_argnums=(0,) if self.donate else ())
-            return jf.lower(*self._i32((data.shape[0], b))).compile()
+            return self._compile("circulant_encode", fn,
+                                 ((data.shape[0], pad),),
+                                 (0,) if self.donate else ())
 
-        return PlanResult(self._exe(key, build)(_pad_last(data, b)), s)
+        return PlanResult(self._exe(key, build)(_pad_last(data, pad)), s)
 
     def regenerate(self, rmat, r_prev, next_data) -> PlanResult:
         """The fused (2, k+1) repair-matrix application (DESIGN.md §4):
@@ -353,18 +412,18 @@ class PlanCache:
         if not _ENABLED:
             return PlanResult(
                 self._regen_fn()(rmat, r_prev, next_data), s)
-        b = self.bucket(s)
+        b, pad = self.stream_pad(s)
         k = next_data.shape[0]
         key = ("regen", k, b)
 
         def build():
             # the (2, S) pair can alias next_data only at k == 2
             donate = (2,) if self.donate and k == 2 else ()
-            jf = jax.jit(self._regen_fn(), donate_argnums=donate)
-            return jf.lower(*self._i32(rmat.shape, (b,), (k, b))).compile()
+            return self._compile("regenerate", self._regen_fn(),
+                                 (rmat.shape, (pad,), (k, pad)), donate)
 
         return PlanResult(self._exe(key, build)(
-            rmat, _pad_last(r_prev, b), _pad_last(next_data, b)), s)
+            rmat, _pad_last(r_prev, pad), _pad_last(next_data, pad)), s)
 
     def regenerate_batch(self, rmat, r_prevs, next_data) -> PlanResult:
         """Vmapped fused regeneration with BOTH variable axes bucketed:
@@ -383,7 +442,7 @@ class PlanCache:
             one = self._regen_fn()
             return PlanResult(jax.vmap(lambda rp, nd: one(rmat, rp, nd))(
                 r_prevs, next_data), s, batch=f)
-        b = self.bucket(s)
+        b, pad = self.stream_pad(s)
         fb = self.batch_bucket(f)
         key = ("regen_batch", fb, k, b)
 
@@ -395,13 +454,13 @@ class PlanCache:
 
             # the (F, 2, S) output can alias next_data only at k == 2
             donate = (2,) if self.donate and k == 2 else ()
-            jf = jax.jit(fn, donate_argnums=donate)
-            return jf.lower(*self._i32(rmat.shape, (fb, b),
-                                       (fb, k, b))).compile()
+            return self._compile("regenerate_batch", fn,
+                                 (rmat.shape, (fb, pad), (fb, k, pad)),
+                                 donate)
 
         return PlanResult(self._exe(key, build)(
-            rmat, _pad_both(r_prevs, fb, b),
-            _pad_both(next_data, fb, b)), s, batch=f)
+            rmat, _pad_both(r_prevs, fb, pad),
+            _pad_both(next_data, fb, pad)), s, batch=f)
 
     def _regen_fn(self):
         return make_regen_fn(self.backend.matmul, self.p)
@@ -410,18 +469,29 @@ class PlanCache:
 # --------------------------------------------------------------- registry
 def get_planner(backend, p: int, *, bucket_min: int = BUCKET_MIN,
                 bucket_ratio: float = BUCKET_RATIO,
-                donate: Optional[bool] = None) -> PlanCache:
-    """The shared PlanCache for (backend, p, ladder, donation) — every
-    code/engine on the same backend shares one executable cache."""
+                donate: Optional[bool] = None, mesh=None) -> PlanCache:
+    """The shared PlanCache for (backend, p, ladder, donation, mesh) —
+    every code/engine on the same backend and mesh shares one executable
+    cache.  A 1-device mesh normalizes to the UNSHARDED planner (the
+    very same object), so collapsing the device count to one changes
+    neither results nor compile counts."""
+    from repro.sharding.mesh import as_stream_mesh
+    mesh = as_stream_mesh(mesh)
+    if mesh is not None and mesh.is_trivial:
+        mesh = None
     if donate is None:
         donate = jax.default_backend() not in ("cpu",)
+    if mesh is not None:
+        donate = False                  # matches PlanCache normalization
     key = (getattr(backend, "name", id(backend)), int(p), int(bucket_min),
-           float(bucket_ratio), bool(donate))
+           float(bucket_ratio), bool(donate),
+           None if mesh is None else mesh.key())
     with _LOCK:
         pc = _REGISTRY.get(key)
         if pc is None:
             pc = PlanCache(backend, p, bucket_min=bucket_min,
-                           bucket_ratio=bucket_ratio, donate=donate)
+                           bucket_ratio=bucket_ratio, donate=donate,
+                           mesh=mesh)
             _REGISTRY[key] = pc
         return pc
 

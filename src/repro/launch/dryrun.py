@@ -1,8 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+_N_DRYRUN_DEV = int(os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") +
+    f" --xla_force_host_platform_device_count={_N_DRYRUN_DEV}").strip()
 # ^ MUST precede any jax import: jax locks the device count on first init.
-#   Set ONLY here — tests/benches see the host's single device.
+#   Set ONLY here — tests/benches see the host's single device.  The
+#   REPRO_DRYRUN_DEVICES override exists for the tier-1 smoke cell
+#   (tests/test_hlo_stats.py), which dry-runs a reduced config on a
+#   small forced-device mesh instead of the 512-chip production mesh.
 
 """Multi-pod dry-run (deliverable e): for every (arch x shape x mesh) cell,
 lower + compile the step function against ShapeDtypeStruct inputs on the
@@ -24,6 +29,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import SHAPES, get_config
 from repro.configs.registry import cells, skipped_cells
@@ -111,10 +117,22 @@ def parse_collectives(hlo_text: str) -> dict:
 # --------------------------------------------------------------- lowering
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                policy_overrides: dict | None = None,
-               save_hlo: pathlib.Path | None = None) -> dict:
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+               save_hlo: pathlib.Path | None = None,
+               cfg=None, shape=None, mesh=None,
+               mesh_name: str | None = None) -> dict:
+    """One (arch x shape x mesh) cell.  The cfg/shape/mesh overrides let
+    the tier-1 smoke test lower a REDUCED config on a small forced-device
+    mesh end-to-end (same artifact schema, same invariants) without the
+    256/512-chip production mesh."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = shape if shape is not None else SHAPES[shape_name]
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    n_devices = int(np.prod(list(mesh.shape.values())))
+    if mesh_name is None:
+        mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") \
+            if n_devices in (256, 512) else \
+            "mesh" + "x".join(str(mesh.shape[a]) for a in mesh.shape)
     model = Model(cfg)
     t0 = time.time()
 
@@ -138,8 +156,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             bspecs = policy.batch_spec(batch_shapes, mesh,
                                        global_batch=shape.global_batch,
                                        layout=layout)
-            n_dev = 512 if multi_pod else 256
-            n_shards = n_dev if layout == "dp" else n_dev // 16
+            n_dev = n_devices
+            model_ax = mesh.shape.get("model", 1)
+            n_shards = n_dev if layout == "dp" else n_dev // model_ax
             n_micro = steps_mod.pick_microbatches(shape, n_shards)
             fn = steps_mod.make_train_step(model, opt_cfg, n_micro)
             lowered = jax.jit(
@@ -181,6 +200,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per device
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     if save_hlo is not None:
         save_hlo.parent.mkdir(parents=True, exist_ok=True)
@@ -195,8 +216,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     result = {
         "arch": arch, "shape": shape_name,
-        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
-        "n_devices": 512 if multi_pod else 256,
+        "mesh": mesh_name,
+        "n_devices": n_devices,
         "kind": shape.kind,
         "seq_len": shape.seq_len, "global_batch": shape.global_batch,
         "n_params": n_params, "n_active_params": n_active,

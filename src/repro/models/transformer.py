@@ -103,6 +103,15 @@ def _self_attention_sublayer(cfg, p, x, kind, ctx: Ctx, cache):
     k_new, v_new = attn.project_kv(cfg, p["attn"], h, ctx.cos, ctx.sin)
     new_cache = cache
     if ctx.mode == "decode":
+        # Mask against the cache in ABSOLUTE slot coordinates: k_pos below
+        # is the cache slot index, so the query side must be the absolute
+        # position ctx.pos too.  ctx.q_pos is the ROPE stream position —
+        # identical for text archs, but the M-RoPE temporal stream lags the
+        # slot index once image tokens share a t, which would wrongly mask
+        # the newest slots out of q_pos - k_pos >= 0.
+        q_pos = jnp.broadcast_to(
+            jnp.asarray(ctx.pos, jnp.int32)[None, None],
+            (x.shape[0], x.shape[1]))
         if kind == "la":
             new_cache = {**cache,
                          **attn.window_cache_update(cache, k_new, v_new, ctx.pos)}
@@ -119,7 +128,7 @@ def _self_attention_sublayer(cfg, p, x, kind, ctx: Ctx, cache):
             k_valid = jnp.broadcast_to((t <= ctx.pos)[None],
                                        (x.shape[0], ctx.max_len))
         o = attn.attention(cfg, q, new_cache["k"], new_cache["v"],
-                           q_pos=ctx.q_pos, k_pos=k_pos, causal=causal,
+                           q_pos=q_pos, k_pos=k_pos, causal=causal,
                            window=cfg.window_size if kind == "la" else None,
                            k_valid=k_valid)
     else:

@@ -1,1 +1,1 @@
-from . import ctx, policy  # noqa: F401
+from . import ctx, mesh, policy  # noqa: F401

@@ -13,8 +13,9 @@ import contextlib
 import contextvars
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.policy import spec_fits
 
 _CTX = contextvars.ContextVar("activation_sharding", default=None)
 
@@ -28,17 +29,6 @@ def rules(mesh: Mesh, table: dict[str, P]):
         _CTX.reset(tok)
 
 
-def _fits(shape, spec, mesh) -> bool:
-    for dim, ax in zip(shape, tuple(spec)):
-        if ax is None:
-            continue
-        axes = ax if isinstance(ax, tuple) else (ax,)
-        n = int(np.prod([mesh.shape.get(a, 1) for a in axes]))
-        if n > 1 and dim % n != 0:
-            return False
-    return True
-
-
 def constrain(x, kind: str):
     ctx = _CTX.get()
     if ctx is None:
@@ -47,7 +37,7 @@ def constrain(x, kind: str):
     spec = table.get(kind)
     if spec is None:
         return x
-    if len(tuple(spec)) > x.ndim or not _fits(x.shape, spec, mesh):
+    if len(tuple(spec)) > x.ndim or not spec_fits(spec, x.shape, mesh):
         return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 

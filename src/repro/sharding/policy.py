@@ -39,6 +39,27 @@ def _fits(dim: int, mesh: Mesh, axis: str) -> bool:
     return n > 1 and dim % n == 0
 
 
+def spec_fits(spec: P, shape: tuple[int, ...], mesh: Mesh, *,
+              require_multi: bool = False) -> bool:
+    """Divisibility check for a PartitionSpec against a concrete shape:
+    every sharded dim must divide its mesh-axis product.  With
+    ``require_multi`` a spec naming any size-1 axis is rejected too
+    (used by the param rules, which want a REAL shard or a clean
+    fallback).  Shared by the param policy and the activation-hint
+    context (`ctx.constrain`), so the two can never disagree on what
+    "fits" means."""
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if n > 1 and dim % n != 0:
+            return False
+        if require_multi and any(_axis_size(mesh, a) == 1 for a in axes):
+            return False
+    return True
+
+
 def _path_names(path) -> list[str]:
     out = []
     for e in path:
@@ -153,16 +174,7 @@ def _param_spec_inner(name: str, path: list[str], shape: tuple[int, ...],
 
 
 def _spec_fits(spec: P, shape: tuple[int, ...], mesh: Mesh) -> bool:
-    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
-        if ax is None:
-            continue
-        axes = ax if isinstance(ax, tuple) else (ax,)
-        n = int(np.prod([_axis_size(mesh, a) for a in axes]))
-        if n > 1 and dim % n != 0:
-            return False
-        if any(_axis_size(mesh, a) == 1 for a in axes):
-            return False
-    return True
+    return spec_fits(spec, shape, mesh, require_multi=True)
 
 
 def _add_fsdp(spec: P, shape: tuple[int, ...], mesh: Mesh,

@@ -182,6 +182,11 @@ class CodedObjectStore:
         Deterministic service-time model for read/repair latencies.
     backend : str, optional
         Pin a GF dispatch backend for encode/decode.
+    mesh : StreamMesh | int | None, optional
+        Stream-axis device mesh for every planned GF dispatch — put
+        encodes, degraded-read decodes, coalesced repair
+        (DESIGN.md §14).  ``None`` inherits an ambient
+        ``repro.sharding.mesh.use_mesh(...)`` scope.
     io_workers, pipeline_depth : int
         The store's overlapped I/O⇄compute engine (DESIGN.md §11.3):
         share placement / download gathering runs on ``io_workers`` pool
@@ -223,7 +228,8 @@ class CodedObjectStore:
                  put_tile_stripes: int = 64,
                  repair_tile_tasks: int = 64,
                  faults: Optional[FaultInjector] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 mesh=None):
         self.spec = spec
         self.k, self.n, self.p = spec.k, spec.n, spec.p
         self.n_nodes = int(n_nodes if n_nodes is not None else spec.n)
@@ -235,7 +241,7 @@ class CodedObjectStore:
         self.layout = placement.rack_layout(self.n_nodes, n_racks)
         self.stripes = StripeManager(spec, self.layout,
                                      stripe_symbols=stripe_symbols,
-                                     code=code, backend=backend)
+                                     code=code, backend=backend, mesh=mesh)
         self.code = self.stripes.code
         self.S = self.stripes.stripe_symbols
         self.link = link or LinkModel()

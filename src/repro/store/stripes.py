@@ -72,19 +72,23 @@ class StripeManager:
         Share an existing code instance (and its decode-inverse cache).
     backend : str, optional
         Pin a dispatch backend by name (forwarded to the code).
+    mesh : StreamMesh | int | None, optional
+        Stream-axis device mesh forwarded to the code (DESIGN.md §14);
+        ignored when ``code`` is given (the code owns its planner).
     """
 
     def __init__(self, spec: CodeSpec, layout: placement.RackLayout, *,
                  stripe_symbols: int = 1 << 12,
                  code: DoubleCirculantMSR | None = None,
-                 backend: str | None = None):
+                 backend: str | None = None, mesh=None):
         self.spec = spec
         self.k, self.n, self.p = spec.k, spec.n, spec.p
         self.layout = layout
         self.stripe_symbols = int(stripe_symbols)
         if self.stripe_symbols < 1:
             raise ValueError("stripe_symbols must be >= 1")
-        self.code = code or DoubleCirculantMSR(spec, backend=backend)
+        self.code = code or DoubleCirculantMSR(spec, backend=backend,
+                                               mesh=mesh)
         worst = max(placement.max_shares_per_rack(
             layout, self.placement(t)) for t in range(layout.n_nodes))
         if worst > self.n - self.k:

@@ -115,19 +115,60 @@ ENTRY %main (x: f32[128]) -> f32[128] {
     assert c["all-reduce"]["bytes"] == 128 * 4
 
 
+def _check_dryrun_record(rec: dict, name: str) -> None:
+    assert "error" not in rec, name
+    assert rec["dynamic"]["flops"] >= rec["cost"]["flops"] * 0.5, name
+    if rec["kind"] == "train":
+        # trip-aware flops must exceed 6ND/chips (bwd+remat overhead)
+        model = 6 * rec["n_active_params"] * rec["tokens_per_step"] / rec["n_devices"]
+        assert rec["dynamic"]["flops"] > 0.5 * model, name
+
+
 def test_dryrun_artifacts_consistency():
-    """If the dry-run matrix artifacts exist, basic invariants must hold."""
+    """End-to-end dry-run smoke: lower a REDUCED train cell on a forced
+    8-device (4 data x 2 model) mesh in a subprocess and assert the
+    artifact invariants on the result — so the checks run in every CI
+    pass instead of skipping when the 512-chip matrix hasn't been
+    produced.  Real artifacts, when present, are held to the same bar.
+    """
     import json
+    import os
     import pathlib
-    res = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / "dryrun_results"
-    files = [f for f in res.glob("*.json") if not f.name.endswith(".error.json")]
-    if not files:
-        pytest.skip("no dry-run artifacts (run repro.launch.dryrun --all)")
-    for f in files:
-        rec = json.loads(f.read_text())
-        assert "error" not in rec, f.name
-        assert rec["dynamic"]["flops"] >= rec["cost"]["flops"] * 0.5, f.name
-        if rec["kind"] == "train":
-            # trip-aware flops must exceed 6ND/chips (bwd+remat overhead)
-            model = 6 * rec["n_active_params"] * rec["tokens_per_step"] / rec["n_devices"]
-            assert rec["dynamic"]["flops"] > 0.5 * model, f.name
+    import subprocess
+    import sys
+    import textwrap
+    code = textwrap.dedent("""
+        import json, os, sys
+        os.environ["REPRO_DRYRUN_DEVICES"] = "8"
+        from repro.launch import dryrun          # sets XLA_FLAGS pre-jax
+        import jax
+        assert len(jax.devices()) == 8, jax.devices()
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        cfg = get_config("qwen3-4b").reduced(
+            n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+            d_ff=64, vocab_size=256, loss_chunk=16)
+        shape = ShapeConfig("train_smoke", 64, 8, "train")
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rec = dryrun.lower_cell("qwen3-4b", "train_smoke",
+                                cfg=cfg, shape=shape, mesh=mesh)
+        json.dump(rec, sys.stdout)
+    """)
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=480)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    rec = json.loads(res.stdout)
+    assert rec["n_devices"] == 8
+    assert rec["mesh"] == "mesh4x2"
+    assert rec["collectives"]["total_bytes"] > 0   # model axis => collectives
+    _check_dryrun_record(rec, "train_smoke")
+    # any committed full-scale artifacts must hold the same invariants
+    res_dir = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / "dryrun_results"
+    for f in res_dir.glob("*.json"):
+        if f.name.endswith(".error.json"):
+            continue
+        _check_dryrun_record(json.loads(f.read_text()), f.name)

@@ -118,19 +118,32 @@ def test_prefill_decode_matches_full_forward(arch, arch_setup):
         model = Model(cfg)
     key = jax.random.PRNGKey(4)
     full = make_batch(cfg, key, seq=SEQ + 1, labels=False)
-    if "tokens" not in full:
-        pytest.skip("embeds-input arch: decode consistency covered via text path")
-    prefix = {k: (v[..., :SEQ] if v.ndim == 2 else
-                  (v[..., :SEQ] if k == "positions" else v))
-              for k, v in full.items()}
-    if "positions" in full:
-        prefix["positions"] = full["positions"][..., :SEQ]
     max_len = SEQ + 1
-    _, cache = model.prefill(params, prefix, max_len=max_len, q_chunk=16)
-    tok = full["tokens"][:, SEQ:SEQ + 1]
-    dec_logits, _ = model.decode_step(params, cache, tok,
-                                      jnp.asarray(SEQ, jnp.int32),
-                                      max_len=max_len)
+    if "tokens" in full:
+        prefix = {k: (v[..., :SEQ] if v.ndim == 2 else
+                      (v[..., :SEQ] if k == "positions" else v))
+                  for k, v in full.items()}
+        if "positions" in full:
+            prefix["positions"] = full["positions"][..., :SEQ]
+        _, cache = model.prefill(params, prefix, max_len=max_len, q_chunk=16)
+        tok = full["tokens"][:, SEQ:SEQ + 1]
+        dec_logits, _ = model.decode_step(params, cache, tok,
+                                          jnp.asarray(SEQ, jnp.int32),
+                                          max_len=max_len)
+    else:
+        # embeds-input arch (VL frontend): decode_step takes token ids, so
+        # feed the final-position EMBEDDING through forward() in decode mode
+        # — same cache/mask path, same teacher-forced consistency claim.
+        prefix = {"inputs_embeds": full["inputs_embeds"][:, :SEQ],
+                  "positions": full["positions"][..., :SEQ]}
+        _, cache = model.prefill(params, prefix, max_len=max_len, q_chunk=16)
+        step = {"inputs_embeds": full["inputs_embeds"][:, SEQ:SEQ + 1],
+                "positions": full["positions"][..., SEQ:SEQ + 1]}
+        h1, _, _ = model.forward(params, step, "decode", cache,
+                                 pos=jnp.asarray(SEQ, jnp.int32),
+                                 max_len=max_len, remat=False)
+        dec_logits = (h1 @ model.head(params).astype(h1.dtype)
+                      ).astype(jnp.float32)
     h, _, _ = model.forward(params, full, "train", remat=False)
     head = model.head(params).astype(h.dtype)
     ref_logits = (h[:, -1:] @ head).astype(jnp.float32)
