@@ -1,0 +1,261 @@
+"""Code-family frontier benchmark (DESIGN.md §15): the storage-overhead
+vs repair-bandwidth tradeoff across registered erasure-code families,
+online conversion throughput, and encode-kernel distance-to-roofline.
+
+Per code class on the grid (double-circulant n = 2k / d = k+1 points,
+product-matrix MSR points including a d < n-1 repair case):
+
+  * **frontier** — a store is filled under the class, one node is
+    killed, and the scheduler drains the queue: measured repair symbols
+    vs the classical-RS re-download baseline (the product-matrix rows
+    must beat RS — that is the codes-smoke CI gate) next to the class's
+    storage overhead n*q/D;
+  * **encode roofline** — steady-state ``encode_derived_planned``
+    MB/s as a fraction of measured host memcpy bandwidth, the
+    streaming roofline every GF kernel is bounded by;
+  * **conversion** — every object is converted default -> product-matrix
+    and back through :meth:`CodedObjectStore.convert`, timed end to end;
+    both directions must be bit-exact with zero orphan shares.
+
+Emits the repo-root perf-trajectory file ``BENCH_codes.json`` (also via
+``benchmarks.run``); the CI ``codes-smoke`` job gates on the
+``assertions`` block at a fixed seed.
+"""
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.codes import (CodeClass, FAMILY_DOUBLE_CIRCULANT,
+                         FAMILY_PRODUCT_MATRIX, make_code)
+from repro.core.circulant import CodeSpec
+from repro.store import CodedObjectStore, RepairScheduler
+
+from benchmarks import _timing
+from benchmarks._timing import timeit
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def grid(fast: bool) -> list[CodeClass]:
+    """The (family, n, k, d) sweep: both families, overlapping (k, p),
+    and a product-matrix d < n-1 point (helpers chosen from a strict
+    subset of the survivors)."""
+    classes = [
+        CodeClass(FAMILY_DOUBLE_CIRCULANT, n=4, k=2, d=3),
+        CodeClass(FAMILY_PRODUCT_MATRIX, n=5, k=2, d=3),   # d < n-1
+        CodeClass(FAMILY_PRODUCT_MATRIX, n=6, k=3, d=4),   # d < n-1
+    ]
+    if not fast:
+        classes += [
+            CodeClass(FAMILY_DOUBLE_CIRCULANT, n=8, k=4, d=5),
+            CodeClass(FAMILY_PRODUCT_MATRIX, n=6, k=2, d=3),
+            CodeClass(FAMILY_PRODUCT_MATRIX, n=8, k=4, d=6),
+        ]
+    return classes
+
+
+def memcpy_mbps(mb: int = 32) -> float:
+    """Measured host memcpy bandwidth — the streaming roofline the GF
+    encode kernels are bounded by on CPU."""
+    src = np.zeros(mb << 20, np.uint8)
+    dst = np.empty_like(src)
+    np.copyto(dst, src)                     # first touch
+    best = min(_copy_once(dst, src) for _ in range(3))
+    return mb / best
+
+
+def _copy_once(dst, src) -> float:
+    t0 = time.perf_counter()
+    np.copyto(dst, src)
+    return time.perf_counter() - t0
+
+
+def encode_mbps(cc: CodeClass, stream_symbols: int) -> float:
+    """Steady-state planned encode throughput for one class: (D, T*S)
+    payload stream -> derived rows, symbols/s as MB/s (1 B/symbol)."""
+    code = make_code(cc)
+    rng = _timing.rng(cc.n + cc.d)
+    flat = rng.integers(0, cc.p, (code.data_blocks, stream_symbols),
+                        dtype=np.int64).astype(np.int32)
+    t = timeit(lambda: code.encode_derived_planned(flat).host())
+    return flat.size / t / 2**20
+
+
+def _fill(store, rng, n_objects, object_bytes, cc=None) -> dict[str, bytes]:
+    objs = {}
+    for i in range(n_objects):
+        key = f"obj{i:03d}"
+        objs[key] = rng.integers(0, 256, object_bytes,
+                                 dtype=np.uint8).tobytes()
+        store.put(key, objs[key], code_class=cc)
+    return objs
+
+
+def frontier_point(cc: CodeClass, *, stripe_symbols: int, n_objects: int,
+                   object_bytes: int, stream_symbols: int,
+                   copy_mbps: float, seed: int, quiet: bool) -> dict:
+    """One class's frontier row: fill a store under the class, kill a
+    node, drain the repair queue, and compare moved symbols to the RS
+    re-download baseline."""
+    if cc.family == FAMILY_DOUBLE_CIRCULANT:
+        spec = CodeSpec.make(cc.k, cc.p)
+        store = CodedObjectStore(spec, n_nodes=cc.n + 2,
+                                 stripe_symbols=stripe_symbols)
+        put_class = None                    # the store's default class
+    else:
+        spec = CodeSpec.make(2, cc.p)
+        store = CodedObjectStore(spec, n_nodes=max(cc.n + 2, spec.n),
+                                 stripe_symbols=stripe_symbols)
+        put_class = cc
+    code = make_code(cc)
+    with store:
+        rng = np.random.default_rng(seed + cc.n * 10 + cc.d)
+        objs = _fill(store, rng, n_objects, object_bytes, put_class)
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        store.fail_node(1)
+        budget = 4 * cc.k * (cc.d - cc.k + 1) * store.S
+        rep = sched.drain_all(budget_symbols=budget)
+        bit_exact = all(store.get(key) == ref for key, ref in objs.items())
+        ratio = rep.ratio_vs_rs
+        row = {
+            "family": cc.family, "n": cc.n, "k": cc.k, "d": cc.d,
+            "q": code.share_blocks,
+            "storage_overhead": round(code.storage_overhead(), 4),
+            "gamma_symbols": code.gamma_regenerate_symbols(store.S),
+            "repair_symbols": rep.symbols_moved,
+            "rs_baseline_symbols": rep.rs_baseline_symbols,
+            "repair_ratio_vs_rs": (None if ratio is None
+                                   else round(ratio, 4)),
+            "repaired_shares": rep.repaired_shares,
+            "bit_exact_after_repair": bit_exact,
+            "encode_mbps": round(encode_mbps(cc, stream_symbols), 2),
+        }
+        row["roofline_frac_of_memcpy"] = round(
+            row["encode_mbps"] / copy_mbps, 4)
+    if not quiet:
+        print(f"[codes] {cc.key():34s} overhead {row['storage_overhead']:.2f} "
+              f"repair_vs_rs {row['repair_ratio_vs_rs']} "
+              f"encode {row['encode_mbps']} MB/s "
+              f"({row['roofline_frac_of_memcpy']:.1%} of memcpy)")
+    return row
+
+
+def conversion_section(target: CodeClass, *, stripe_symbols: int,
+                       n_objects: int, object_bytes: int, seed: int,
+                       quiet: bool) -> dict:
+    """Conversion throughput sweep: default -> target -> default for
+    every object, bit-exact both ways, zero orphans, plus one
+    scheduler-driven conversion (enqueue_convert + drain)."""
+    spec = CodeSpec.make(2)
+    with CodedObjectStore(spec, n_nodes=max(target.n + 2, 8),
+                          stripe_symbols=stripe_symbols) as store:
+        rng = np.random.default_rng(seed + 1)
+        objs = _fill(store, rng, n_objects, object_bytes)
+        total_mb = n_objects * object_bytes / 2**20
+
+        t0 = time.perf_counter()
+        receipts = [store.convert(key, target) for key in objs]
+        fwd_s = time.perf_counter() - t0
+        fwd_exact = all(store.get(key) == ref for key, ref in objs.items())
+        classes_ok = all(store.class_of(key) == target for key in objs)
+
+        t0 = time.perf_counter()
+        for key in objs:
+            store.convert(key, store.default_class)
+        back_s = time.perf_counter() - t0
+        back_exact = all(store.get(key) == ref for key, ref in objs.items())
+        orphans = len(store.audit().orphan_shares)
+
+        # scheduler path: conversions run on leftover drain budget
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        first = next(iter(objs))
+        sched.enqueue_convert(first, target)
+        rep = sched.drain_all(budget_symbols=1 << 20)
+        sched_ok = (rep.converted_objects == 1
+                    and store.class_of(first) == target
+                    and store.get(first) == objs[first])
+
+        sec = {
+            "target": target.key(),
+            "objects": n_objects, "payload_mb": round(total_mb, 3),
+            "to_target_s": round(fwd_s, 4),
+            "to_default_s": round(back_s, 4),
+            "mbps": round(2 * total_mb / (fwd_s + back_s), 2),
+            "bytes_read": sum(r.bytes_read for r in receipts),
+            "degraded_source_stripes": sum(r.degraded_source_stripes
+                                           for r in receipts),
+            "bit_exact": bool(fwd_exact and back_exact and classes_ok),
+            "scheduler_convert_ok": bool(sched_ok),
+            "orphans": orphans,
+        }
+    if not quiet:
+        print(f"[codes] convert <-> {target.key()}: {sec['mbps']} MB/s "
+              f"bit_exact={sec['bit_exact']} orphans={sec['orphans']} "
+              f"scheduler_ok={sec['scheduler_convert_ok']}")
+    return sec
+
+
+def run(fast: bool = False, seed: int = 0, quiet: bool = False) -> dict:
+    classes = grid(fast)
+    stripe_symbols = 1 << 8 if fast else 1 << 10
+    n_objects = 3 if fast else 6
+    object_bytes = 1 << 14 if fast else 1 << 17
+    stream_symbols = 1 << 12 if fast else 1 << 14
+    copy_mbps = memcpy_mbps(8 if fast else 32)
+
+    frontier = [frontier_point(cc, stripe_symbols=stripe_symbols,
+                               n_objects=n_objects,
+                               object_bytes=object_bytes,
+                               stream_symbols=stream_symbols,
+                               copy_mbps=copy_mbps, seed=seed, quiet=quiet)
+                for cc in classes]
+    target = next(cc for cc in classes
+                  if cc.family == FAMILY_PRODUCT_MATRIX)
+    conversion = conversion_section(target, stripe_symbols=stripe_symbols,
+                                    n_objects=n_objects,
+                                    object_bytes=object_bytes, seed=seed,
+                                    quiet=quiet)
+    pm_rows = [r for r in frontier if r["family"] == FAMILY_PRODUCT_MATRIX]
+    rec = {
+        "seed": seed, "fast": fast,
+        "memcpy_mbps": round(copy_mbps, 2),
+        "frontier": frontier,
+        "conversion": conversion,
+        "assertions": {
+            "pm_repair_lt_rs": all(r["repair_ratio_vs_rs"] is not None
+                                   and r["repair_ratio_vs_rs"] < 1.0
+                                   for r in pm_rows),
+            "all_repairs_bit_exact": all(r["bit_exact_after_repair"]
+                                         for r in frontier),
+            "conversion_bit_exact": conversion["bit_exact"],
+            "scheduler_convert_ok": conversion["scheduler_convert_ok"],
+            "orphans_zero": conversion["orphans"] == 0,
+        },
+    }
+    rec["all_passed"] = all(rec["assertions"].values())
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rec = run(fast=args.fast, seed=args.seed, quiet=args.quiet)
+    OUT.mkdir(exist_ok=True)
+    (OUT / "codes.json").write_text(json.dumps(rec, indent=1))
+    out = REPO_ROOT / "BENCH_codes.json"
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"wrote {out}  all_passed={rec['all_passed']} "
+          f"assertions={rec['assertions']}")
+
+
+if __name__ == "__main__":
+    main()

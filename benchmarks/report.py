@@ -129,22 +129,47 @@ def _bench_headline(stem: str, rec) -> str:
                     f"MB/s; drain {d['ticks']} ticks @ "
                     f"{d['budget_symbols_per_tick']} sym/tick, ratio_vs_rs "
                     f"{d['ratio_vs_rs']}")
+        if stem == "BENCH_codes":
+            fr = rec["frontier"]
+            best = min(fr, key=lambda r: r["repair_ratio_vs_rs"])
+            cv = rec["conversion"]
+            return (f"{len(fr)} classes on frontier, best repair vs RS "
+                    f"{best['repair_ratio_vs_rs']:.3f} "
+                    f"({best['family']} n{best['n']}k{best['k']}"
+                    f"d{best['d']}); convert {cv['mbps']} MB/s "
+                    f"bit_exact={cv['bit_exact']} orphans={cv['orphans']}")
     except (KeyError, IndexError, TypeError) as e:
         return f"(unreadable: {type(e).__name__}: {e})"
     keys = list(rec) if isinstance(rec, dict) else f"{len(rec)} rows"
     return f"(unregistered trajectory file: {keys})"
 
 
+# Every trajectory file the fast sweep is expected to produce; a missing
+# one gets an explicit skip row instead of silently vanishing from the
+# table (a CI summary that shrinks should be loud about why).
+EXPECTED_BENCH = ("BENCH_encode", "BENCH_checkpoint", "BENCH_repair",
+                  "BENCH_cluster", "BENCH_pipeline", "BENCH_drills",
+                  "BENCH_serve", "BENCH_shard", "BENCH_store",
+                  "BENCH_codes")
+
+
 def bench_table() -> str:
     """Markdown summary of every repo-root BENCH_*.json — the one table
-    the CI bench-smoke job prints after the fast sweep."""
+    the CI bench-smoke job prints after the fast sweep.  Expected files
+    that are absent get a skip-with-notice row; unexpected extras are
+    still summarized."""
     out = ["| trajectory file | headline |", "|---|---|"]
     files = sorted(REPO_ROOT.glob("BENCH_*.json"))
     if not files:
         return "(no repo-root BENCH_*.json found — run benchmarks.run first)"
+    present = {f.stem for f in files}
     for f in files:
         rec = json.loads(f.read_text())
         out.append(f"| `{f.name}` | {_bench_headline(f.stem, rec)} |")
+    for stem in EXPECTED_BENCH:
+        if stem not in present:
+            out.append(f"| `{stem}.json` | (missing — run "
+                       f"`PYTHONPATH=src python -m benchmarks.run --fast`) |")
     return "\n".join(out)
 
 

@@ -5,7 +5,7 @@ plus the roofline report over the dry-run artifacts.
 
 Emits the repo-root perf-trajectory files BENCH_encode.json,
 BENCH_checkpoint.json, BENCH_repair.json, BENCH_cluster.json,
-BENCH_store.json and BENCH_shard.json, and prints
+BENCH_store.json, BENCH_codes.json and BENCH_shard.json, and prints
 ``name,us_per_call,derived`` CSV rows at
 the end.  Unknown files under results/ (superseded artifacts, benches
 missing from KNOWN_RESULTS) fail the run before any sweep starts.
@@ -18,11 +18,11 @@ import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from benchmarks import (bench_checkpoint, bench_cluster, bench_drills,
-                        bench_encode_throughput, bench_field_size,
-                        bench_pipeline, bench_regeneration,
-                        bench_repair_bandwidth, bench_serve, bench_shard,
-                        bench_store, roofline)
+from benchmarks import (bench_checkpoint, bench_cluster, bench_codes,
+                        bench_drills, bench_encode_throughput,
+                        bench_field_size, bench_pipeline,
+                        bench_regeneration, bench_repair_bandwidth,
+                        bench_serve, bench_shard, bench_store, roofline)
 
 OUT = pathlib.Path(__file__).resolve().parent / "results"
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -32,9 +32,10 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # been deleted (the field_scaling.json case) or a new bench that forgot
 # to register here — both fail the run loudly instead of silently
 # shipping stale JSON.
-KNOWN_RESULTS = {"checkpoint", "cluster", "drills", "encode_throughput",
-                 "field_size", "pipeline", "regeneration",
-                 "repair_bandwidth", "roofline", "serve", "shard", "store"}
+KNOWN_RESULTS = {"checkpoint", "cluster", "codes", "drills",
+                 "encode_throughput", "field_size", "pipeline",
+                 "regeneration", "repair_bandwidth", "roofline", "serve",
+                 "shard", "store"}
 
 
 def check_results_dir() -> None:
@@ -157,6 +158,21 @@ def main() -> None:
                      f"{(time.perf_counter()-t0)*1e6/len(rows):.0f}",
                      f"put_mbps={rows[-1]['put_mbps']};"
                      f"drain_ratio_vs_rs={rows[-1]['drain'][0]['ratio_vs_rs']}"))
+
+    print("== code families: frontier + conversion + roofline =========")
+    t0 = time.perf_counter()
+    # the pm-beats-RS / bit-exact-conversion / zero-orphan gates are in
+    # rec["assertions"]; codes-smoke re-checks the emitted artifact
+    rec = bench_codes.run(fast=args.fast, quiet=quiet)
+    (OUT / "codes.json").write_text(json.dumps(rec, indent=1))
+    (REPO_ROOT / "BENCH_codes.json").write_text(json.dumps(rec, indent=1))
+    assert rec["all_passed"], f"codes assertions failed: {rec['assertions']}"
+    best = min(rec["frontier"], key=lambda r: r["repair_ratio_vs_rs"])
+    csv_rows.append(("codes",
+                     f"{(time.perf_counter()-t0)*1e6:.0f}",
+                     f"best_repair_vs_rs={best['repair_ratio_vs_rs']};"
+                     f"convert_mbps={rec['conversion']['mbps']};"
+                     f"orphans={rec['conversion']['orphans']}"))
 
     print("== crash consistency: drills + zero-stall checkpointing ===")
     t0 = time.perf_counter()

@@ -171,6 +171,50 @@ def gauss_det(mat: np.ndarray, p: int = DEFAULT_P) -> int:
     return int(det % p)
 
 
+def nullspace(mat: np.ndarray, p: int = DEFAULT_P) -> np.ndarray:
+    """Basis of the right null space of ``mat`` over GF(p) (numpy, host).
+
+    Returns an (n_cols, nullity) matrix N with ``mat @ N == 0 (mod p)``
+    whose columns are the canonical RREF basis vectors (free column j
+    gets a 1, pivot rows carry the negated reduced entries).  Used by the
+    product-matrix code family to shorten the parent (n', k', d') code:
+    the admissible messages are exactly the null space of the deleted
+    nodes' share map (DESIGN.md §15.2).
+    """
+    a = np.asarray(mat, dtype=np.int64) % p
+    if a.ndim != 2:
+        raise ValueError(f"matrix required, got shape {a.shape}")
+    rows, cols = a.shape
+    a = a.copy()
+    pivots: list[int] = []
+    r = 0
+    for c in range(cols):
+        if r == rows:
+            break
+        piv = None
+        for i in range(r, rows):
+            if a[i, c] % p:
+                piv = i
+                break
+        if piv is None:
+            continue
+        if piv != r:
+            a[[r, piv]] = a[[piv, r]]
+        a[r] = (a[r] * pow(int(a[r, c]), p - 2, p)) % p
+        for i in range(rows):
+            if i != r and a[i, c] % p:
+                a[i] = (a[i] - a[i, c] * a[r]) % p
+        pivots.append(c)
+        r += 1
+    free = [c for c in range(cols) if c not in pivots]
+    basis = np.zeros((cols, len(free)), dtype=np.int64)
+    for j, fc in enumerate(free):
+        basis[fc, j] = 1
+        for i, pc in enumerate(pivots):
+            basis[pc, j] = (-a[i, fc]) % p
+    return (basis % p).astype(np.int32)
+
+
 def solve(mat: np.ndarray, rhs: np.ndarray, p: int = DEFAULT_P) -> np.ndarray:
     """Solve mat @ x = rhs over GF(p).  rhs may be a matrix of columns.
 
@@ -254,7 +298,7 @@ def packed_nbytes(sym: np.ndarray) -> int:
 
 __all__ = [
     "DEFAULT_P", "add", "sub", "mul", "neg", "pow_", "inv", "matmul",
-    "matvec", "gauss_inverse", "gauss_det", "solve",
+    "matvec", "gauss_inverse", "gauss_det", "nullspace", "solve",
     "bytes_to_symbols", "symbols_to_bytes",
     "pack257", "unpack257", "pack257_rows", "unpack257_rows", "packed_nbytes",
 ]

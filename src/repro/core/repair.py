@@ -32,8 +32,10 @@ full data AND every lost redundancy block come out of one decode matmul.
 from __future__ import annotations
 
 import functools
+import threading
+import weakref
 from collections import OrderedDict
-from typing import Callable, NamedTuple, Sequence
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -102,20 +104,61 @@ class DecodeCacheInfo(NamedTuple):
     maxsize: int
 
 
+# Every live DecodeInverseCache, for the per-family stats surface
+# (DESIGN.md §15.4): the process-wide planner registry already exposes
+# plan_stats(); decode_cache_stats() is its decode-side counterpart.
+_CACHE_LOCK = threading.Lock()
+_LIVE_CACHES: "weakref.WeakSet[DecodeInverseCache]" = weakref.WeakSet()
+
+
+def decode_cache_stats() -> dict[str, DecodeCacheInfo]:
+    """Aggregate decode-inverse cache counters per code-family identity
+    — one :class:`DecodeCacheInfo` per distinct family key across every
+    live cache (two families with overlapping (k, p) report separately;
+    that is the point of family-keyed entries)."""
+    agg: dict[str, list[int]] = {}
+    with _CACHE_LOCK:
+        caches = list(_LIVE_CACHES)
+    for c in caches:
+        row = agg.setdefault(c.family, [0, 0, 0, 0])
+        info = c.cache_info()
+        row[0] += info.hits
+        row[1] += info.misses
+        row[2] += info.size
+        row[3] += info.maxsize
+    return {fam: DecodeCacheInfo(*row) for fam, row in sorted(agg.items())}
+
+
 class DecodeInverseCache:
-    """LRU of reconstruction inverses keyed by the sorted k-node subset.
+    """LRU of reconstruction inverses keyed by (code family, sorted
+    k-node subset).
 
     The any-k system matrix [I^s | M^s]^T is determined by the *set* of
     nodes read; there are only C(2k, k) subsets (12870 at k = 8) and real
     restore/scrub traffic reuses a handful, so the O(n^3) host-side
     ``gf.gauss_inverse`` runs once per subset instead of once per call.
 
+    Entry keys carry the owning code's **family identity** — not just
+    the subset — so two code families with overlapping (k, p) can never
+    alias an inverse (DESIGN.md §15.4), and :func:`decode_cache_stats`
+    can report hit rates per family.
+
     Parameters
     ----------
-    spec : CodeSpec
-        The code whose system matrices are inverted.
+    spec : CodeSpec, optional
+        The double-circulant code whose system matrices are inverted.
+        Omitted by non-circulant families, which pass ``matrix_fn``.
     maxsize : int
         LRU capacity; least-recently-used subsets are evicted beyond it.
+    family : str, optional
+        Family identity string baked into every entry key; defaults to
+        the double-circulant identity derived from ``spec``.
+    matrix_fn : callable, optional
+        ``subset -> (square ndarray)`` system-matrix builder for
+        generator-matrix families (e.g. product-matrix MSR); mutually
+        exclusive with ``spec``.
+    k, p : int, optional
+        Subset size / field modulus when ``matrix_fn`` is used.
 
     Attributes
     ----------
@@ -128,17 +171,40 @@ class DecodeInverseCache:
         permutation of the same k nodes shares one entry.
     """
 
-    def __init__(self, spec: CodeSpec, maxsize: int = 128):
+    def __init__(self, spec: Optional[CodeSpec] = None, maxsize: int = 128,
+                 *, family: Optional[str] = None,
+                 matrix_fn: Optional[Callable] = None,
+                 k: Optional[int] = None, p: Optional[int] = None):
         self.spec = spec
-        self.k, self.n, self.p = spec.k, spec.n, spec.p
-        self._m = spec.matrix_m()               # (n, n)
+        if spec is not None:
+            if matrix_fn is not None:
+                raise ValueError("pass spec or matrix_fn, not both")
+            self.k, self.n, self.p = spec.k, spec.n, spec.p
+            self._m = spec.matrix_m()           # (n, n)
+            self._matrix_fn = None
+            family = family or (f"double-circulant[n{spec.n},k{spec.k},"
+                                f"p{spec.p}]")
+        else:
+            if matrix_fn is None or k is None or p is None:
+                raise ValueError("matrix_fn caches need matrix_fn, k and p")
+            self.k, self.p = int(k), int(p)
+            self.n = None
+            self._matrix_fn = matrix_fn
+            family = family or "generator-matrix"
+        self.family = str(family)
         self.maxsize = max(1, maxsize)
-        self._entries: OrderedDict[tuple[int, ...], np.ndarray] = OrderedDict()
+        self._entries: OrderedDict[tuple, np.ndarray] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        with _CACHE_LOCK:
+            _LIVE_CACHES.add(self)
 
     def system_matrix(self, subset: tuple[int, ...]) -> np.ndarray:
-        """[I columns | M columns]^T for the (sorted) subset — (2k, n)."""
+        """The square decode system for the (sorted) subset: the
+        circulant [I columns | M columns]^T (2k, n), or the family's
+        ``matrix_fn`` rows for generator-matrix codes."""
+        if self._matrix_fn is not None:
+            return np.asarray(self._matrix_fn(subset), np.int64) % self.p
         cols = [i - 1 for i in subset]
         return np.concatenate(
             [np.eye(self.n, dtype=np.int64)[:, cols], self._m[:, cols]],
@@ -146,19 +212,21 @@ class DecodeInverseCache:
         ).T % self.p
 
     def inverse(self, subset: Sequence[int]) -> np.ndarray:
-        """Cached (n, n) inverse of the subset's system matrix."""
+        """Cached inverse of the subset's system matrix — (n, n) for the
+        circulant family, (k*q, k*q) for generator-matrix families."""
         key = tuple(subset)
         if sorted(set(key)) != list(key) or len(key) != self.k:
             raise ValueError(f"need a sorted set of k={self.k} distinct "
                              f"nodes, got {key}")
-        hit = self._entries.get(key)
+        entry_key = (self.family,) + key       # family identity in the key
+        hit = self._entries.get(entry_key)
         if hit is not None:
             self.hits += 1
-            self._entries.move_to_end(key)
+            self._entries.move_to_end(entry_key)
             return hit
         self.misses += 1
         inv = gf.gauss_inverse(self.system_matrix(key), self.p)
-        self._entries[key] = inv
+        self._entries[entry_key] = inv
         if len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
         return inv
@@ -410,4 +478,4 @@ class RepairEngine:
 
 
 __all__ = ["RepairEngine", "DecodeInverseCache", "DecodeCacheInfo",
-           "build_repair_matrix"]
+           "build_repair_matrix", "decode_cache_stats"]

@@ -275,6 +275,13 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.compiles = 0
+        # per code-family accounting (DESIGN.md §15.4): ops dispatched
+        # with a `tag` (the family identity string) count under that
+        # tag; untagged ops — the pre-existing double-circulant paths —
+        # under "default".  Tagged ops also mix the tag into the plan
+        # key, so families with overlapping shapes never share (or
+        # fight over) an executable slot.
+        self.family_stats: dict[str, list[int]] = {}
 
     # ------------------------------------------------------------- plumbing
     def bucket(self, s: int) -> int:
@@ -319,23 +326,44 @@ class PlanCache:
                          out_shardings=self.mesh.sharding(rule.out_specs))
         return jf.lower(*self._i32(*shapes)).compile()
 
-    def _exe(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+    def _exe(self, key: tuple, build: Callable[[], Callable],
+             tag: Optional[str] = None) -> Callable:
+        fam = tag or "default"
         with self._lock:
+            row = self.family_stats.setdefault(fam, [0, 0, 0])
             exe = self._plans.get(key)
             if exe is not None:
                 self.hits += 1
+                row[0] += 1
                 return exe
             self.misses += 1
+            row[1] += 1
             exe = build()
             self.compiles += 1
+            row[2] += 1
             self._plans[key] = exe
             return exe
+
+    @staticmethod
+    def _tagged(key: tuple, tag: Optional[str]) -> tuple:
+        """Mix a family tag into a plan key.  ``None`` (every
+        pre-existing caller) leaves the key byte-identical — no
+        recompiles ride along with the tagging feature."""
+        return key if tag is None else key + (tag,)
 
     def plan_stats(self) -> PlanStats:
         return PlanStats(self.hits, self.misses, self.compiles)
 
+    def plan_stats_by_family(self) -> dict[str, PlanStats]:
+        """Per-family hit/miss/compile counters (ops dispatched without
+        a tag land under ``"default"``)."""
+        with self._lock:
+            return {fam: PlanStats(*row)
+                    for fam, row in sorted(self.family_stats.items())}
+
     def reset_stats(self) -> None:
         self.hits = self.misses = self.compiles = 0
+        self.family_stats = {}
 
     def clear(self) -> None:
         with self._lock:
@@ -346,13 +374,15 @@ class PlanCache:
         return len(self._plans)
 
     # ------------------------------------------------------------------ ops
-    def matmul(self, mat, blocks) -> PlanResult:
+    def matmul(self, mat, blocks, *, tag: Optional[str] = None) -> PlanResult:
         """(mat @ blocks) mod p — the decode-side workhorse.
 
         ``mat`` is a small runtime operand (cached decode inverses, the
         combined decode+re-encode matrix, row subsets for degraded
         reads); its shape is part of the plan key, its VALUES are not.
         Only ``blocks`` (the stream operand) is padded and donated.
+        ``tag`` is the dispatching code family's identity — mixed into
+        the plan key and the per-family stats (DESIGN.md §15.4).
         """
         mat = np.asarray(mat, np.int32)
         blocks = np.asarray(blocks, np.int32)
@@ -360,7 +390,7 @@ class PlanCache:
         if not _ENABLED:
             return PlanResult(self.backend.matmul(mat, blocks, self.p), s)
         b, pad = self.stream_pad(s)
-        key = ("matmul", mat.shape, blocks.shape[:-1], b)
+        key = self._tagged(("matmul", mat.shape, blocks.shape[:-1], b), tag)
         # donation is only usable when an output can alias the donated
         # buffer, i.e. the product has the stream operand's exact shape
         # (square decode matrices: the (n, n) any-k inverse) — donating
@@ -374,10 +404,11 @@ class PlanCache:
                                  (mat.shape, blocks.shape[:-1] + (pad,)),
                                  donate)
 
-        return PlanResult(self._exe(key, build)(mat, _pad_last(blocks, pad)),
-                          s)
+        return PlanResult(
+            self._exe(key, build, tag)(mat, _pad_last(blocks, pad)), s)
 
-    def circulant_encode(self, data, c) -> PlanResult:
+    def circulant_encode(self, data, c, *, tag: Optional[str] = None,
+                         ) -> PlanResult:
         """The paper's eq. (2) encode at a bucketed stream extent.
 
         The coefficient tuple ``c`` is static in the underlying kernels,
@@ -391,7 +422,7 @@ class PlanCache:
             return PlanResult(self.backend.circulant_encode(data, c, self.p),
                               s)
         b, pad = self.stream_pad(s)
-        key = ("circ", data.shape[0], c, b)
+        key = self._tagged(("circ", data.shape[0], c, b), tag)
 
         def build():
             fn = lambda d: self.backend.circulant_encode(d, c, self.p)
@@ -399,7 +430,7 @@ class PlanCache:
                                  ((data.shape[0], pad),),
                                  (0,) if self.donate else ())
 
-        return PlanResult(self._exe(key, build)(_pad_last(data, pad)), s)
+        return PlanResult(self._exe(key, build, tag)(_pad_last(data, pad)), s)
 
     def regenerate(self, rmat, r_prev, next_data) -> PlanResult:
         """The fused (2, k+1) repair-matrix application (DESIGN.md §4):
@@ -510,6 +541,22 @@ def plan_stats() -> PlanStats:
     return PlanStats(h, m, c)
 
 
+def plan_stats_by_family() -> dict[str, PlanStats]:
+    """Per-family hit/miss/compile counters aggregated over every live
+    planner (DESIGN.md §15.4) — untagged double-circulant traffic lands
+    under ``"default"``, each other family under its identity string."""
+    agg: dict[str, list[int]] = {}
+    with _LOCK:
+        planners = list(_REGISTRY.values())
+    for pc in planners:
+        for fam, st in pc.plan_stats_by_family().items():
+            row = agg.setdefault(fam, [0, 0, 0])
+            row[0] += st.hits
+            row[1] += st.misses
+            row[2] += st.compiles
+    return {fam: PlanStats(*row) for fam, row in sorted(agg.items())}
+
+
 def reset_plan_stats() -> None:
     with _LOCK:
         planners = list(_REGISTRY.values())
@@ -529,6 +576,7 @@ __all__ = [
     "BUCKET_MIN", "BUCKET_RATIO", "BATCH_BUCKET_MIN",
     "bucket_symbols", "make_regen_fn",
     "PlanCache", "PlanResult", "PlanStats",
-    "get_planner", "plan_stats", "reset_plan_stats", "clear_planners",
+    "get_planner", "plan_stats", "plan_stats_by_family",
+    "reset_plan_stats", "clear_planners",
     "set_planning", "planning_enabled", "planning_disabled",
 ]

@@ -414,6 +414,14 @@ class ReadFrontEnd:
             except KeyError as e:           # includes UnknownKeyError
                 self._fail_tickets(tickets, e)
                 continue
+            cc = getattr(stat, "code_class", None)
+            if cc is not None and cc != store.default_class:
+                # non-default code family (DESIGN.md §15.1): the hedged /
+                # cross-key-coalesced machinery below is specific to the
+                # default class's share geometry — serve through the
+                # store's family-generic degraded read path instead
+                self._serve_generic(key, tickets)
+                continue
             plan = {"stat": stat, "tickets": tickets,
                     "deadline_end": max(tk.submitted_t + tk.deadline_s
                                         for tk in tickets),
@@ -595,6 +603,32 @@ class ReadFrontEnd:
             return True
         return share_crc(share[1], share[2]) == \
             stat.share_crcs[t][share[0] - 1]
+
+    def _serve_generic(self, key: str, tickets: list) -> None:
+        """Serve a non-default-code-class key through the store's
+        family-generic read path (systematic reuse + grouped decode),
+        resolving tickets with a receipt built from the GetResult."""
+        try:
+            res = self.store.get_ext(key)
+        except (KeyError, RuntimeError) as e:
+            self.store.metrics.record_read("failed", 0.0, 0)
+            self._fail_tickets(tickets, e)
+            return
+        for tk in tickets:
+            wall = self.clock() - tk.submitted_t
+            met = wall <= tk.deadline_s
+            tk.obj = res.obj
+            tk.receipt = ReadReceipt(
+                key=key, wall_latency_s=wall, deadline_s=tk.deadline_s,
+                deadline_met=met, degraded_stripes=res.degraded_stripes,
+                coalesced=len(tickets))
+            tk.done = True
+            self.metrics.served += 1
+            self.metrics.wall_latencies.append(wall)
+            if not met:
+                self.metrics.deadline_misses += 1
+        self.metrics.coalesced_requests += len(tickets) - 1
+        self.metrics.degraded_stripes += res.degraded_stripes
 
     def _resolve_key(self, key: str, plan: dict) -> None:
         obj = self.store.materialize(plan["stat"], plan["blocks"])

@@ -18,14 +18,15 @@ repair, decode-inverse cache) into a multi-object storage subsystem:
   windowed `regenerate_batch` dispatches, throttled by a link-bandwidth
   budget.
 """
-from .object_store import (FAILED, UP, CodedObjectStore, GetResult,
-                           ObjectStat, ShareIntegrityError, StoreAudit,
-                           StoreMetrics, UnknownKeyError, share_crc)
+from .object_store import (FAILED, UP, CodedObjectStore, ConvertReceipt,
+                           GetResult, ObjectStat, ShareIntegrityError,
+                           StoreAudit, StoreMetrics, UnknownKeyError,
+                           share_crc)
 from .scheduler import DrainReport, RepairScheduler
-from .stripes import StripeManager, StripeMap
+from .stripes import StripeCodec, StripeManager, StripeMap
 
-__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreAudit",
-           "StoreMetrics", "UnknownKeyError", "ShareIntegrityError",
-           "share_crc",
-           "RepairScheduler", "DrainReport", "StripeManager",
+__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "ConvertReceipt",
+           "StoreAudit", "StoreMetrics", "UnknownKeyError",
+           "ShareIntegrityError", "share_crc",
+           "RepairScheduler", "DrainReport", "StripeManager", "StripeCodec",
            "StripeMap", "UP", "FAILED"]

@@ -35,6 +35,8 @@ from typing import Any, Callable, Iterator, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.codes import CodeClass, default_code_class, make_code
+from repro.codes.double_circulant import DoubleCirculantCode
 from repro.core import baselines, gf, placement
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
@@ -44,7 +46,7 @@ from repro.exec.pipeline import Pipeline
 from repro.io.faults import FaultInjector
 from repro.io.retry import RetryPolicy, RetryStats
 
-from .stripes import StripeManager, StripeMap
+from .stripes import StripeCodec, StripeManager, StripeMap
 
 UP, FAILED = "up", "failed"
 
@@ -131,6 +133,10 @@ class ObjectStat:
     shape: Optional[tuple[int, ...]] = None
     meta: dict = dataclasses.field(default_factory=dict)
     share_crcs: Optional[list] = None
+    # the object's code class (DESIGN.md §15.1); None means the store's
+    # default double-circulant class (stats that predate per-object
+    # classes keep working)
+    code_class: Optional[CodeClass] = None
 
 
 @dataclasses.dataclass
@@ -140,6 +146,31 @@ class GetResult:
     bytes_read: int
     degraded_stripes: int
     latency_s: float
+
+
+@dataclasses.dataclass
+class ConvertReceipt:
+    """:meth:`CodedObjectStore.convert` receipt (DESIGN.md §15.3).
+
+    ``degraded_source_stripes`` counts source stripes that needed a
+    decode during the read-out — every other stripe's payload was
+    reused straight from systematic shares (the structure-aware fast
+    path).  ``bytes_read`` is the read-side traffic; the write side is
+    a normal put (accounted in ``store.metrics``).
+    """
+    key: str
+    source: CodeClass
+    target: CodeClass
+    payload_bytes: int
+    source_stripes: int
+    target_stripes: int
+    degraded_source_stripes: int
+    bytes_read: int
+    latency_s: float
+
+    @property
+    def converted(self) -> bool:
+        return self.source != self.target
 
 
 @dataclasses.dataclass
@@ -264,6 +295,11 @@ class CodedObjectStore:
         # persistent overlapped I/O⇄compute engine (DESIGN.md §11.3):
         # pool threads are reused across put/get/repair calls
         self.pipeline = Pipeline(io_workers=io_workers, depth=pipeline_depth)
+        # per-object code classes (DESIGN.md §15): objects default to the
+        # store's double-circulant class and take the battle-tested legacy
+        # paths; other classes dispatch through their family's codec
+        self.default_class = default_code_class(spec)
+        self._codecs: dict[str, StripeCodec] = {}
 
     @staticmethod
     def _default_racks(spec: CodeSpec, n_nodes: int) -> int:
@@ -386,14 +422,54 @@ class CodedObjectStore:
         for _ in range(attempts):
             share = self.read_share(phys, key, t)
             if stat is None or stat.share_crcs is None \
-                    or share_crc(share[1], share[2]) == \
+                    or self._share_crc_of(stat, share) == \
                     stat.share_crcs[t][share[0] - 1]:
                 return share
         raise ShareIntegrityError(phys, key, t, attempts)
 
+    # ------------------------------------------------------- code classes
+    def class_of(self, key: str) -> CodeClass:
+        """The code class ``key`` was stored under (DESIGN.md §15.1)."""
+        return self._stat_class(self.stat(key))
+
+    def _stat_class(self, stat: ObjectStat) -> CodeClass:
+        return stat.code_class if stat.code_class is not None \
+            else self.default_class
+
+    def _is_default(self, cc: CodeClass) -> bool:
+        return cc == self.default_class
+
+    def _codec_for(self, cc: CodeClass) -> StripeCodec:
+        """The (cached) stripe codec of a code class.  The default class
+        wraps the store's live code instance, so its planner, decode
+        inverses and plan keys are shared with the legacy paths; other
+        classes build their family from the registry on the same layout
+        and mesh (raises if the layout cannot place them rack-safely)."""
+        codec = self._codecs.get(cc.key())
+        if codec is None:
+            if self._is_default(cc):
+                code = DoubleCirculantCode(cc, inner=self.code)
+            else:
+                code = make_code(cc, mesh=self.code.mesh)
+            codec = StripeCodec(code, self.layout, stripe_symbols=self.S)
+            self._codecs[cc.key()] = codec
+        return codec
+
+    def codec_of(self, key: str) -> StripeCodec:
+        """The stripe codec serving ``key`` (placement, geometry, and the
+        live :class:`~repro.codes.base.ErasureCode`)."""
+        return self._codec_for(self.class_of(key))
+
+    def _share_crc_of(self, stat: ObjectStat, share: list) -> int:
+        """Put-time CRC formula of a share under the object's family."""
+        cc = self._stat_class(stat)
+        if self._is_default(cc):
+            return share_crc(share[1], share[2])
+        return self._codec_for(cc).code.share_crc_blocks(share[1:])
+
     # -------------------------------------------------------------- put path
     def put(self, key: str, obj: Any, *, meta: Optional[dict] = None,
-            ) -> ObjectStat:
+            code_class: Optional[CodeClass] = None) -> ObjectStat:
         """Store ``obj`` (bytes or numpy array) under ``key``.
 
         The object is striped and encoded in ``put_tile_stripes``-wide
@@ -411,6 +487,10 @@ class CodedObjectStore:
         (injected ``GiveUpError``, encode error) leaves the store
         exactly as it was: no partial shares, and on overwrite the old
         object still fully readable.
+
+        ``code_class`` selects the erasure-code family the object is
+        encoded with (DESIGN.md §15.1); ``None`` (and the store's
+        default class) keeps the double-circulant fast paths.
         """
         dtype = shape = None
         if isinstance(obj, np.ndarray):
@@ -421,6 +501,9 @@ class CodedObjectStore:
         else:
             raise TypeError(f"store objects are bytes or numpy arrays, "
                             f"got {type(obj).__name__}")
+        cc = code_class if code_class is not None else self.default_class
+        if not self._is_default(cc):
+            return self._put_generic(key, payload, dtype, shape, meta, cc)
         blocks, smap = self.stripes.chunk(payload)
         base = self._next_stripe
         self._next_stripe += smap.n_stripes
@@ -468,11 +551,71 @@ class CodedObjectStore:
         stat = ObjectStat(key=key, size_bytes=smap.orig_bytes,
                           n_stripes=smap.n_stripes, stripe_symbols=self.S,
                           dtype=dtype, shape=shape, meta=dict(meta or {}),
-                          share_crcs=crcs)
+                          share_crcs=crcs, code_class=self.default_class)
         stat.meta["_base_stripe"] = base
         self._stats[key] = stat
         self.metrics.record_put(smap.n_stripes * self.n * self.S,
                                 2 * smap.n_stripes * self.n * self.S)
+        return stat
+
+    def _put_generic(self, key: str, payload: bytes, dtype, shape,
+                     meta: Optional[dict], cc: CodeClass) -> ObjectStat:
+        """Family-generic put (DESIGN.md §15.1): same windowed
+        encode-overlaps-placement pipeline and the same commit-last
+        atomicity as the default path, dispatched through the object's
+        codec.  Shares are ``[code_node, blk_0, ..., blk_{q-1}]``."""
+        codec = self._codec_for(cc)
+        code = codec.code
+        n, q, d_blocks = codec.n, code.share_blocks, code.data_blocks
+        blocks, smap = codec.chunk(payload)
+        base = self._next_stripe
+        self._next_stripe += smap.n_stripes
+        tile = self.put_tile_stripes
+
+        def flatten_window(t0: int):
+            tb = blocks[t0: t0 + tile]
+            return tb.shape[0], codec.flatten(tb)
+
+        def encode_window(t0: int, flat):
+            tt, view = flat
+            return tt, code.encode_derived_planned(view)
+
+        staged: list[tuple[int, int, list]] = []    # (phys, t, share)
+        crcs: list[list[int]] = [[0] * n for _ in range(smap.n_stripes)]
+
+        def place_window(t0: int, res) -> None:
+            tt, planned = res
+            derived = codec.unflatten_rows(planned.host(),
+                                           code.derived_rows, tt)
+            for t in range(t0, t0 + tt):
+                pl = codec.placement(base + t)
+                for j, phys in enumerate(pl):
+                    blks = code.stripe_share_blocks(blocks[t],
+                                                    derived[t - t0], j + 1)
+                    crcs[t][j] = code.share_crc_blocks(blks)
+                    if self.is_up(phys):
+                        self._guard("write", phys)
+                        staged.append((phys, t, [j + 1] +
+                                       [np.asarray(b, np.int32).copy()
+                                        for b in blks]))
+
+        self.pipeline.map(range(0, smap.n_stripes, tile),
+                          encode_window, place_window, read=flatten_window)
+        # commit point — identical semantics to the default path: retire
+        # the old generation, install, publish the stat entry LAST
+        if key in self._stats:
+            self.delete(key)
+        for phys, t, share in staged:
+            if self.is_up(phys):
+                self._shares[phys - 1][(key, t)] = share
+        stat = ObjectStat(key=key, size_bytes=smap.orig_bytes,
+                          n_stripes=smap.n_stripes, stripe_symbols=self.S,
+                          dtype=dtype, shape=shape, meta=dict(meta or {}),
+                          share_crcs=crcs, code_class=cc)
+        stat.meta["_base_stripe"] = base
+        self._stats[key] = stat
+        self.metrics.record_put(smap.n_stripes * d_blocks * self.S,
+                                smap.n_stripes * n * q * self.S)
         return stat
 
     # -------------------------------------------------------------- get path
@@ -500,6 +643,8 @@ class CodedObjectStore:
             Some stripe has fewer than k shares left (data loss).
         """
         stat = self.stat(key)
+        if not self._is_default(self._stat_class(stat)):
+            return self._get_generic(stat)
         base = stat.meta["_base_stripe"]
         blocks = np.zeros((stat.n_stripes, self.n, self.S), np.int32)
         # group degraded stripes by failure pattern
@@ -571,12 +716,109 @@ class CodedObjectStore:
                          degraded_stripes=sum(len(v) for v in groups.values()),
                          latency_s=latency)
 
+    def _get_generic(self, stat: ObjectStat) -> GetResult:
+        """Family-generic read (DESIGN.md §15.1): systematic payload
+        rows served raw, missing rows decoded through the object's
+        family — grouped by failure pattern, one cached-inverse matmul
+        per group over symbol-axis-concatenated downloads, exactly the
+        default path's shape."""
+        key = stat.key
+        cc = self._stat_class(stat)
+        codec = self._codec_for(cc)
+        code = codec.code
+        n, k, q = codec.n, codec.k, code.share_blocks
+        d_blocks = code.data_blocks
+        base = stat.meta["_base_stripe"]
+        locs = [code.data_location(m) for m in range(d_blocks)]
+        blocks = np.zeros((stat.n_stripes, d_blocks, self.S), np.int32)
+        groups: dict[tuple, list[int]] = {}
+        latency = 0.0
+        bytes_read = 0
+        for t in range(stat.n_stripes):
+            pl = codec.placement(base + t)
+            present = self._present_code_nodes(key, t, pl)
+            missing_rows = tuple(m for m, (j, _b) in enumerate(locs)
+                                 if j not in present)
+            if not missing_rows:
+                for m, (j, b) in enumerate(locs):
+                    blocks[t, m] = self._read_share(pl[j - 1], key, t)[1 + b]
+                lat = self.link.fetch_s(q * self.S)
+                self.metrics.record_read("systematic", lat, d_blocks * self.S)
+                latency = max(latency, lat)
+                bytes_read += d_blocks * self.S
+                continue
+            if len(present) < k:
+                self.metrics.record_read("failed", 0.0, 0)
+                raise RuntimeError(
+                    f"data loss: stripe {t} of {key!r} has only "
+                    f"{len(present)} of k={k} shares")
+            helpers = tuple(sorted(present)[:k])
+            sys_lat = self.link.fetch_s(q * self.S)
+            for m, (j, b) in enumerate(locs):
+                if j in present:
+                    blocks[t, m] = self._read_share(pl[j - 1], key, t)[1 + b]
+                    self.metrics.record_read("systematic", sys_lat, self.S)
+                    bytes_read += self.S
+            latency = max(latency, sys_lat)
+            groups.setdefault((helpers, missing_rows), []).append(t)
+        acct = {"bytes": 0, "latency": 0.0}
+
+        def gather(item):
+            (helpers, _missing), ts = item
+            return np.concatenate(
+                [self._downloads_generic(key, t, helpers, codec)
+                 for t in ts], axis=1)                    # (k*q, G*S)
+
+        def decode(item, downloads):
+            (helpers, missing), _ts = item
+            return code.apply_planned(
+                code.decode_rows(helpers, list(missing)), downloads)
+
+        def scatter(item, res) -> None:
+            (_helpers, missing), ts = item
+            decoded = res.host()
+            for g, t in enumerate(ts):
+                blocks[t, list(missing)] = \
+                    decoded[:, g * self.S:(g + 1) * self.S]
+            lat = self.link.degraded_read_s(q * self.S, [1.0] * k)
+            for _ in ts:
+                self.metrics.record_read("degraded", lat, k * q * self.S)
+            acct["latency"] = max(acct["latency"], lat)
+            acct["bytes"] += k * q * self.S * len(ts)
+
+        self.pipeline.map(groups.items(), decode, scatter, read=gather)
+        latency = max(latency, acct["latency"])
+        bytes_read += acct["bytes"]
+        return GetResult(obj=self.materialize(stat, blocks),
+                         bytes_read=bytes_read,
+                         degraded_stripes=sum(len(v) for v in groups.values()),
+                         latency_s=latency)
+
+    def _downloads_generic(self, key: str, t: int, helpers: Sequence[int],
+                           codec: StripeCodec) -> np.ndarray:
+        """(k*q, S) stacked helper blocks in the family's
+        ``helper_block_ids`` order — CRC-verified like the default
+        path's ``_downloads``."""
+        base = self.stat(key).meta["_base_stripe"]
+        pl = codec.placement(base + t)
+        shares = {j: self._read_share_verified(pl[j - 1], key, t)
+                  for j in helpers}
+        return np.stack([np.asarray(shares[j][1 + b], np.int32)
+                         for j, b in codec.code.helper_block_ids(helpers)])
+
     def materialize(self, stat: ObjectStat, blocks: np.ndarray) -> Any:
-        """(n_stripes, n, S) data blocks -> the stored object (bytes or
+        """(n_stripes, D, S) data blocks -> the stored object (bytes or
         the original array type) — the shared tail of every read path
-        (``get_ext`` and the serving front end's coalesced decodes)."""
-        payload = self.stripes.assemble(
-            blocks, StripeMap(stat.size_bytes, stat.n_stripes, self.S))
+        (``get_ext`` and the serving front end's coalesced decodes).
+        D is the object's family payload width (n for the default
+        double-circulant class)."""
+        cc = self._stat_class(stat)
+        if self._is_default(cc):
+            payload = self.stripes.assemble(
+                blocks, StripeMap(stat.size_bytes, stat.n_stripes, self.S))
+        else:
+            payload = self._codec_for(cc).assemble(
+                blocks, StripeMap(stat.size_bytes, stat.n_stripes, self.S))
         if stat.dtype is None:
             return payload
         return np.frombuffer(payload, dtype=np.dtype(stat.dtype)) \
@@ -589,8 +831,15 @@ class CodedObjectStore:
 
     def placement_of(self, key: str, t: int) -> tuple[int, ...]:
         """Physical nodes hosting stripe ``t`` of ``key``, by code node
-        (index j holds code node j+1) — the front end's placement seam."""
-        return self.stripes.placement(self.stat(key).meta["_base_stripe"] + t)
+        (index j holds code node j+1) — the front end's placement seam.
+        Length is the object's family n (the default class's n for
+        legacy objects)."""
+        stat = self.stat(key)
+        base = stat.meta["_base_stripe"]
+        cc = self._stat_class(stat)
+        if self._is_default(cc):
+            return self.stripes.placement(base + t)
+        return self._codec_for(cc).placement(base + t)
 
     def present_code_nodes(self, key: str, t: int) -> set[int]:
         """Code nodes (1-indexed) of stripe (key, t) whose share is
@@ -645,6 +894,49 @@ class CodedObjectStore:
         leaves = placement.bytes_to_leaves(payload, stat.meta["leaves"])
         return jax.tree_util.tree_unflatten(stat.meta["treedef"], leaves)
 
+    # ------------------------------------------------------- code conversion
+    def convert(self, key: str,
+                target_class: CodeClass) -> ConvertReceipt:
+        """Re-encode ``key`` under ``target_class``, online and atomic
+        (DESIGN.md §15.3).
+
+        The object is read through the normal (possibly degraded) read
+        path — systematic source shares are reused raw, only missing
+        payload rows are decoded — and re-put under the target family.
+        The put's commit-last protocol makes the switch atomic: shares
+        are staged first, the old generation is retired and the manifest
+        republished only after every target share write succeeded.  A
+        crash mid-convert (injected ``GiveUpError``, encode failure)
+        leaves the source object fully readable and nothing but staged
+        garbage ``gc_orphans`` collects — reads are served throughout.
+
+        Converting to the class the object already has is a no-op.
+        """
+        stat = self.stat(key)
+        source = self._stat_class(stat)
+        if target_class == source:
+            return ConvertReceipt(
+                key=key, source=source, target=target_class,
+                payload_bytes=stat.size_bytes,
+                source_stripes=stat.n_stripes,
+                target_stripes=stat.n_stripes,
+                degraded_source_stripes=0, bytes_read=0, latency_s=0.0)
+        if not self._is_default(target_class):
+            # fail fast (unknown family, unsafe layout) BEFORE reading
+            self._codec_for(target_class)
+        res = self.get_ext(key)
+        meta = {mk: mv for mk, mv in stat.meta.items()
+                if mk != "_base_stripe"}
+        new_stat = self.put(key, res.obj, meta=meta,
+                            code_class=target_class)
+        return ConvertReceipt(
+            key=key, source=source, target=target_class,
+            payload_bytes=stat.size_bytes,
+            source_stripes=stat.n_stripes,
+            target_stripes=new_stat.n_stripes,
+            degraded_source_stripes=res.degraded_stripes,
+            bytes_read=res.bytes_read, latency_s=res.latency_s)
+
     # ------------------------------------------------------- repair surface
     def stripe_refs(self) -> Iterator[tuple[str, int]]:
         """All (key, stripe) pairs currently stored."""
@@ -658,30 +950,43 @@ class CodedObjectStore:
         self._check_node(node)
         out = []
         for key, t in self.stripe_refs():
-            base = self._stats[key].meta["_base_stripe"]
-            if node in self.stripes.placement(base + t):
+            if node in self.placement_of(key, t):
                 out.append((key, t))
         return out
 
     def lost_code_nodes(self, key: str, t: int) -> tuple[int, ...]:
         """Code nodes (1-indexed) of stripe (key, t) whose share is absent
         — lost to failures, or never written (placed on a dead node)."""
-        base = self.stat(key).meta["_base_stripe"]
-        pl = self.stripes.placement(base + t)
+        pl = self.placement_of(key, t)
         present = self._present_code_nodes(key, t, pl)
-        return tuple(i for i in range(1, self.n + 1) if i not in present)
+        return tuple(i for i in range(1, len(pl) + 1) if i not in present)
 
     def embedded_helpers_present(self, key: str, t: int,
                                  code_node: int) -> bool:
-        """True when the d = k+1 determined helpers of ``code_node`` all
-        have their shares present AND their physical hosts up — the
-        cheap (k+1)S regeneration is available."""
-        base = self.stat(key).meta["_base_stripe"]
-        pl = self.stripes.placement(base + t)
-        plan = self.code.repair_plan(code_node)
-        shares = self._shares
-        needed = (plan.prev_node,) + plan.next_nodes
-        return all((key, t) in shares[pl[i - 1] - 1] for i in needed)
+        """True when a d-helper regeneration plan for ``code_node`` is
+        available from the shares actually present — for the default
+        double-circulant class that means its d = k+1 DETERMINED helpers
+        all hold their shares (the cheap (k+1)S regeneration); other
+        families consult their own ``repair_plan`` (product-matrix
+        accepts ANY d present helpers)."""
+        stat = self.stat(key)
+        if self._is_default(self._stat_class(stat)):
+            base = stat.meta["_base_stripe"]
+            pl = self.stripes.placement(base + t)
+            plan = self.code.repair_plan(code_node)
+            shares = self._shares
+            needed = (plan.prev_node,) + plan.next_nodes
+            return all((key, t) in shares[pl[i - 1] - 1] for i in needed)
+        return self.regen_plan_for(key, t, code_node) is not None
+
+    def regen_plan_for(self, key: str, t: int, code_node: int):
+        """The object's family :class:`~repro.codes.base.CodeRepairPlan`
+        for regenerating ``code_node`` from the shares present, or None
+        when the family cannot build one (fall back to full decode)."""
+        codec = self.codec_of(key)
+        pl = self.placement_of(key, t)
+        present = sorted(self._present_code_nodes(key, t, pl))
+        return codec.code.repair_plan(code_node, available=present)
 
     def repair_stripes_embedded(self, tasks: Sequence[tuple[str, int, int]],
                                 ) -> tuple[int, int]:
@@ -694,15 +999,30 @@ class CodedObjectStore:
         sizes share one executable.
 
         tasks: (key, stripe, lost_code_node) triples, each single-loss
-        with embedded helpers present (caller-checked).  The repair
-        matrix is node-invariant, so stripes that lost DIFFERENT code
-        nodes still share a vmapped dispatch.  Returns (symbols moved
-        — ``len(tasks) * (k+1) * S``, eq. (7) per share — and dispatch
-        count).
+        with a regeneration plan available (caller-checked).  The
+        default class's repair matrix is node-invariant, so stripes that
+        lost DIFFERENT code nodes still share a vmapped dispatch; tasks
+        of other code classes regenerate through their family's plan
+        (``d * S`` symbols each, one dispatch per task — only families
+        with ``supports_batched_regen()`` coalesce).  Returns (symbols
+        moved, dispatch count).
         """
         if not tasks:
             return 0, 0
-        tasks = list(tasks)
+        legacy, generic = [], []
+        for task in tasks:
+            (legacy if self._is_default(self.class_of(task[0]))
+             else generic).append(task)
+        if generic:
+            symbols = dispatches = 0
+            for key, t, node in generic:
+                symbols += self._repair_stripe_regen(key, t, node)
+                dispatches += 1
+            if legacy:
+                s2, d2 = self.repair_stripes_embedded(legacy)
+                symbols, dispatches = symbols + s2, dispatches + d2
+            return symbols, dispatches
+        tasks = legacy
         tile = self.repair_tile_tasks
         windows = [tasks[i: i + tile] for i in range(0, len(tasks), tile)]
 
@@ -741,14 +1061,45 @@ class CodedObjectStore:
         self.pipeline.map(windows, regen, land, read=gather)
         return len(tasks) * (self.k + 1) * self.S, len(windows)
 
+    def _repair_stripe_regen(self, key: str, t: int, node: int) -> int:
+        """Bandwidth-optimal single-share regeneration through the
+        object's family plan (the generic counterpart of the coalesced
+        embedded path): helpers apply their (1, q) send matrices, the
+        newcomer one (q, d) matmul.  Returns symbols moved: d * S."""
+        codec = self.codec_of(key)
+        code = codec.code
+        pl = self.placement_of(key, t)
+        present = sorted(self._present_code_nodes(key, t, pl))
+        plan = code.repair_plan(node, available=present)
+        if plan is None:
+            raise RuntimeError(f"no regeneration plan for code node "
+                               f"{node} of stripe {t} of {key!r}")
+        sends = np.stack([
+            code.helper_send(sm,
+                             self._read_share_verified(pl[h - 1], key, t)[1:])
+            for sm, h in zip(plan.send_matrices, plan.helpers)])
+        rebuilt = code.regenerate(plan, sends)          # (q, S)
+        phys = pl[node - 1]
+        if not self.is_up(phys):
+            raise RuntimeError(f"replace node {phys} before repairing "
+                               f"onto it")
+        self._guard("write", phys)
+        self._shares[phys - 1][(key, t)] = \
+            [node] + [np.asarray(b, np.int32).copy() for b in rebuilt]
+        return plan.d * self.S
+
     def repair_stripe_full(self, key: str, t: int,
                            lost: Sequence[int]) -> int:
         """Multi-loss repair: ONE decode matmul rebuilds the stripe's data
         and every lost redundancy block (`reconstruct_with_repair`).
-        Returns symbols moved: 2k * S total, however many shares come
-        back (ratio 1/F vs the RS baseline).
+        Returns symbols moved: k * q * S total (2k * S for the default
+        class), however many shares come back (ratio 1/F vs the RS
+        baseline).
         """
-        base = self.stat(key).meta["_base_stripe"]
+        stat = self.stat(key)
+        if not self._is_default(self._stat_class(stat)):
+            return self._repair_stripe_full_generic(key, t, lost)
+        base = stat.meta["_base_stripe"]
         pl = self.stripes.placement(base + t)
         present = sorted(self._present_code_nodes(key, t, pl))
         if len(present) < self.k:
@@ -770,10 +1121,45 @@ class CodedObjectStore:
                 [node, data[node - 1].copy(), red_f[j].copy()]
         return 2 * self.k * self.S
 
+    def _repair_stripe_full_generic(self, key: str, t: int,
+                                    lost: Sequence[int]) -> int:
+        """Family-generic multi-loss repair: one ``share_rows`` matmul
+        rebuilds every block of every lost node from a k-subset."""
+        codec = self.codec_of(key)
+        code = codec.code
+        q = code.share_blocks
+        pl = self.placement_of(key, t)
+        present = sorted(self._present_code_nodes(key, t, pl))
+        if len(present) < codec.k:
+            raise RuntimeError(f"stripe {t} of {key!r} unrecoverable")
+        use = tuple(present[: codec.k])
+        downloads = self._downloads_generic(key, t, use, codec)
+        mat = code.share_rows(use, list(lost))
+        out = code.apply_planned(mat, downloads).host()
+        for j, node in enumerate(lost):
+            phys = pl[node - 1]
+            if not self.is_up(phys):
+                raise RuntimeError(f"replace node {phys} before repairing "
+                                   f"onto it")
+            self._guard("write", phys)
+            self._shares[phys - 1][(key, t)] = \
+                [node] + [out[j * q + b].copy() for b in range(q)]
+        return codec.k * q * self.S
+
     def rs_baseline_symbols(self, n_shares: int) -> int:
         """What a classical [n, k] RS store would download to rebuild
         ``n_shares`` lost shares: the whole file per share (§II)."""
         return baselines.rs_scenario_repair_symbols(self.k, self.S, n_shares)
+
+    def rs_baseline_symbols_for(self, key: str, n_shares: int) -> int:
+        """Per-object RS re-download baseline: the object's family file
+        size B = k * q * S per rebuilt share (equals the store-wide
+        :meth:`rs_baseline_symbols` for default-class objects)."""
+        cc = self.class_of(key)
+        if self._is_default(cc):
+            return self.rs_baseline_symbols(n_shares)
+        code = self._codec_for(cc).code
+        return n_shares * code.gamma_reconstruct_symbols(self.S)
 
     # ------------------------------------------------------ share integrity
     def share_intact(self, phys: int, key: str, t: int) -> Optional[bool]:
@@ -787,7 +1173,7 @@ class CodedObjectStore:
         stat = self._stats.get(key)
         if share is None or stat is None or stat.share_crcs is None:
             return None
-        return share_crc(share[1], share[2]) == \
+        return self._share_crc_of(stat, share) == \
             stat.share_crcs[t][share[0] - 1]
 
     def drop_share(self, phys: int, key: str, t: int) -> bool:
@@ -810,7 +1196,7 @@ class CodedObjectStore:
             if stat is None or stat.share_crcs is None \
                     or t >= stat.n_stripes:
                 continue
-            if share_crc(share[1], share[2]) != \
+            if self._share_crc_of(stat, share) != \
                     stat.share_crcs[t][share[0] - 1]:
                 bad.append((key, t))
         return sorted(bad)
@@ -836,12 +1222,12 @@ class CodedObjectStore:
                     report.orphan_shares.append(
                         (node0 + 1, key, t, "stripe out of range"))
                 else:
-                    pl = self.stripes.placement(stat.meta["_base_stripe"] + t)
+                    pl = self.placement_of(key, t)
                     if pl[share[0] - 1] != node0 + 1:
                         report.orphan_shares.append(
                             (node0 + 1, key, t, "placement mismatch"))
                     elif stat.share_crcs is not None and \
-                            share_crc(share[1], share[2]) != \
+                            self._share_crc_of(stat, share) != \
                             stat.share_crcs[t][share[0] - 1]:
                         report.orphan_shares.append(
                             (node0 + 1, key, t, "crc mismatch"))
@@ -865,6 +1251,11 @@ class CodedObjectStore:
             base = stat.meta["_base_stripe"]
             obj = self.get(key)
             payload = obj.tobytes() if isinstance(obj, np.ndarray) else obj
+            cc = self._stat_class(stat)
+            if not self._is_default(cc):
+                if not self._verify_generic(key, stat, payload, cc):
+                    return False
+                continue
             blocks, smap = self.stripes.chunk(payload)
             red = self.stripes.encode(blocks)
             for t in range(stat.n_stripes):
@@ -878,11 +1269,33 @@ class CodedObjectStore:
                         return False
         return True
 
+    def _verify_generic(self, key: str, stat: ObjectStat, payload: bytes,
+                        cc: CodeClass) -> bool:
+        """Ground-truth re-encode comparison for a non-default-class
+        object: every present share block equals a fresh encode."""
+        codec = self._codec_for(cc)
+        code = codec.code
+        blocks, _smap = codec.chunk(payload)
+        derived = codec.encode_window(blocks)
+        for t in range(stat.n_stripes):
+            pl = codec.placement(stat.meta["_base_stripe"] + t)
+            for j, phys in enumerate(pl):
+                share = self._shares[phys - 1].get((key, t))
+                if share is None:
+                    continue
+                expect = code.stripe_share_blocks(blocks[t], derived[t],
+                                                  j + 1)
+                if not all(np.array_equal(share[1 + b],
+                                          np.asarray(expect[b], np.int32))
+                           for b in range(code.share_blocks)):
+                    return False
+        return True
+
     def total_lost_shares(self) -> int:
         return sum(len(self.lost_code_nodes(key, t))
                    for key, t in self.stripe_refs())
 
 
-__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "StoreAudit",
-           "StoreMetrics", "UnknownKeyError", "ShareIntegrityError",
-           "share_crc", "UP", "FAILED"]
+__all__ = ["CodedObjectStore", "ObjectStat", "GetResult", "ConvertReceipt",
+           "StoreAudit", "StoreMetrics", "UnknownKeyError",
+           "ShareIntegrityError", "share_crc", "UP", "FAILED"]

@@ -59,6 +59,8 @@ class DrainReport:
     ticks: int = 1
     drain_time_s: float = 0.0     # simulated: max(transfer + overheads,
                                   # budget throttle at tick_s per budget)
+    converted_objects: int = 0    # online code conversions completed
+    convert_symbols: int = 0      # read-side symbols those conversions moved
 
     @property
     def ratio_vs_rs(self) -> Optional[float]:
@@ -76,6 +78,8 @@ class DrainReport:
         self.unrecoverable += other.unrecoverable
         self.remaining = other.remaining
         self.drain_time_s += other.drain_time_s
+        self.converted_objects += other.converted_objects
+        self.convert_symbols += other.convert_symbols
 
 
 class RepairScheduler:
@@ -118,6 +122,7 @@ class RepairScheduler:
         self._heap: list[tuple[int, int, str, int]] = []
         self._queued: set[tuple[str, int]] = set()
         self._seq = 0
+        self._converts: list[tuple[str, object]] = []
 
     # --------------------------------------------------------------- intake
     def on_event(self, event: Event) -> None:
@@ -167,11 +172,32 @@ class RepairScheduler:
         return 1
 
     def _push(self, key: str, t: int, n_lost: int) -> None:
-        # priority = remaining redundancy; 0 (one failure from loss) first
-        remaining = (self.store.n - self.store.k) - n_lost
+        # priority = remaining redundancy under the OBJECT'S code class
+        # (DESIGN.md §15.1); 0 (one failure from loss) first
+        n_code, k_code, _d = self._code_params(key)
+        remaining = (n_code - k_code) - n_lost
         self._seq += 1
         heapq.heappush(self._heap, (remaining, self._seq, key, t))
         self._queued.add((key, t))
+
+    def _code_params(self, key: str) -> tuple[int, int, int]:
+        """(n, k, d) of the key's code class; the store's defaults when
+        the key vanished (stale queue entries revalidate at pop time)."""
+        try:
+            cc = self.store.class_of(key)
+        except KeyError:
+            return self.store.n, self.store.k, self.store.k + 1
+        return cc.n, cc.k, cc.d
+
+    # ------------------------------------------------------- code conversion
+    def enqueue_convert(self, key: str, target_class) -> None:
+        """Queue an online code conversion (DESIGN.md §15.3); ``drain``
+        runs conversions with whatever budget repairs leave — protection
+        first, re-encoding second."""
+        self._converts.append((key, target_class))
+
+    def pending_converts(self) -> int:
+        return len(self._converts)
 
     def purge_key(self, key: str) -> int:
         """Drop every queued task for ``key`` (the store's ``delete``
@@ -214,7 +240,7 @@ class RepairScheduler:
         budget = self.budget_symbols_per_tick() \
             if budget_symbols is None else max(1, int(budget_symbols))
         store = self.store
-        k, s = store.k, store.S
+        s = store.S
         report = DrainReport()
         embedded: list[tuple[str, int, int]] = []   # coalesced single-loss
         full: list[tuple[str, int, tuple[int, ...]]] = []
@@ -235,26 +261,30 @@ class RepairScheduler:
                 heapq.heappop(self._heap)
                 self._queued.discard((key, t))
                 continue
-            if len(lost) > store.n - store.k:       # data loss: fewer than
+            n_code, k_code, d_code = self._code_params(key)
+            if len(lost) > n_code - k_code:         # data loss: fewer than
                 heapq.heappop(self._heap)           # k shares left — only a
                 self._queued.discard((key, t))      # re-put can help, so it
                 report.unrecoverable += 1           # must not wedge the queue
                 continue
-            now_rem = (store.n - store.k) - len(lost)
+            now_rem = (n_code - k_code) - len(lost)
             if now_rem != rem:                      # priority drifted
                 heapq.heappop(self._heap)
                 self._push(key, t, len(lost))       # requeue at current prio
                 continue
-            cost = (k + 1) * s if (
-                len(lost) == 1
-                and store.embedded_helpers_present(key, t, lost[0])
-            ) else 2 * k * s
+            # bandwidth-optimal regeneration (d * S, eq. (7)) when the
+            # object's family has a plan from the present shares; full
+            # decode (B = k * q * S) otherwise — per-key code geometry
+            regen_ok = (len(lost) == 1
+                        and store.embedded_helpers_present(key, t, lost[0]))
+            cost = d_code * s if regen_ok \
+                else k_code * (d_code - k_code + 1) * s
             if spent + cost > budget and spent > 0:
                 break                               # budget exhausted
             heapq.heappop(self._heap)
             selected.add((key, t))
             spent += cost
-            if cost == (k + 1) * s:
+            if regen_ok:
                 embedded.append((key, t, lost[0]))
             else:
                 full.append((key, t, lost))
@@ -282,6 +312,12 @@ class RepairScheduler:
                     report.batch_calls += dispatches
                     report.repaired_stripes += len(embedded)
                     report.repaired_shares += len(embedded)
+                    # per-key RS baseline: each task rebuilt one share of
+                    # ITS object's code class (identical to the legacy
+                    # store-wide formula when everything is default-class)
+                    report.rs_baseline_symbols += sum(
+                        store.rs_baseline_symbols_for(key, 1)
+                        for key, _t, _n in embedded)
                     completed.update((key, t) for key, t, _ in embedded)
             for key, t, lost in full:
                 try:
@@ -292,18 +328,30 @@ class RepairScheduler:
                 report.decode_calls += 1
                 report.repaired_stripes += 1
                 report.repaired_shares += len(lost)
+                report.rs_baseline_symbols += \
+                    store.rs_baseline_symbols_for(key, len(lost))
                 completed.add((key, t))
         finally:
             for kt in selected:
                 self._queued.discard(kt)
             for key, t in selected - completed:     # repair raised: requeue
                 self.enqueue_stripe(key, t)         # at the current priority
-            report.rs_baseline_symbols = \
-                store.rs_baseline_symbols(report.repaired_shares)
             if report.repaired_shares:
                 store.metrics.record_repair(report.repaired_shares,
                                             report.symbols_moved,
                                             report.rs_baseline_symbols)
+        # online conversions run on whatever budget repairs left this
+        # tick (protection first, re-encoding second); each conversion's
+        # read-side traffic is charged against the same symbol budget
+        while self._converts and spent < budget:
+            key, target = self._converts.pop(0)
+            try:
+                receipt = store.convert(key, target)
+            except KeyError:
+                continue                            # deleted while queued
+            report.converted_objects += 1
+            report.convert_symbols += receipt.bytes_read
+            spent += max(1, receipt.bytes_read)
         report.remaining = self.pending()
         n_tasks = len(embedded) + len(full)
         # simulated tick duration: the raw transfer + per-task overheads,
@@ -311,21 +359,20 @@ class RepairScheduler:
         # symbols per tick_s of simulated time, so a tick that spends its
         # whole budget costs tick_s however fast the link could move it
         # (this is what makes drain_time_s a function of the budget)
-        raw_s = (report.symbols_moved / self.link.bandwidth_bps
+        moved = report.symbols_moved + report.convert_symbols
+        raw_s = (moved / self.link.bandwidth_bps
                  + n_tasks * self.link.request_overhead_s
                  + report.decode_calls * self.link.decode_overhead_s)
-        throttle_s = report.symbols_moved / budget * self.tick_s
+        throttle_s = moved / budget * self.tick_s
         report.drain_time_s = max(raw_s, throttle_s)
         return report
 
     def _replace_target_nodes(self, embedded, full) -> None:
         targets: set[int] = set()
         for key, t, node in embedded:
-            base = self.store.stat(key).meta["_base_stripe"]
-            targets.add(self.store.stripes.placement(base + t)[node - 1])
+            targets.add(self.store.placement_of(key, t)[node - 1])
         for key, t, lost in full:
-            base = self.store.stat(key).meta["_base_stripe"]
-            pl = self.store.stripes.placement(base + t)
+            pl = self.store.placement_of(key, t)
             targets.update(pl[i - 1] for i in lost)
         for phys in targets:
             if not self.store.is_up(phys):
@@ -337,14 +384,15 @@ class RepairScheduler:
         and ``drain_time_s`` are the queue-drain-time-vs-budget numbers
         ``BENCH_store.json`` tracks."""
         total = DrainReport(ticks=0)
-        while self.pending():
+        while self.pending() or self._converts:
             if total.ticks >= max_ticks:
                 raise RuntimeError(f"repair queue not drained after "
                                    f"{max_ticks} ticks")
             rep = self.drain(budget_symbols)
             total.merge(rep)
             total.ticks += 1
-            if rep.repaired_stripes == 0 and rep.remaining:
+            if rep.repaired_stripes == 0 and rep.converted_objects == 0 \
+                    and (rep.remaining or self._converts):
                 raise RuntimeError(
                     "repair stalled: pending stripes cannot be repaired "
                     "(fewer than k shares present?)")

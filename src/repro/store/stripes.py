@@ -149,4 +149,85 @@ class StripeManager:
         return self.unflatten(red, blocks.shape[0])
 
 
-__all__ = ["StripeMap", "StripeManager"]
+class StripeCodec:
+    """Family-generic stripe codec: chunk + encode + place for any
+    registered :class:`~repro.codes.base.ErasureCode` (DESIGN.md §15.3).
+
+    The generic counterpart of :class:`StripeManager` — one stripe
+    carries ``D = code.data_blocks`` payload blocks of S symbols, each
+    node stores ``q = code.share_blocks`` blocks, and the whole object's
+    non-systematic rows are produced by ONE folded
+    ``encode_derived_planned`` dispatch over the (D, T*S) stream view.
+    """
+
+    def __init__(self, code, layout: placement.RackLayout, *,
+                 stripe_symbols: int):
+        self.code = code
+        self.layout = layout
+        self.n, self.k, self.d, self.p = code.n, code.k, code.d, code.p
+        self.stripe_symbols = int(stripe_symbols)
+        if self.stripe_symbols < 1:
+            raise ValueError("stripe_symbols must be >= 1")
+        worst = max(placement.max_shares_per_rack(
+            layout, self.placement(t)) for t in range(layout.n_nodes))
+        if worst > self.n - self.k:
+            raise ValueError(
+                f"layout unsafe for {code.family_key()}: some stripe puts "
+                f"{worst} shares in one rack > n-k = {self.n - self.k}")
+
+    # ------------------------------------------------------------- placement
+    def placement(self, stripe: int) -> tuple[int, ...]:
+        """Physical node (1-indexed) of each code node's share."""
+        return placement.rotate_placement(self.layout, self.n, stripe)
+
+    # ----------------------------------------------------------------- chunk
+    def chunk(self, payload: bytes) -> tuple[np.ndarray, StripeMap]:
+        """payload -> ((T, D, S) int32 payload blocks, StripeMap)."""
+        d_blocks = self.code.data_blocks
+        sym = gf.bytes_to_symbols(payload, self.p)
+        per_stripe = d_blocks * self.stripe_symbols
+        t = max(1, -(-len(sym) // per_stripe))
+        sym = np.pad(sym, (0, t * per_stripe - len(sym)))
+        blocks = sym.reshape(t, d_blocks,
+                             self.stripe_symbols).astype(np.int32)
+        return blocks, StripeMap(orig_bytes=len(payload), n_stripes=t,
+                                 stripe_symbols=self.stripe_symbols)
+
+    def assemble(self, blocks: np.ndarray, smap: StripeMap) -> bytes:
+        """Inverse of :meth:`chunk`: (T, D, S) payload blocks -> bytes."""
+        sym = np.asarray(blocks, np.int32).reshape(-1)
+        return gf.symbols_to_bytes(sym)[: smap.orig_bytes]
+
+    # ---------------------------------------------------------------- encode
+    def flatten(self, blocks: np.ndarray) -> np.ndarray:
+        """(T, D, S) -> (D, T*S) stream view (stripe axis folded into
+        the symbol axis; every family's encode is column-independent)."""
+        t, d_blocks, s = blocks.shape
+        if d_blocks != self.code.data_blocks:
+            raise ValueError(f"expected {self.code.data_blocks} payload "
+                             f"blocks per stripe, got {d_blocks}")
+        return np.ascontiguousarray(
+            np.transpose(blocks, (1, 0, 2))).reshape(d_blocks, t * s)
+
+    def unflatten_rows(self, flat: np.ndarray, rows: int,
+                       t: int) -> np.ndarray:
+        """(rows, T*S) encode/decode product -> (T, rows, S)."""
+        return np.ascontiguousarray(np.transpose(
+            np.asarray(flat, np.int32).reshape(rows, t, -1), (1, 0, 2)))
+
+    def encode_window(self, blocks: np.ndarray) -> np.ndarray:
+        """(T, D, S) payload blocks -> (T, derived_rows, S) derived rows
+        in ONE planned dispatch for the whole window."""
+        flat = self.flatten(blocks)
+        derived = self.code.encode_derived_planned(flat).host()
+        return self.unflatten_rows(derived, self.code.derived_rows,
+                                   blocks.shape[0])
+
+    def stripe_shares(self, data: np.ndarray, derived: np.ndarray):
+        """One stripe's (D, S) payload + (derived_rows, S) product ->
+        per-node block lists, 1-indexed by code node."""
+        return {j: self.code.stripe_share_blocks(data, derived, j)
+                for j in range(1, self.n + 1)}
+
+
+__all__ = ["StripeMap", "StripeManager", "StripeCodec"]

@@ -1,0 +1,264 @@
+"""Property suite for the pluggable code-family subsystem (DESIGN.md §15):
+both registered families run through ONE generic battery — systematic
+map, bit-exact reconstruction from every k-subset, regeneration parity
+at the cut-set bound gamma = d*S*B/(k(d-k+1)), and per-family cache
+isolation for overlapping (k, p) parameters.
+"""
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from repro.codes import (CodeClass, FAMILY_DOUBLE_CIRCULANT,
+                         FAMILY_PRODUCT_MATRIX, default_code_class,
+                         families, make_code)
+from repro.core.circulant import CodeSpec
+from repro.core.repair import decode_cache_stats
+
+from tests._hypothesis_compat import given, settings, st
+
+S = 7           # symbols per block — small keeps the k-subset sweeps fast
+
+GRID = [
+    CodeClass(FAMILY_DOUBLE_CIRCULANT, n=4, k=2, d=3),
+    CodeClass(FAMILY_DOUBLE_CIRCULANT, n=6, k=3, d=4),
+    CodeClass(FAMILY_PRODUCT_MATRIX, n=4, k=2, d=2),     # d = 2k-2 floor
+    CodeClass(FAMILY_PRODUCT_MATRIX, n=5, k=2, d=3),     # d < n-1
+    CodeClass(FAMILY_PRODUCT_MATRIX, n=6, k=3, d=4),     # d < n-1
+    CodeClass(FAMILY_PRODUCT_MATRIX, n=7, k=3, d=5),
+]
+_IDS = [cc.key() for cc in GRID]
+_CODES: dict = {}
+
+
+def code_for(cc: CodeClass):
+    """One live code per class for the whole module (PM construction
+    solves a nullspace; no need to redo it per test)."""
+    if cc not in _CODES:
+        _CODES[cc] = make_code(cc)
+    return _CODES[cc]
+
+
+def payload(cc: CodeClass, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed * 1000 + cc.n * 10 + cc.d)
+    code = code_for(cc)
+    return rng.integers(0, cc.p, (code.data_blocks, S),
+                        dtype=np.int64).astype(np.int32)
+
+
+def stacked_downloads(code, shares, subset) -> np.ndarray:
+    """(k*q, S) download matrix in the family's helper_block_ids order."""
+    return np.stack([shares[j - 1][b]
+                     for j, b in code.helper_block_ids(subset)])
+
+
+# ------------------------------------------------------------- registry
+def test_both_families_registered():
+    fams = families()
+    assert FAMILY_DOUBLE_CIRCULANT in fams
+    assert FAMILY_PRODUCT_MATRIX in fams
+
+
+def test_code_class_meta_roundtrip_and_key_uniqueness():
+    keys = set()
+    for cc in GRID:
+        assert CodeClass.from_meta(cc.to_meta()) == cc
+        keys.add(cc.key())
+    assert len(keys) == len(GRID)
+
+
+def test_default_code_class_is_double_circulant():
+    spec = CodeSpec.make(3, 257)
+    cc = default_code_class(spec)
+    assert cc.family == FAMILY_DOUBLE_CIRCULANT
+    assert (cc.n, cc.k, cc.d, cc.p) == (spec.n, spec.k, spec.k + 1, spec.p)
+
+
+def test_code_class_validation():
+    with pytest.raises(ValueError):
+        CodeClass("x", n=4, k=4, d=4)           # k >= n
+    with pytest.raises(ValueError):
+        CodeClass("x", n=4, k=2, d=4)           # d > n-1
+    with pytest.raises(KeyError, match="unknown code family"):
+        make_code(CodeClass("no-such-family", n=4, k=2, d=3))
+
+
+# ------------------------------------------------- geometry + systematic map
+@pytest.mark.parametrize("cc", GRID, ids=_IDS)
+def test_msr_geometry_and_systematic_map(cc):
+    code = code_for(cc)
+    q = code.share_blocks
+    assert q == cc.d - cc.k + 1
+    assert code.data_blocks == cc.k * q
+    data = payload(cc)
+    shares = code.encode_shares(data)
+    assert shares.shape == (cc.n, q, S)
+    for m in range(code.data_blocks):
+        node, b = code.data_location(m)
+        np.testing.assert_array_equal(shares[node - 1][b], data[m])
+
+
+@pytest.mark.parametrize("cc", GRID, ids=_IDS)
+def test_reconstruct_every_k_subset_bit_exact(cc):
+    code = code_for(cc)
+    data = payload(cc)
+    shares = code.encode_shares(data)
+    for subset in itertools.combinations(range(1, cc.n + 1), cc.k):
+        got = code.reconstruct(subset, stacked_downloads(code, shares,
+                                                         subset))
+        np.testing.assert_array_equal(got, data)
+
+
+# ----------------------------------------------------------- regeneration
+@pytest.mark.parametrize("cc", GRID, ids=_IDS)
+def test_regenerate_every_node_at_cut_set_bound(cc):
+    code = code_for(cc)
+    data = payload(cc)
+    shares = code.encode_shares(data)
+    B = code.data_blocks * S
+    for f in range(1, cc.n + 1):
+        plan = code.repair_plan(f)
+        assert plan is not None
+        assert f not in plan.helpers and len(plan.helpers) == cc.d
+        sends = np.stack([code.helper_send(sm, shares[h - 1])
+                          for h, sm in zip(plan.helpers,
+                                           plan.send_matrices)])
+        # each helper sends beta = 1 block: gamma = d*S symbols, which
+        # is exactly the MSR cut-set point d*S*B / (k (d-k+1) * S) ...
+        measured = sends.size
+        assert measured == cc.d * S
+        assert measured == cc.d * B // (cc.k * (cc.d - cc.k + 1))
+        assert measured == code.gamma_regenerate_symbols(S)
+        rebuilt = code.regenerate(plan, sends)
+        np.testing.assert_array_equal(rebuilt, shares[f - 1])
+
+
+@pytest.mark.parametrize("cc", [cc for cc in GRID
+                                if cc.family == FAMILY_PRODUCT_MATRIX
+                                and cc.d < cc.n - 1],
+                         ids=lambda cc: cc.key())
+def test_product_matrix_repairs_with_restricted_helpers(cc):
+    """d < n-1: regeneration must work from ANY d-subset of survivors,
+    not just a fixed embedded set."""
+    code = code_for(cc)
+    data = payload(cc, seed=3)
+    shares = code.encode_shares(data)
+    others = [j for j in range(1, cc.n + 1) if j != 1]
+    for pool in itertools.combinations(others, cc.d):
+        plan = code.repair_plan(1, available=pool)
+        assert plan is not None and set(plan.helpers) <= set(pool)
+        sends = np.stack([code.helper_send(sm, shares[h - 1])
+                          for h, sm in zip(plan.helpers,
+                                           plan.send_matrices)])
+        np.testing.assert_array_equal(code.regenerate(plan, sends),
+                                      shares[0])
+
+
+def test_double_circulant_requires_embedded_helpers():
+    """The DC family's repair is determined: prev + k next nodes.  A
+    pool missing any embedded helper yields no plan (the store falls
+    back to full decode) — never a wrong plan."""
+    cc = GRID[0]
+    code = code_for(cc)
+    plan = code.repair_plan(1)
+    assert plan is not None
+    missing = plan.helpers[0]
+    pool = tuple(j for j in range(2, cc.n + 1) if j != missing)
+    assert code.repair_plan(1, available=pool) is None
+
+
+@pytest.mark.parametrize("cc", GRID, ids=_IDS)
+def test_repair_plan_none_when_too_few_available(cc):
+    code = code_for(cc)
+    pool = tuple(range(2, 2 + cc.d - 1))     # d-1 survivors only
+    assert code.repair_plan(1, available=pool) is None
+
+
+# --------------------------------------------------------- multi-loss rows
+@pytest.mark.parametrize("cc", GRID, ids=_IDS)
+def test_share_rows_rebuild_lost_nodes(cc):
+    code = code_for(cc)
+    data = payload(cc, seed=5)
+    shares = code.encode_shares(data)
+    lost = [1, cc.n]
+    use = tuple(range(2, 2 + cc.k))
+    mat = code.share_rows(use, lost)
+    out = (np.asarray(mat, np.int64)
+           @ stacked_downloads(code, shares, use).astype(np.int64)) % cc.p
+    q = code.share_blocks
+    for i, f in enumerate(lost):
+        np.testing.assert_array_equal(out[i * q:(i + 1) * q],
+                                      shares[f - 1])
+
+
+# -------------------------------------------------------- property battery
+@settings(max_examples=12, deadline=None)
+@given(idx=st.integers(min_value=0, max_value=len(GRID) - 1),
+       seed=st.integers(min_value=0, max_value=2**20))
+def test_property_random_subset_roundtrip(idx, seed):
+    """Random class x random payload x random k-subset: reconstruct is
+    bit-exact and regeneration moves exactly gamma = d*S symbols."""
+    cc = GRID[idx]
+    code = code_for(cc)
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, cc.p, (code.data_blocks, S),
+                        dtype=np.int64).astype(np.int32)
+    shares = code.encode_shares(data)
+    subset = tuple(sorted(rng.choice(np.arange(1, cc.n + 1), size=cc.k,
+                                     replace=False).tolist()))
+    got = code.reconstruct(subset, stacked_downloads(code, shares, subset))
+    np.testing.assert_array_equal(got, data)
+    f = int(rng.integers(1, cc.n + 1))
+    plan = code.repair_plan(f)
+    assert plan is not None
+    sends = np.stack([code.helper_send(sm, shares[h - 1])
+                      for h, sm in zip(plan.helpers, plan.send_matrices)])
+    assert sends.size == code.gamma_regenerate_symbols(S)
+    np.testing.assert_array_equal(code.regenerate(plan, sends),
+                                  shares[f - 1])
+
+
+# -------------------------------------------------- per-family cache identity
+def test_overlapping_parameters_use_distinct_cache_families():
+    """DC(n4,k2) and PM(n4,k2,d2) share (k, p) and overlapping subsets;
+    their decode inverses must land in separately-keyed cache families
+    (the satellite fix: no cross-family collisions in shared caches)."""
+    dc = code_for(GRID[0])
+    pm = code_for(GRID[2])
+    data_dc = payload(GRID[0], seed=7)
+    data_pm = payload(GRID[2], seed=7)
+    sh_dc = dc.encode_shares(data_dc)
+    sh_pm = pm.encode_shares(data_pm)
+    for subset in itertools.combinations(range(1, 5), 2):
+        np.testing.assert_array_equal(
+            dc.reconstruct(subset, stacked_downloads(dc, sh_dc, subset)),
+            data_dc)
+        np.testing.assert_array_equal(
+            pm.reconstruct(subset, stacked_downloads(pm, sh_pm, subset)),
+            data_pm)
+    stats = decode_cache_stats()
+    dc_fams = [f for f in stats if f.startswith("double-circulant[n4,k2")]
+    pm_fams = [f for f in stats if f == pm.family_key()]
+    assert dc_fams and pm_fams
+    assert set(dc_fams).isdisjoint(pm_fams)
+    assert all(stats[f].misses > 0 for f in pm_fams)
+
+
+# ------------------------------------------------------- report integration
+def test_bench_report_codes_headline_and_skip_rows(tmp_path, monkeypatch):
+    """report.py --bench: the codes row renders from BENCH_codes.json,
+    and every expected-but-absent trajectory file gets an explicit
+    skip-with-notice row instead of silently vanishing."""
+    from benchmarks import report
+    rec = {"frontier": [{"family": "product-matrix", "n": 6, "k": 3,
+                         "d": 4, "repair_ratio_vs_rs": 0.6667}],
+           "conversion": {"mbps": 5.0, "bit_exact": True, "orphans": 0}}
+    (tmp_path / "BENCH_codes.json").write_text(json.dumps(rec))
+    monkeypatch.setattr(report, "REPO_ROOT", tmp_path)
+    table = report.bench_table()
+    assert "1 classes on frontier" in table
+    assert "product-matrix n6k3d4" in table
+    for stem in report.EXPECTED_BENCH:
+        if stem != "BENCH_codes":
+            assert f"`{stem}.json` | (missing" in table

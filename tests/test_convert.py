@@ -1,0 +1,191 @@
+"""Online code conversion (DESIGN.md §15.3): round-trip equality in both
+directions, systematic share reuse, degraded sources, atomicity under
+injected crashes mid-convert, and the scheduler's convert queue.
+"""
+import numpy as np
+import pytest
+
+from repro.codes import CodeClass, FAMILY_PRODUCT_MATRIX
+from repro.core.circulant import CodeSpec
+from repro.io import FaultInjector, GiveUpError, fast_retry
+from repro.store import CodedObjectStore, RepairScheduler
+
+PM = CodeClass(FAMILY_PRODUCT_MATRIX, n=6, k=3, d=4)
+PM_SMALL = CodeClass(FAMILY_PRODUCT_MATRIX, n=5, k=2, d=3)
+
+
+def make_store(**kw):
+    kw.setdefault("n_nodes", 8)
+    kw.setdefault("stripe_symbols", 32)
+    return CodedObjectStore(CodeSpec.make(2, 257), **kw)
+
+
+def fill(store, n=2, nbytes=4096, seed=0):
+    rng = np.random.default_rng(seed)
+    objs = {}
+    for i in range(n):
+        key = f"o{i}"
+        objs[key] = rng.integers(0, 256, nbytes, dtype=np.uint8).tobytes()
+        store.put(key, objs[key])
+    return objs
+
+
+def test_convert_round_trip_both_directions():
+    with make_store() as store:
+        objs = fill(store)
+        for key, ref in objs.items():
+            r = store.convert(key, PM)
+            assert r.converted and r.target == PM
+            assert store.class_of(key) == PM
+            assert store.get(key) == ref
+            r2 = store.convert(key, store.default_class)
+            assert r2.source == PM and r2.converted
+            assert store.class_of(key) == store.default_class
+            assert store.get(key) == ref
+        assert store.verify()
+        assert store.audit().clean
+
+
+def test_convert_is_noop_on_same_class():
+    with make_store() as store:
+        objs = fill(store, n=1)
+        key = next(iter(objs))
+        r = store.convert(key, store.default_class)
+        assert not r.converted and r.bytes_read == 0
+        assert store.get(key) == objs[key]
+
+
+def test_convert_preserves_meta_array_type_and_crc_ledger():
+    with make_store() as store:
+        arr = np.arange(300, dtype=np.int16).reshape(20, 15)
+        store.put("arr", arr, meta={"tag": "v1"})
+        store.convert("arr", PM)
+        got = store.get("arr")
+        np.testing.assert_array_equal(got, arr)
+        assert got.dtype == arr.dtype
+        stat = store.stat("arr")
+        assert stat.meta["tag"] == "v1"
+        # the ledger is rebuilt under the target family: every share of
+        # every stripe must verify against its put-time CRC
+        assert store.verify()
+        assert not store.scrub_node(1)
+
+
+def test_convert_serves_from_degraded_source():
+    with make_store() as store:
+        objs = fill(store, n=1, nbytes=8192)
+        key = next(iter(objs))
+        store.fail_node(1)
+        r = store.convert(key, PM)
+        assert store.class_of(key) == PM
+        assert store.get(key) == objs[key]
+        # at least one source stripe lost a share and needed a decode
+        assert r.degraded_source_stripes >= 1
+
+
+def test_convert_reuses_systematic_shares_when_healthy():
+    with make_store() as store:
+        objs = fill(store, n=1)
+        key = next(iter(objs))
+        r = store.convert(key, PM)
+        assert r.degraded_source_stripes == 0
+        # healthy read-out touches exactly the payload: k*q*S per stripe
+        assert r.bytes_read == r.source_stripes * 2 * 2 * store.S
+        assert store.get(key) == objs[key]
+
+
+@pytest.mark.parametrize("victim", ["node:01", "node:04", "node:06"])
+def test_crash_mid_convert_leaves_source_intact(victim):
+    """A write crash partway through the conversion put must leave the
+    OLD generation fully readable, the manifest unchanged, and nothing
+    but garbage the audit counts as zero (staged shares are never
+    installed).  Failing one node's writes persistently means SOME
+    target shares were produced before the give-up — the torn-put
+    shape the commit-last protocol must mask."""
+    faults = FaultInjector(seed=0)
+    with make_store(faults=faults, retry=fast_retry()) as store:
+        objs = fill(store, n=1, nbytes=8192)
+        key = next(iter(objs))
+        old_class = store.class_of(key)
+        faults.add(op="write", kind="transient", match=victim)
+        with pytest.raises(GiveUpError):
+            store.convert(key, PM)
+        faults.clear()
+        assert store.class_of(key) == old_class
+        assert store.get(key) == objs[key]
+        assert store.audit().clean
+        assert store.gc_orphans() == 0
+        assert store.verify()
+        # the injector healed: the same conversion now lands atomically
+        store.convert(key, PM)
+        assert store.class_of(key) == PM
+        assert store.get(key) == objs[key]
+        assert store.audit().clean
+
+
+def test_crash_converting_back_keeps_target_generation():
+    """Symmetric crash on the PM -> default direction: the PM object
+    stays live and bit-exact."""
+    faults = FaultInjector(seed=1)
+    with make_store(faults=faults, retry=fast_retry()) as store:
+        objs = fill(store, n=1)
+        key = next(iter(objs))
+        store.convert(key, PM)
+        faults.add(op="write", kind="transient")
+        with pytest.raises(GiveUpError):
+            store.convert(key, store.default_class)
+        faults.clear()
+        assert store.class_of(key) == PM
+        assert store.get(key) == objs[key]
+        assert store.audit().clean
+
+
+def test_scheduler_runs_queued_conversions_after_repairs():
+    """Protection first, re-encoding second: a drain with both repair
+    tasks and queued conversions repairs every stripe AND converts,
+    charging conversion read traffic to the same budget."""
+    with make_store(n_nodes=10) as store:
+        objs = fill(store, n=3, nbytes=4096)
+        sched = RepairScheduler(store)
+        store.subscribe(sched.on_event)
+        for key in objs:
+            sched.enqueue_convert(key, PM_SMALL)
+        store.fail_node(2)
+        rep = sched.drain_all(budget_symbols=4 * 2 * 2 * store.S)
+        assert rep.converted_objects == len(objs)
+        assert rep.convert_symbols > 0
+        assert sched.pending_converts() == 0
+        for key, ref in objs.items():
+            assert store.class_of(key) == PM_SMALL
+            assert store.get(key) == ref
+        assert store.verify()
+
+
+def test_scheduler_convert_skips_deleted_keys():
+    with make_store() as store:
+        objs = fill(store, n=2)
+        sched = RepairScheduler(store)
+        keys = list(objs)
+        sched.enqueue_convert(keys[0], PM)
+        sched.enqueue_convert(keys[1], PM)
+        store.delete(keys[0])
+        rep = sched.drain_all(budget_symbols=1 << 20)
+        assert rep.converted_objects == 1
+        assert store.class_of(keys[1]) == PM
+
+
+def test_degraded_reads_under_target_family_after_convert():
+    """put under family A -> convert -> kill nodes -> reads still come
+    back bit-exact through the target family's decode paths."""
+    with make_store() as store:
+        objs = fill(store, n=2, nbytes=8192)
+        for key in objs:
+            store.convert(key, PM)
+        store.fail_node(3)
+        store.fail_node(5)
+        degraded = 0
+        for key, ref in objs.items():
+            res = store.get_ext(key)
+            assert res.obj == ref
+            degraded += res.degraded_stripes
+        assert degraded > 0
