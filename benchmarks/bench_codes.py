@@ -85,6 +85,42 @@ def encode_mbps(cc: CodeClass, stream_symbols: int) -> float:
     return flat.size / t / 2**20
 
 
+def repair_mbps(cc: CodeClass, stream_symbols: int) -> float:
+    """Steady-state fused regeneration throughput: F batched single-loss
+    repairs through ``regenerate_many_planned`` — the (F, q, d) newcomer
+    stack against (F, d, S) helper sends in ONE dispatch (DESIGN.md
+    §16.5), MB/s over the helper-send stream (the symbols a repair
+    actually moves)."""
+    code = make_code(cc)
+    rng = _timing.rng(cc.n + 2 * cc.d)
+    batch = 4
+    s = max(1, stream_symbols // batch)
+    plans = [code.repair_plan(1 + (i % cc.n)) for i in range(batch)]
+    if any(p is None for p in plans):
+        raise RuntimeError(f"{cc.key()}: no regeneration plan with every "
+                           f"other node available")
+    sends = rng.integers(0, cc.p, (batch, plans[0].d, s),
+                         dtype=np.int64).astype(np.int32)
+    t = timeit(lambda: code.regenerate_many_planned(plans, sends).host())
+    return sends.size / t / 2**20
+
+
+def decode_mbps(cc: CodeClass, stream_symbols: int) -> float:
+    """Steady-state any-k decode throughput: the (B, k*q) subset-inverse
+    rows applied to the (k*q, S) stacked downloads in one planned
+    dispatch — the degraded-read / reconstruct kernel, MB/s over the
+    download stream."""
+    code = make_code(cc)
+    rng = _timing.rng(3 * cc.n + cc.d)
+    subset = tuple(range(2, 2 + cc.k))          # any k survivors, node 1 lost
+    mat = code.decode_rows(subset, list(range(code.data_blocks)))
+    downloads = rng.integers(0, cc.p, (cc.k * code.share_blocks,
+                                       stream_symbols),
+                             dtype=np.int64).astype(np.int32)
+    t = timeit(lambda: code.apply_planned(mat, downloads).host())
+    return downloads.size / t / 2**20
+
+
 def _fill(store, rng, n_objects, object_bytes, cc=None) -> dict[str, bytes]:
     objs = {}
     for i in range(n_objects):
@@ -134,14 +170,21 @@ def frontier_point(cc: CodeClass, *, stripe_symbols: int, n_objects: int,
             "repaired_shares": rep.repaired_shares,
             "bit_exact_after_repair": bit_exact,
             "encode_mbps": round(encode_mbps(cc, stream_symbols), 2),
+            "repair_mbps": round(repair_mbps(cc, stream_symbols), 2),
+            "decode_mbps": round(decode_mbps(cc, stream_symbols), 2),
         }
         row["roofline_frac_of_memcpy"] = round(
             row["encode_mbps"] / copy_mbps, 4)
+        row["repair_roofline_frac_of_memcpy"] = round(
+            row["repair_mbps"] / copy_mbps, 4)
+        row["decode_roofline_frac_of_memcpy"] = round(
+            row["decode_mbps"] / copy_mbps, 4)
     if not quiet:
         print(f"[codes] {cc.key():34s} overhead {row['storage_overhead']:.2f} "
               f"repair_vs_rs {row['repair_ratio_vs_rs']} "
               f"encode {row['encode_mbps']} MB/s "
-              f"({row['roofline_frac_of_memcpy']:.1%} of memcpy)")
+              f"({row['roofline_frac_of_memcpy']:.1%} of memcpy) "
+              f"repair {row['repair_mbps']} decode {row['decode_mbps']} MB/s")
     return row
 
 
@@ -236,6 +279,13 @@ def run(fast: bool = False, seed: int = 0, quiet: bool = False) -> dict:
             "conversion_bit_exact": conversion["bit_exact"],
             "scheduler_convert_ok": conversion["scheduler_convert_ok"],
             "orphans_zero": conversion["orphans"] == 0,
+            # every kernel direction reports a distance-to-roofline
+            # signal (PR 9 gave encode one; repair/decode ride along)
+            "rooflines_reported": all(
+                r[f] > 0 for r in frontier
+                for f in ("roofline_frac_of_memcpy",
+                          "repair_roofline_frac_of_memcpy",
+                          "decode_roofline_frac_of_memcpy")),
         },
     }
     rec["all_passed"] = all(rec["assertions"].values())

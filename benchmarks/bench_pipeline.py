@@ -24,13 +24,19 @@ Emits repo-root ``BENCH_pipeline.json``:
   the speedup, and per-get latency p50/p99 over the planned passes;
 * ``restore`` — checkpoint save/restore MB/s over mixed state sizes for
   both modes (restore exercises the reconstruct decode);
-* ``overlap`` — the pure pipeline effect at fixed plans: planned
-  depth-1/1-worker vs planned depth-2 MB/s on identical sizes, plus an
-  overlap-efficiency estimate vs the serial lower bound
-  ``max(t_compute, t_host)``.
+* ``overlap`` — the zero-copy staging + pipeline effect at fixed plans
+  (DESIGN.md §16.3): the legacy copying serial put (staging disabled,
+  depth 1 — the pre-§16 path, kept selectable via
+  ``store.staging_enabled``) vs the staged put at the store's
+  machine-sized default depth, on identical sizes.  Reports per-stage
+  wall times (``Pipeline.stage_stats()``) and an overlap-efficiency
+  estimate against the machine-aware lower bound: ``max(t_compute,
+  t_host)`` with >= 2 CPUs, ``t_compute + t_host`` on a single-core
+  host where host/compute overlap cannot exist.
 """
 import contextlib
 import json
+import os
 import pathlib
 import tempfile
 import time
@@ -88,12 +94,14 @@ def _payloads(rng, sizes) -> list[bytes]:
             .tobytes() for s in sizes]
 
 
-def _store(spec, *, depth: int, workers: int, stripe_symbols: int,
-           tile: int) -> CodedObjectStore:
-    return CodedObjectStore(spec, n_nodes=spec.n + 4,
-                            stripe_symbols=stripe_symbols,
-                            pipeline_depth=depth, io_workers=workers,
-                            put_tile_stripes=tile)
+def _store(spec, *, depth, workers: int, stripe_symbols: int,
+           tile: int, staging: bool = True) -> CodedObjectStore:
+    st = CodedObjectStore(spec, n_nodes=spec.n + 4,
+                          stripe_symbols=stripe_symbols,
+                          pipeline_depth=depth, io_workers=workers,
+                          put_tile_stripes=tile)
+    st.staging_enabled = staging
+    return st
 
 
 def _put_get_pass(store, payloads, tag: str, latencies=None) -> float:
@@ -151,9 +159,9 @@ def bench_store(spec, *, sizes_per_pass: int, lo: int, hi: int,
     # schedule hands whichever mode runs later a slower machine (the same
     # pairing discipline bench_regeneration uses).
     jax.clear_caches()
-    st_serial = _store(spec, depth=1, workers=1,
+    st_serial = _store(spec, depth=1, workers=1, staging=False,
                        stripe_symbols=stripe_symbols, tile=tile)
-    st_plan = _store(spec, depth=2, workers=2,
+    st_plan = _store(spec, depth=None, workers=2,
                      stripe_symbols=stripe_symbols, tile=tile)
     with plan.planning_disabled():
         warm = _payloads(rng, _draw_sizes(rng, sizes_per_pass, lo, hi, seen))
@@ -214,16 +222,33 @@ def bench_store(spec, *, sizes_per_pass: int, lo: int, hi: int,
 # ------------------------------------------------------- pipeline overlap
 def bench_overlap(spec, *, object_mb: float, n_objects: int,
                   stripe_symbols: int, tile: int, quiet: bool) -> dict:
-    """The pure pipeline effect: identical sizes, plans warm in both
-    runs — only depth/workers differ.  Also estimates the serial lower
-    bound max(t_compute, t_host) from a compute-only pass."""
+    """The zero-copy staging + pipeline effect at identical sizes and
+    warm plans (DESIGN.md §16.3).
+
+    Three put paths, measured interleaved (throttled-host discipline):
+
+    * **serial** — staging disabled, depth 1: the legacy copying path
+      (fresh flatten/pad/chunk copies, ``tobytes`` CRCs, per-share
+      install copies) this PR's staging layer replaces;
+    * **staged serial** — staging on, depth 1: isolates the host-side
+      win; its wall minus the compute-only pass is ``t_host_s``;
+    * **overlap** — staging on, the store's machine-sized default
+      depth: the shipping configuration (headline MB/s).
+
+    ``overlap_efficiency`` compares the overlap wall against the
+    machine-aware lower bound: ``max(t_compute, t_host)`` when the host
+    has >= 2 CPUs, ``t_compute + t_host`` on a single-core host (where
+    host/compute overlap is physically impossible and the store's
+    default depth degenerates to the serial schedule).  Per-stage wall
+    times come from ``Pipeline.stage_stats()`` over the best overlap
+    pass."""
     rng = _timing.rng(2)
     size = int(object_mb * 2**20)
     pls = _payloads(rng, [size] * n_objects)
     total_mb = n_objects * size / 2**20
 
-    def mk(depth, workers):
-        st = _store(spec, depth=depth, workers=workers,
+    def mk(depth, workers, staging):
+        st = _store(spec, depth=depth, workers=workers, staging=staging,
                     stripe_symbols=stripe_symbols, tile=tile)
         for i, pl in enumerate(pls):
             st.put(f"w{i}", pl)                            # warm plans
@@ -235,39 +260,52 @@ def bench_overlap(spec, *, object_mb: float, n_objects: int,
             st.put(f"o{i}", pl)
         return time.perf_counter() - t0
 
-    # interleave the paired measurements (throttled-host discipline)
-    st, st2 = mk(1, 1), mk(2, 2)
-    t_serial = t_overlap = float("inf")
+    st_legacy = mk(1, 1, False)
+    st_staged = mk(1, 1, True)
+    st_over = mk(None, 2, True)
+    t_serial = t_staged = t_overlap = float("inf")
+    stage_secs: dict = {}
     for _ in range(3):
-        t_serial = min(t_serial, one_pass(st))
-        t_overlap = min(t_overlap, one_pass(st2))
+        t_serial = min(t_serial, one_pass(st_legacy))
+        t_staged = min(t_staged, one_pass(st_staged))
+        st_over.pipeline.reset_stage_stats()
+        t = one_pass(st_over)
+        if t < t_overlap:
+            t_overlap, stage_secs = t, st_over.pipeline.stage_stats()
     # compute-only: flatten+encode+force, no share placement
-    blocks, smap = st.stripes.chunk(pls[0])
+    blocks, smap = st_staged.stripes.chunk(pls[0])
     t0 = time.perf_counter()
     for _ in range(n_objects):
         for s0 in range(0, smap.n_stripes, tile):
-            st.code.encode_planned(
-                st.stripes.flatten(blocks[s0:s0 + tile])).host()
+            st_staged.code.encode_planned(
+                st_staged.stripes.flatten(blocks[s0:s0 + tile])).host()
     t_compute = time.perf_counter() - t0
-    t_host = max(t_serial - t_compute, 1e-9)
-    st.close()
-    st2.close()
-    bound = max(t_compute, t_host)
+    t_host = max(t_staged - t_compute, 1e-9)
+    depth = st_over.pipeline.depth
+    for st in (st_legacy, st_staged, st_over):
+        st.close()
+    cpus = os.cpu_count() or 1
+    bound = max(t_compute, t_host) if cpus >= 2 else t_compute + t_host
     out = {
         "object_mb": object_mb, "n_objects": n_objects,
+        "host_parallelism": cpus, "overlap_depth": depth,
         "put_serial_mbps": round(total_mb / t_serial, 1),
+        "put_staged_serial_mbps": round(total_mb / t_staged, 1),
         "put_overlap_mbps": round(total_mb / t_overlap, 1),
         "overlap_speedup": round(t_serial / t_overlap, 2),
         "t_compute_s": round(t_compute, 4), "t_host_s": round(t_host, 4),
         "serial_lower_bound_s": round(bound, 4),
         "overlap_efficiency": round(bound / t_overlap, 2),
+        "stage_seconds": {k: round(v, 4) for k, v in
+                          sorted(stage_secs.items())},
     }
     if not quiet:
-        print(f"[pipeline] put overlap: serial {out['put_serial_mbps']} "
-              f"MB/s -> depth-2 {out['put_overlap_mbps']} MB/s "
+        print(f"[pipeline] put overlap: legacy serial "
+              f"{out['put_serial_mbps']} MB/s -> staged depth-{depth} "
+              f"{out['put_overlap_mbps']} MB/s "
               f"({out['overlap_speedup']}x, efficiency "
-              f"{out['overlap_efficiency']} of the "
-              f"max(compute, host) bound)")
+              f"{out['overlap_efficiency']} of the machine bound on "
+              f"{cpus} CPU(s); stages {out['stage_seconds']})")
     return out
 
 

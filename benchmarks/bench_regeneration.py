@@ -67,6 +67,11 @@ def _timeit_pair(fn_a, fn_b, reps=3, rounds=16, window_s=0.0, pause_s=1.0):
 
 def run(ks=(2, 4, 8), block_symbols: int = 1 << 18, quiet=False,
         sample_window_s: float = 0.0):
+    # distance-to-roofline for the repair kernel (PR 9 convention): the
+    # fused regenerate streams gamma bytes, so its MB/s is bounded by
+    # host memcpy bandwidth like every GF kernel on CPU
+    from benchmarks.bench_codes import memcpy_mbps
+    copy_mbps = memcpy_mbps(8)
     rows = []
     for k in ks:
         spec = CodeSpec.make(k, 257)
@@ -139,6 +144,8 @@ def run(ks=(2, 4, 8), block_symbols: int = 1 << 18, quiet=False,
             "embedded_mbps": round(gamma_mb / max(t_fused, 1e-9), 1),
             "embedded_unfused_mbps": round(gamma_mb / max(t_unfused, 1e-9), 1),
             "batch_mbps": round(n * gamma_mb / max(t_batch, 1e-9), 1),
+            "roofline_frac_of_memcpy": round(
+                gamma_mb / max(t_fused, 1e-9) / copy_mbps, 4),
             "speedup_fused_vs_unfused": round(t_unfused / max(t_fused, 1e-9), 2),
             "speedup": round(t_solve / max(t_fused, 1e-9), 2),
             "ops_embedded_stream": emb.stream_ops,

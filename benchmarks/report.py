@@ -144,6 +144,31 @@ def _bench_headline(stem: str, rec) -> str:
     return f"(unregistered trajectory file: {keys})"
 
 
+def _bench_gap(stem: str, rec) -> str:
+    """The overlap/roofline column (DESIGN.md §16.3): how close each
+    hot path runs to its machine bound, so the trajectory of the gap is
+    visible across PRs.  Files without the signal show a dash."""
+    try:
+        if stem == "BENCH_pipeline":
+            ov = rec["overlap"]
+            return (f"overlap {ov['overlap_speedup']}x, "
+                    f"{ov['overlap_efficiency']:.0%} of bound "
+                    f"({ov['host_parallelism']} CPU)")
+        if stem == "BENCH_codes":
+            fr = rec["frontier"]
+            enc = max(r["roofline_frac_of_memcpy"] for r in fr)
+            rep = max(r["repair_roofline_frac_of_memcpy"] for r in fr)
+            dec = max(r["decode_roofline_frac_of_memcpy"] for r in fr)
+            return (f"roofline enc {enc:.1%} / repair {rep:.1%} / "
+                    f"decode {dec:.1%} of memcpy")
+        if stem == "BENCH_repair":
+            r = rec["regeneration"][-1]
+            return f"fused repair {r['roofline_frac_of_memcpy']:.1%} of memcpy"
+    except (KeyError, IndexError, TypeError):
+        pass
+    return "—"
+
+
 # Every trajectory file the fast sweep is expected to produce; a missing
 # one gets an explicit skip row instead of silently vanishing from the
 # table (a CI summary that shrinks should be loud about why).
@@ -158,18 +183,21 @@ def bench_table() -> str:
     the CI bench-smoke job prints after the fast sweep.  Expected files
     that are absent get a skip-with-notice row; unexpected extras are
     still summarized."""
-    out = ["| trajectory file | headline |", "|---|---|"]
+    out = ["| trajectory file | headline | overlap / roofline |",
+           "|---|---|---|"]
     files = sorted(REPO_ROOT.glob("BENCH_*.json"))
     if not files:
         return "(no repo-root BENCH_*.json found — run benchmarks.run first)"
     present = {f.stem for f in files}
     for f in files:
         rec = json.loads(f.read_text())
-        out.append(f"| `{f.name}` | {_bench_headline(f.stem, rec)} |")
+        out.append(f"| `{f.name}` | {_bench_headline(f.stem, rec)} | "
+                   f"{_bench_gap(f.stem, rec)} |")
     for stem in EXPECTED_BENCH:
         if stem not in present:
             out.append(f"| `{stem}.json` | (missing — run "
-                       f"`PYTHONPATH=src python -m benchmarks.run --fast`) |")
+                       f"`PYTHONPATH=src python -m benchmarks.run --fast`) | "
+                       f"— |")
     return "\n".join(out)
 
 

@@ -74,6 +74,7 @@ from repro.core import gf, placement
 from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
 from repro.exec.pipeline import Pipeline
+from repro.exec.plan import planning_enabled
 from repro.io.blob import BlobBackend, LocalBlob
 from repro.io.retry import RetryPolicy, RetryStats
 
@@ -254,6 +255,16 @@ class MSRCheckpointer:
         host I/O + depth-bounded compute/consume overlap."""
         return Pipeline(io_workers=io_workers or self.io_workers,
                         depth=self.pipeline_depth)
+
+    def _staging_pool(self):
+        """The planner's host staging pool (DESIGN.md §16.1), or None
+        when the planner path is off — save/restore/scrub stage their
+        big landing / pack / download buffers there so steady-state
+        checkpoint loops allocate nothing per step."""
+        planner = getattr(self.code, "planner", None)
+        if planner is None or not planning_enabled():
+            return None
+        return planner.staging
 
     # ------------------------------------------------------------------ paths
     def _step_dir(self, step: int) -> pathlib.Path:
@@ -470,6 +481,8 @@ class MSRCheckpointer:
         s_total = blocks.shape[1]
         tile = self.save_tile_symbols
         crcs: dict[str, int] = {}
+        pool = self._staging_pool()
+        stage_bufs: list[np.ndarray] = []
         try:
             with self._pipe() as pipe:
                 # systematic blocks are raw bytes — no compute, write
@@ -480,15 +493,22 @@ class MSRCheckpointer:
                 # depth-bounded pipeline over PLANNED encode tiles: tile t+1
                 # is dispatched (AOT executable, bucketed shape — zero
                 # recompiles at steady state) before tile t lands in the
-                # host buffer
-                red = np.empty((n, s_total), np.int32)
+                # host buffer — a pooled one (DESIGN.md §16.1), so a
+                # steady-state save loop allocates no fresh (n, S) arrays
+                if pool is not None:
+                    red = pool.acquire((n, s_total), np.int32)
+                    low_buf = pool.acquire((n, s_total), np.uint8)
+                    stage_bufs += [red, low_buf]
+                else:
+                    red = np.empty((n, s_total), np.int32)
+                    low_buf = None
                 pipe.stream_tiles(
                     s_total, tile,
                     lambda sl: self.code.encode_planned(blocks[:, sl]),
                     lambda sl, res: red.__setitem__(
                         (slice(None), sl), res.host()))
                 # vectorized pack over all nodes at once (no per-node loop)
-                low, his = gf.pack257_rows(red)
+                low, his = gf.pack257_rows(red, out=low_buf)
                 for i in range(1, n + 1):
                     pipe.submit(self._save_red_block, tmp, i,
                                 low[i - 1], his[i - 1], crcs)
@@ -513,6 +533,12 @@ class MSRCheckpointer:
             except OSError:
                 pass
             raise
+        finally:
+            # the pipe context exit joined every write, so the staged
+            # buffers are quiescent — safe to recycle (DESIGN.md §16.2)
+            if pool is not None:
+                for b in stage_bufs:
+                    pool.release(b)
         self._gc()
         return manifest
 
@@ -709,14 +735,22 @@ class MSRCheckpointer:
                 futs = [read_async(self._node_files(step, i)[0]) for i in use]
                 futs_r = [reader.submit_packed(self._node_files(step, i)[1])
                           for i in use]
-                data_rows = np.stack([result(x) for x in futs])
+                # the (2k, S) download matrix stages in a pooled buffer
+                # (DESIGN.md §16.1): data rows land in the top half as
+                # the reads resolve, the redundancy rows expand into the
+                # bottom half in one vectorized unpack — no stack or
+                # concatenate copy on the restore path
+                pool = self._staging_pool()
+                s_sym = tspec.block_symbols
+                downloads = (pool.acquire((2 * k, s_sym), np.int32)
+                             if pool is not None
+                             else np.empty((2 * k, s_sym), np.int32))
+                for j, x in enumerate(futs):
+                    downloads[j] = result(x)
                 packed = [result(x) for x in futs_r]
-                # one vectorized unpack for all k redundancy rows — no
-                # per-pair unpack257 loop on the read path
-                red_rows = gf.unpack257_rows(
-                    np.stack([lo for lo, _ in packed]),
-                    [hi for _, hi in packed])
-                downloads = np.concatenate([data_rows, red_rows])  # (2k, S)
+                gf.unpack257_rows(np.stack([lo for lo, _ in packed]),
+                                  [hi for _, hi in packed],
+                                  out=downloads[k:])
                 if repair and failed:
                     # one decode matmul yields the data AND every lost pair
                     mat = self.code.repair.decode_repair_matrix(
@@ -733,6 +767,9 @@ class MSRCheckpointer:
                 else:
                     mat = self.code.repair.decode_matrix(tuple(use))
                     data = self._decode_tiled(pipe, mat, downloads)
+                if pool is not None:
+                    # every decode tile has materialized — quiescent
+                    pool.release(downloads)
                 path = "reconstruct"
             # context exit joins the repaired-pair writes
 
@@ -875,9 +912,14 @@ class MSRCheckpointer:
                     mismatched.add(i)
                 if cr is not None and _crc_red(*packed[i - 1]) != cr:
                     mismatched.add(i)
-            # all n redundancy rows expanded in ONE vectorized unpack
-            red = gf.unpack257_rows(np.stack([lo for lo, _ in packed]),
-                                    [hi for _, hi in packed])
+            # all n redundancy rows expanded in ONE vectorized unpack —
+            # into a pooled staging buffer, recycled after the last tile
+            pool = self._staging_pool()
+            low_all = np.stack([lo for lo, _ in packed])
+            red_buf = (pool.acquire(low_all.shape, np.int32)
+                       if pool is not None else None)
+            red = gf.unpack257_rows(low_all, [hi for _, hi in packed],
+                                    out=red_buf)
             nodes = list(range(1, n + 1))
             prev = np.asarray([self.code.repair_plan(i).prev_node - 1
                                for i in nodes])
@@ -897,6 +939,8 @@ class MSRCheckpointer:
                 lambda sl: self.code.repair.regenerate_batch_planned(
                     nodes, red[:, sl][prev], data[:, sl][helper_idx]),
                 flag)
+            if pool is not None:
+                pool.release(red)       # last tile flagged — quiescent
         return ScrubReport(step=step, nodes_checked=n,
                            mismatched_nodes=tuple(sorted(mismatched)),
                            bytes_read=reader.bytes_read)

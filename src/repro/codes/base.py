@@ -277,6 +277,29 @@ class ErasureCode(abc.ABC):
         """(d, S) stacked helper sends -> the lost node's (q, S) blocks."""
         return self.apply_planned(self.newcomer_matrix(plan), sends).host()
 
+    def regenerate_many_planned(self, plans: Sequence[CodeRepairPlan],
+                                sends: np.ndarray) -> PlanResult:
+        """F independent single-loss regenerations in ONE batched
+        dispatch: the per-plan (q, d) newcomer matrices stack to
+        (F, q, d), the (F, d, S) helper sends ride ``matmul_batch``'s
+        per-element vmapped matmul (DESIGN.md §16.5).  This is the
+        coalescing path for families whose newcomer matrix varies per
+        (node, helpers) — ``supports_batched_regen()`` families that
+        cannot use the store's shared-matrix ``regenerate_batch``.
+        ``host()`` yields (F, q, S) rebuilt shares."""
+        sends = np.asarray(sends, np.int32)
+        if sends.ndim != 3 or sends.shape[0] != len(plans):
+            raise ValueError(f"expected ({len(plans)}, d, S) sends, got "
+                             f"{sends.shape}")
+        mats = np.stack([np.asarray(self.newcomer_matrix(p), np.int32)
+                         for p in plans])
+        if self.planner is not None and planning_enabled():
+            return self.planner.matmul_batch(mats, sends,
+                                             tag=self.family_key())
+        out = ((mats.astype(np.int64) @ sends.astype(np.int64))
+               % self.p).astype(np.int32)
+        return PlanResult(out, sends.shape[-1], batch=len(plans))
+
     # ------------------------------------------------------------- dispatch
     def apply_planned(self, mat, blocks) -> PlanResult:
         """Family-tagged planned (mat @ blocks) mod p through the shared

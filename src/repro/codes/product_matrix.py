@@ -231,5 +231,14 @@ class ProductMatrixMSR(ErasureCode):
         self._newcomer_cache[key] = mat
         return mat
 
+    def supports_batched_regen(self) -> bool:
+        """The newcomer matrix varies per (node, helpers), so the
+        shared-matrix ``regenerate_batch`` vmap does not apply — but
+        every plan shares the (alpha, d) geometry, so the store
+        coalesces PM repairs through the per-element batched
+        ``regenerate_many_planned`` dispatch instead (DESIGN.md §16.5).
+        """
+        return True
+
 
 __all__ = ["ProductMatrixMSR"]

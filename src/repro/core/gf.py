@@ -17,12 +17,21 @@ Everything here is pure JAX (jit/vmap/shard_map friendly).  Host-side helpers
 """
 from __future__ import annotations
 
+from time import perf_counter
 from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_P = 257
+
+
+def record_stage(name: str, seconds: float) -> None:
+    # lazy import: the stage clock lives in repro.exec.staging and core
+    # carries no module-level edge into exec (same pattern as the
+    # envelope import below)
+    from repro.exec.staging import record_stage as rec
+    rec(name, seconds)
 
 # Max number of accumulation terms an int32 lane can hold before a `mod p`
 # fold is due: 32767 terms for p = 257 (the lazy mod-folding envelope,
@@ -237,6 +246,30 @@ def bytes_to_symbols(data: bytes | np.ndarray, p: int = DEFAULT_P) -> np.ndarray
     return arr.astype(np.int32)
 
 
+def bytes_to_symbols_into(data: bytes | np.ndarray, out: np.ndarray,
+                          p: int = DEFAULT_P) -> np.ndarray:
+    """One-pass byte embedding into a preallocated int32 symbol buffer
+    (zero-copy staging, DESIGN.md §16.1): the uint8 -> int32 cast and
+    the stripe zero-padding land in a single strided write over ``out``
+    instead of the legacy astype -> pad -> astype copy chain.  ``out``
+    must be a flat int32 array at least ``len(data)`` long; the tail
+    past the payload is zeroed.  Counts toward the "pack" stage clock.
+    """
+    if p <= 256:
+        raise ValueError("byte embedding requires p > 256")
+    arr = np.frombuffer(data, dtype=np.uint8) \
+        if isinstance(data, (bytes, bytearray)) else np.asarray(data, np.uint8)
+    if out.dtype != np.int32 or out.ndim != 1 or out.size < arr.size:
+        raise ValueError(f"need flat int32 out of >= {arr.size} symbols, "
+                         f"got {out.dtype} {out.shape}")
+    from time import perf_counter
+    t0 = perf_counter()
+    out[:arr.size] = arr
+    out[arr.size:] = 0
+    record_stage("pack", perf_counter() - t0)
+    return out
+
+
 def symbols_to_bytes(sym: np.ndarray) -> bytes:
     sym = np.asarray(sym)
     if sym.max(initial=0) > 255 or sym.min(initial=0) < 0:
@@ -265,29 +298,56 @@ def unpack257(low: np.ndarray, hi: np.ndarray, shape=None) -> np.ndarray:
     return out.reshape(shape) if shape is not None else out
 
 
-def pack257_rows(sym: np.ndarray) -> tuple[np.ndarray, list[np.ndarray]]:
+def pack257_rows(sym: np.ndarray, *, out: np.ndarray | None = None,
+                 ) -> tuple[np.ndarray, list[np.ndarray]]:
     """Vectorized per-row pack257 for a (n, S) block matrix.
 
     One pass over the whole matrix (no per-node Python loop): returns the
     uint8 low bytes (n, S) and a list of n per-row index-of-256 arrays.
+
+    ``out`` (uint8, same shape) receives the low bytes in place — the
+    zero-copy staging path (DESIGN.md §16): callers pass a pooled
+    buffer so a checkpoint save stages no fresh (n, S) allocation.  The
+    int32 -> uint8 truncating store IS the ``& 0xFF`` (values are
+    0..256, so only 256 wraps — to 0, as before).
     """
     sym = np.asarray(sym)
     if sym.ndim != 2:
         raise ValueError(f"expected (n, S) block matrix, got {sym.shape}")
     if sym.min(initial=0) < 0 or sym.max(initial=0) > 256:
         raise ValueError("symbols out of GF(257) range")
-    low = (sym & 0xFF).astype(np.uint8)       # 256 -> 0, others unchanged
+    t0 = perf_counter()
+    if out is None:
+        low = (sym & 0xFF).astype(np.uint8)   # 256 -> 0, others unchanged
+    else:
+        if out.shape != sym.shape or out.dtype != np.uint8:
+            raise ValueError(f"out must be uint8 {sym.shape}, got "
+                             f"{out.dtype} {out.shape}")
+        np.copyto(out, sym, casting="unsafe")
+        low = out
     rows, cols = np.nonzero(sym == 256)
     splits = np.searchsorted(rows, np.arange(1, sym.shape[0]))
     his = np.split(cols.astype(np.int64), splits)
+    record_stage("pack", perf_counter() - t0)
     return low, his
 
 
-def unpack257_rows(low: np.ndarray, his: Sequence[np.ndarray]) -> np.ndarray:
-    """Inverse of pack257_rows."""
-    out = np.asarray(low).astype(np.int32)
+def unpack257_rows(low: np.ndarray, his: Sequence[np.ndarray], *,
+                   out: np.ndarray | None = None) -> np.ndarray:
+    """Inverse of pack257_rows.  ``out`` (int32, same shape) receives
+    the expansion in place — pooled-buffer staging for restore/scrub."""
+    t0 = perf_counter()
+    if out is None:
+        out = np.asarray(low).astype(np.int32)
+    else:
+        low = np.asarray(low)
+        if out.shape != low.shape or out.dtype != np.int32:
+            raise ValueError(f"out must be int32 {low.shape}, got "
+                             f"{out.dtype} {out.shape}")
+        np.copyto(out, low)
     for i, hi in enumerate(his):
         out[i, hi] = 256
+    record_stage("pack", perf_counter() - t0)
     return out
 
 

@@ -30,9 +30,13 @@ Two lifecycles:
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
+from time import perf_counter
 from typing import Callable, Iterable, Optional, Sequence
+
+from . import staging
 
 DEFAULT_DEPTH = 2
 
@@ -59,6 +63,42 @@ class Pipeline:
         self.depth = max(1, int(depth))
         self._ex: Optional[ThreadPoolExecutor] = None
         self._futs: list[Future] = []
+        self._stage_lock = threading.Lock()
+        self._stage: dict = {}
+        self.reset_stage_stats()
+
+    # ------------------------------------------------------ stage accounting
+    def reset_stage_stats(self) -> None:
+        """Zero this pipeline's stage timers and rebase the process-wide
+        pack/pad clocks (DESIGN.md §16.3)."""
+        with self._stage_lock:
+            self._stage = {"t_stage_read": 0.0, "t_dispatch": 0.0,
+                           "t_consume": 0.0}
+            self._stage_base = staging.stage_times()
+
+    def _acct(self, name: str, dt: float) -> None:
+        with self._stage_lock:
+            self._stage[name] += dt
+
+    def stage_stats(self) -> dict:
+        """Cumulative wall seconds per pipeline stage since the last
+        :meth:`reset_stage_stats`.
+
+        ``t_stage_read`` / ``t_dispatch`` / ``t_consume`` are timed
+        around this pipeline's read/compute/consume callbacks (read time
+        is pool-thread time, so at depth >= 2 it largely overlaps the
+        other two).  ``t_pack`` (flatten / pack257 staging writes) and
+        ``t_pad`` (planner bucket padding) are deltas of the
+        process-wide stage clock in `repro.exec.staging` — the staging
+        work those callbacks triggered, wherever it ran.
+        """
+        g = staging.stage_times()
+        with self._stage_lock:
+            out = dict(self._stage)
+            base = self._stage_base
+        out["t_pack"] = g.get("pack", 0.0) - base.get("pack", 0.0)
+        out["t_pad"] = g.get("pad", 0.0) - base.get("pad", 0.0)
+        return out
 
     # ------------------------------------------------------------ lifecycle
     def _pool(self) -> ThreadPoolExecutor:
@@ -140,13 +180,28 @@ class Pipeline:
         items = list(items)
         if not items:
             return
+
+        timed_read = None
+        if read is not None:
+            def timed_read(it):
+                t0 = perf_counter()
+                data = read(it)
+                self._acct("t_stage_read", perf_counter() - t0)
+                return data
+
         # depth 1 is the true serial baseline: no prefetch, reads run
         # inline — stage overlap exists only at depth >= 2
         ahead = self.depth if self.depth > 1 else 0
         read_futs: dict[int, Future] = {}
         if read is not None:
             for j in range(min(ahead, len(items))):
-                read_futs[j] = self._pool().submit(read, items[j])
+                read_futs[j] = self._pool().submit(timed_read, items[j])
+
+        def _consume(it0, out0):
+            t0 = perf_counter()
+            consume(it0, out0)
+            self._acct("t_consume", perf_counter() - t0)
+
         pending: deque = deque()
         try:
             for i, item in enumerate(items):
@@ -154,20 +209,24 @@ class Pipeline:
                     if i in read_futs:
                         data = read_futs.pop(i).result()
                     else:
-                        data = read(items[i])
+                        data = timed_read(items[i])
                     nxt = i + ahead
                     if ahead and nxt < len(items):
-                        read_futs[nxt] = self._pool().submit(read, items[nxt])
+                        read_futs[nxt] = self._pool().submit(
+                            timed_read, items[nxt])
+                    t0 = perf_counter()
                     out = compute(item, data)
                 else:
+                    t0 = perf_counter()
                     out = compute(item)
+                self._acct("t_dispatch", perf_counter() - t0)
                 pending.append((item, out))
                 while len(pending) >= self.depth:
                     it0, out0 = pending.popleft()
-                    consume(it0, out0)
+                    _consume(it0, out0)
             while pending:
                 it0, out0 = pending.popleft()
-                consume(it0, out0)
+                _consume(it0, out0)
         finally:
             for f in read_futs.values():     # error path: drain prefetches
                 f.cancel()

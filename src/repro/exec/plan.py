@@ -52,11 +52,14 @@ from __future__ import annotations
 import contextlib
 import math
 import threading
+from time import perf_counter
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .staging import StagingPool, record_stage
 
 # Ladder defaults: buckets 4096, 8192, 16384, ... — stream extents below
 # the floor all share the smallest executable, and a ratio-2 ladder
@@ -164,18 +167,30 @@ class PlanResult:
     per-shape compiles the plan cache exists to remove).
     """
 
-    __slots__ = ("raw", "symbols", "batch")
+    __slots__ = ("raw", "symbols", "batch", "_release")
 
-    def __init__(self, raw, symbols: int, batch: Optional[int] = None):
+    def __init__(self, raw, symbols: int, batch: Optional[int] = None,
+                 release: Optional[Callable] = None):
         self.raw = raw
         self.symbols = int(symbols)
         self.batch = None if batch is None else int(batch)
+        self._release = release
 
     def host(self) -> np.ndarray:
         """Block and return the exact (unpadded) result as numpy —
         stream padding sliced off the last axis, batch padding (when the
-        op bucketed a leading batch axis) off the first."""
+        op bucketed a leading batch axis) off the first.
+
+        Materializing is also the staging release point: any pooled pad
+        buffers the dispatch read are recycled here, AFTER the blocking
+        conversion proves the compute consumed them (DESIGN.md §16.2).
+        A PlanResult dropped without ``host()`` simply strands its
+        buffers — the pool never reissues an unreleased buffer, so that
+        is safe, just not free."""
         out = np.asarray(self.raw)
+        if self._release is not None:
+            rel, self._release = self._release, None
+            rel()
         if out.shape[-1] != self.symbols:
             out = out[..., : self.symbols]
         if self.batch is not None and out.shape[0] != self.batch:
@@ -187,32 +202,58 @@ class PlanResult:
         return out if dtype is None else out.astype(dtype)
 
 
-def _pad_last(arr: np.ndarray, bucket: int) -> np.ndarray:
+def _pad_last(arr: np.ndarray, bucket: int,
+              pool: Optional["StagingPool"] = None,
+              bufs: Optional[list] = None) -> np.ndarray:
     """Zero-pad the stream (last) axis up to ``bucket``.
 
-    Always a FRESH buffer when padding happens: JAX reads host operands
-    asynchronously (after dispatch returns), so a reused scratch buffer
-    could be overwritten while a previous in-flight compute still reads
-    it — per-call buffers are the price of depth-2 pipelining.
+    JAX reads host operands asynchronously (after dispatch returns), so
+    a scratch buffer may not be reused while an in-flight compute still
+    reads it.  With ``pool`` set, the pad stages into a pooled buffer
+    appended to ``bufs`` — the caller attaches the buffers to the
+    PlanResult, whose ``host()`` (the dispatch-completion proof)
+    releases them back to the pool (DESIGN.md §16.2).  Without a pool
+    the historical always-fresh buffer keeps the same safety the hard
+    way.
     """
     arr = np.asarray(arr, np.int32)
     s = arr.shape[-1]
     if s == bucket:
         return arr
-    out = np.zeros(arr.shape[:-1] + (bucket,), np.int32)
-    out[..., :s] = arr
+    t0 = perf_counter()
+    if pool is None:
+        out = np.zeros(arr.shape[:-1] + (bucket,), np.int32)
+        out[..., :s] = arr
+    else:
+        out = pool.acquire(arr.shape[:-1] + (bucket,), np.int32)
+        out[..., :s] = arr
+        out[..., s:] = 0            # reused buffer: tail must be re-zeroed
+        bufs.append(out)
+    record_stage("pad", perf_counter() - t0)
     return out
 
 
-def _pad_both(arr: np.ndarray, f_bucket: int, s_bucket: int) -> np.ndarray:
+def _pad_both(arr: np.ndarray, f_bucket: int, s_bucket: int,
+              pool: Optional["StagingPool"] = None,
+              bufs: Optional[list] = None) -> np.ndarray:
     """Pad axis 0 to ``f_bucket`` and the last axis to ``s_bucket`` in
-    one copy (the batched-regenerate operands)."""
+    one copy (the batched-regenerate operands); pooled like
+    :func:`_pad_last` when ``pool`` is set."""
     arr = np.asarray(arr, np.int32)
     f, s = arr.shape[0], arr.shape[-1]
     if f == f_bucket and s == s_bucket:
         return arr
-    out = np.zeros((f_bucket,) + arr.shape[1:-1] + (s_bucket,), np.int32)
-    out[:f, ..., :s] = arr
+    t0 = perf_counter()
+    shape = (f_bucket,) + arr.shape[1:-1] + (s_bucket,)
+    if pool is None:
+        out = np.zeros(shape, np.int32)
+        out[:f, ..., :s] = arr
+    else:
+        out = pool.acquire(shape, np.int32)
+        out[...] = 0
+        out[:f, ..., :s] = arr
+        bufs.append(out)
+    record_stage("pad", perf_counter() - t0)
     return out
 
 
@@ -270,6 +311,10 @@ class PlanCache:
         if mesh is not None:
             donate = False              # see class docstring
         self.donate = bool(donate)
+        # pooled zero-copy pad staging (DESIGN.md §16): pad buffers are
+        # acquired here and released by PlanResult.host() once the
+        # dispatch that read them has provably completed
+        self.staging = StagingPool()
         self._plans: dict[tuple, Callable] = {}
         self._lock = threading.Lock()
         self.hits = 0
@@ -344,6 +389,19 @@ class PlanCache:
             self._plans[key] = exe
             return exe
 
+    def _releaser(self, bufs: list) -> Optional[Callable]:
+        """A PlanResult release hook recycling ``bufs`` (pooled pad
+        staging) — None when nothing was staged."""
+        if not bufs:
+            return None
+        pool = self.staging
+
+        def rel():
+            for b in bufs:
+                pool.release(b)
+
+        return rel
+
     @staticmethod
     def _tagged(key: tuple, tag: Optional[str]) -> tuple:
         """Mix a family tag into a plan key.  ``None`` (every
@@ -404,8 +462,10 @@ class PlanCache:
                                  (mat.shape, blocks.shape[:-1] + (pad,)),
                                  donate)
 
-        return PlanResult(
-            self._exe(key, build, tag)(mat, _pad_last(blocks, pad)), s)
+        bufs: list = []
+        padded = _pad_last(blocks, pad, self.staging, bufs)
+        return PlanResult(self._exe(key, build, tag)(mat, padded), s,
+                          release=self._releaser(bufs))
 
     def circulant_encode(self, data, c, *, tag: Optional[str] = None,
                          ) -> PlanResult:
@@ -430,7 +490,10 @@ class PlanCache:
                                  ((data.shape[0], pad),),
                                  (0,) if self.donate else ())
 
-        return PlanResult(self._exe(key, build, tag)(_pad_last(data, pad)), s)
+        bufs: list = []
+        padded = _pad_last(data, pad, self.staging, bufs)
+        return PlanResult(self._exe(key, build, tag)(padded), s,
+                          release=self._releaser(bufs))
 
     def regenerate(self, rmat, r_prev, next_data) -> PlanResult:
         """The fused (2, k+1) repair-matrix application (DESIGN.md §4):
@@ -453,8 +516,11 @@ class PlanCache:
             return self._compile("regenerate", self._regen_fn(),
                                  (rmat.shape, (pad,), (k, pad)), donate)
 
+        bufs: list = []
         return PlanResult(self._exe(key, build)(
-            rmat, _pad_last(r_prev, pad), _pad_last(next_data, pad)), s)
+            rmat, _pad_last(r_prev, pad, self.staging, bufs),
+            _pad_last(next_data, pad, self.staging, bufs)), s,
+            release=self._releaser(bufs))
 
     def regenerate_batch(self, rmat, r_prevs, next_data) -> PlanResult:
         """Vmapped fused regeneration with BOTH variable axes bucketed:
@@ -489,9 +555,59 @@ class PlanCache:
                                  (rmat.shape, (fb, pad), (fb, k, pad)),
                                  donate)
 
+        bufs: list = []
         return PlanResult(self._exe(key, build)(
-            rmat, _pad_both(r_prevs, fb, pad),
-            _pad_both(next_data, fb, pad)), s, batch=f)
+            rmat, _pad_both(r_prevs, fb, pad, self.staging, bufs),
+            _pad_both(next_data, fb, pad, self.staging, bufs)), s, batch=f,
+            release=self._releaser(bufs))
+
+    def matmul_batch(self, mats, blocks, *,
+                     tag: Optional[str] = None) -> PlanResult:
+        """Per-element batched (q, d) @ (d, S) mod p — the coalesced
+        regeneration dispatch for families WITHOUT a node-invariant
+        repair matrix (product-matrix MSR: the newcomer matrix differs
+        per (node, helpers), so ``regenerate_batch``'s shared-matrix
+        vmap does not apply).
+
+        mats: (F, q, d) int — one newcomer matrix per batch element.
+        blocks: (F, d, S) — the stacked helper sends per element.
+        Returns (F, q, S) via ``host()``; both the batch axis and the
+        stream axis are bucketed (zero-padded elements multiply zeros).
+        """
+        mats = np.asarray(mats, np.int32)
+        blocks = np.asarray(blocks, np.int32)
+        if mats.ndim != 3 or blocks.ndim != 3 or \
+                mats.shape[0] != blocks.shape[0] or \
+                mats.shape[2] != blocks.shape[1]:
+            raise ValueError(f"matmul_batch needs (F, q, d) mats and "
+                             f"(F, d, S) blocks, got {mats.shape} / "
+                             f"{blocks.shape}")
+        f, s = blocks.shape[0], blocks.shape[-1]
+        if not _ENABLED:
+            out = ((mats.astype(np.int64) @ blocks.astype(np.int64))
+                   % self.p).astype(np.int32)
+            return PlanResult(out, s, batch=f)
+        b, pad = self.stream_pad(s)
+        fb = self.batch_bucket(f)
+        key = self._tagged(("matmul_batch", mats.shape[1:], fb, b), tag)
+
+        def build():
+            def fn(ms, xs):
+                return jax.vmap(
+                    lambda m, x: self.backend.matmul(m, x, self.p))(ms, xs)
+
+            return self._compile(
+                "matmul_batch", fn,
+                ((fb,) + mats.shape[1:], (fb, blocks.shape[1], pad)))
+
+        if mats.shape[0] != fb:     # tiny (F, q, d) stack: plain pad
+            pm = np.zeros((fb,) + mats.shape[1:], np.int32)
+            pm[:f] = mats
+            mats = pm
+        bufs: list = []
+        return PlanResult(self._exe(key, build, tag)(
+            mats, _pad_both(blocks, fb, pad, self.staging, bufs)),
+            s, batch=f, release=self._releaser(bufs))
 
     def _regen_fn(self):
         return make_regen_fn(self.backend.matmul, self.p)

@@ -201,6 +201,13 @@ register_rule(ShardingRule(
     out_specs=P(None, None, STREAM_AXIS),
     doc="vmapped fused regeneration: batch (F) axis replicated per "
         "device, stream split over S"))
+register_rule(ShardingRule(
+    "matmul_batch",
+    in_specs=(P(), P(None, None, STREAM_AXIS)),
+    out_specs=P(None, None, STREAM_AXIS),
+    doc="per-element batched matmul (product-matrix batched regen, "
+        "DESIGN.md §16.5): the (F, q, d) matrix stack is replicated, "
+        "the (F, d, S) sends and (F, q, S) product split over S"))
 
 
 def shard_body(fn: Callable, op: str, mesh: StreamMesh) -> Callable:

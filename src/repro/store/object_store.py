@@ -29,6 +29,7 @@ queue drains.
 from __future__ import annotations
 
 import dataclasses
+import os
 import zlib
 from typing import Any, Callable, Iterator, Optional, Sequence
 
@@ -43,6 +44,7 @@ from repro.core.msr import DoubleCirculantMSR
 from repro.cluster.events import Event
 from repro.cluster.metrics import LinkModel, MetricsLog
 from repro.exec.pipeline import Pipeline
+from repro.exec.plan import planning_enabled
 from repro.io.faults import FaultInjector
 from repro.io.retry import RetryPolicy, RetryStats
 
@@ -79,17 +81,30 @@ class ShareIntegrityError(OSError):
         self.stripe = t
 
 
-def share_crc(a: np.ndarray, r: np.ndarray) -> int:
+def share_crc(a: np.ndarray, r: np.ndarray, *, zero_copy: bool = True) -> int:
     """CRC32 of one node share's LOGICAL payload — PR 6's checkpoint
     manifest convention (DESIGN.md §12.2) applied per share: the data
     block as raw uint8 bytes chained with the redundancy block's
     ``pack257`` halves (low bytes, then int64 indexes of 256).  Repairs
     are bit-exact, so a rebuilt share matches its put-time CRC without
-    any ledger rewrite."""
-    c = zlib.crc32(np.ascontiguousarray(a, np.uint8).tobytes())
-    low, hi = gf.pack257(np.asarray(r, np.int32))
-    c = zlib.crc32(np.ascontiguousarray(low, np.uint8).tobytes(), c)
-    return zlib.crc32(np.ascontiguousarray(hi, np.int64).tobytes(), c)
+    any ledger rewrite.
+
+    Hot on the put/repair install path: the default feeds zlib the
+    array buffers directly (no ``.tobytes()`` heap copies) and folds
+    ``pack257`` inline — the truncating uint8 cast IS ``% 256`` for
+    symbols in [0, 256].  ``zero_copy=False`` keeps the legacy
+    three-copy chain as the measurable A/B baseline (DESIGN.md §16.3);
+    both produce the SAME CRC for every GF(257) share."""
+    if not zero_copy:
+        c = zlib.crc32(np.ascontiguousarray(a, np.uint8).tobytes())
+        low, hi = gf.pack257(np.asarray(r, np.int32))
+        c = zlib.crc32(np.ascontiguousarray(low, np.uint8).tobytes(), c)
+        return zlib.crc32(np.ascontiguousarray(hi, np.int64).tobytes(), c)
+    c = zlib.crc32(np.ascontiguousarray(a, np.uint8))
+    sym = np.ascontiguousarray(r, np.int32).reshape(-1)
+    c = zlib.crc32(sym.astype(np.uint8), c)
+    return zlib.crc32(
+        np.ascontiguousarray(np.nonzero(sym == 256)[0].astype(np.int64)), c)
 
 
 class StoreMetrics(MetricsLog):
@@ -222,7 +237,10 @@ class CodedObjectStore:
         The store's overlapped I/O⇄compute engine (DESIGN.md §11.3):
         share placement / download gathering runs on ``io_workers`` pool
         threads while the next window's planned GF dispatch computes;
-        ``pipeline_depth=1`` disables the overlap (serial baseline).
+        ``pipeline_depth=1`` disables the overlap (serial baseline) and
+        ``pipeline_depth=None`` (default) auto-sizes to the machine —
+        depth 2 with >= 2 CPUs, the serial schedule on a single-core
+        host where overlap cannot win (DESIGN.md §16.4).
     put_tile_stripes : int
         Stripes per encode window on the put path — each window is one
         planned circulant dispatch whose share placement overlaps the
@@ -255,7 +273,7 @@ class CodedObjectStore:
                  link: Optional[LinkModel] = None,
                  backend: Optional[str] = None,
                  code: Optional[DoubleCirculantMSR] = None,
-                 io_workers: int = 4, pipeline_depth: int = 2,
+                 io_workers: int = 4, pipeline_depth: Optional[int] = None,
                  put_tile_stripes: int = 64,
                  repair_tile_tasks: int = 64,
                  faults: Optional[FaultInjector] = None,
@@ -286,6 +304,10 @@ class CodedObjectStore:
         self._subscribers: list[Callable[[Event], None]] = []
         self.put_tile_stripes = max(1, int(put_tile_stripes))
         self.repair_tile_tasks = max(1, int(repair_tile_tasks))
+        # zero-copy staging (DESIGN.md §16): pooled buffers on every hot
+        # path; False restores the legacy copying path (the A/B baseline
+        # the staging tests and BENCH_pipeline measure against)
+        self.staging_enabled = True
         # fault-injection seam (DESIGN.md §12): every share read/write is
         # guarded by faults.apply("read"/"write", "node:NN") under the
         # retry policy; faults=None short-circuits to zero overhead
@@ -293,7 +315,13 @@ class CodedObjectStore:
         self.retry = retry or RetryPolicy()
         self.retry_stats = RetryStats()
         # persistent overlapped I/O⇄compute engine (DESIGN.md §11.3):
-        # pool threads are reused across put/get/repair calls
+        # pool threads are reused across put/get/repair calls.  Depth
+        # auto-sizes to the machine (DESIGN.md §16.4): on a single-core
+        # host the host/compute overlap cannot win — read-ahead and
+        # install offload just add thread switching — so the default
+        # degenerates to the serial depth-1 schedule there.
+        if pipeline_depth is None:
+            pipeline_depth = 2 if (os.cpu_count() or 1) >= 2 else 1
         self.pipeline = Pipeline(io_workers=io_workers, depth=pipeline_depth)
         # per-object code classes (DESIGN.md §15): objects default to the
         # store's double-circulant class and take the battle-tested legacy
@@ -335,6 +363,40 @@ class CodedObjectStore:
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self.close()
+
+    # ---------------------------------------------------------- staging pool
+    def _stage_into(self, planner, rows: int, s: int):
+        """A pooled (rows, padded_extent) int32 staging buffer for a
+        stream operand of true extent ``s`` — or None when the planner
+        path is off (custom matmul backends, planning disabled).
+
+        Callers write the payload into ``buf[:, :s]``, zero the tail,
+        and hand the WHOLE buffer to the planned op: the extent is
+        exactly the plan cache's bucketed pad, so the planner's pad
+        stage sees an exact fit and dispatches the buffer as-is — the
+        flatten/gather copy and the bucket pad collapse into one write
+        (DESIGN.md §16.1).  Release the buffer only after the consuming
+        ``PlanResult.host()`` returned (§16.2).  ``staging_enabled =
+        False`` forces the legacy copying path everywhere — the A/B
+        baseline the staging tests and BENCH_pipeline compare against."""
+        if planner is None or not planning_enabled() \
+                or not self.staging_enabled:
+            return None
+        _, pad = planner.stream_pad(s)
+        return planner.staging.acquire((rows, pad), np.int32)
+
+    def _install(self, work) -> None:
+        """Run share-install work (CRC + staging copies) on the pipeline
+        pool only when it can genuinely overlap the next window's
+        dispatch (depth > 1).  A depth-1 store runs it inline: its pool
+        has one worker, so offloading would just move the same wall
+        time behind the trailing barrier AND let installs overlap the
+        main thread — a depth-1 store must stay a true serial baseline
+        for the overlap benchmark (DESIGN.md §16.3)."""
+        if self.pipeline.depth > 1:
+            self.pipeline.submit(work)
+        else:
+            work()
 
     # ------------------------------------------------------------ node state
     def subscribe(self, fn: Callable[[Event], None]) -> None:
@@ -504,20 +566,36 @@ class CodedObjectStore:
         cc = code_class if code_class is not None else self.default_class
         if not self._is_default(cc):
             return self._put_generic(key, payload, dtype, shape, meta, cc)
-        blocks, smap = self.stripes.chunk(payload)
+        blocks, smap = self.stripes.chunk(payload,
+                                          one_pass=self.staging_enabled)
         base = self._next_stripe
         self._next_stripe += smap.n_stripes
         tile = self.put_tile_stripes
+        # staged installs keep views into the per-put block/redundancy
+        # arrays (each share aliases a disjoint slice, so scrub and
+        # fault drills behave identically); the legacy baseline copies
+        copy_shares = not self.staging_enabled
+
+        planner = getattr(self.code, "planner", None)
 
         def flatten_window(t0: int):
             # host transpose on the pool — overlaps the previous window's
-            # encode and the one before's share placement
+            # encode and the one before's share placement.  With the
+            # planner on, the transpose lands directly in a pooled,
+            # bucket-padded staging buffer (zero-copy path, DESIGN.md
+            # §16.1): the planner's pad stage sees an exact fit.
             tb = blocks[t0: t0 + tile]
-            return tb.shape[0], self.stripes.flatten(tb)
+            tt = tb.shape[0]
+            buf = self._stage_into(planner, self.n, tt * self.S)
+            if buf is None:
+                return tt, self.stripes.flatten(tb)
+            self.stripes.flatten(tb, out=buf[:, :tt * self.S])
+            buf[:, tt * self.S:] = 0
+            return tt, buf
 
         def encode_window(t0: int, flat):
             tt, view = flat
-            return tt, self.code.encode_planned(view)
+            return tt, self.code.encode_planned(view), view
 
         staged: list[tuple[int, int, list]] = []    # (phys, t, share)
         # put-time integrity ledger: share_crcs[t][j] covers EVERY share,
@@ -525,17 +603,28 @@ class CodedObjectStore:
         crcs: list[list[int]] = [[0] * self.n for _ in range(smap.n_stripes)]
 
         def place_window(t0: int, res) -> None:
-            tt, planned = res
-            red = self.stripes.unflatten(planned.host(), tt)
-            for t in range(t0, t0 + tt):
-                pl = self.stripes.placement(base + t)
-                for j, phys in enumerate(pl):
-                    crcs[t][j] = share_crc(blocks[t, j], red[t - t0, j])
-                    if self.is_up(phys):
-                        self._guard("write", phys)
-                        staged.append((phys, t,
-                                       [j + 1, blocks[t, j].copy(),
-                                        red[t - t0, j].copy()]))
+            tt, planned, view = res
+            raw = planned.host()        # dispatch done: staging reusable
+            if planner is not None:
+                planner.staging.release(view)
+
+            def install() -> None:
+                # CRC + share copies off the critical thread: the pool
+                # installs window t while window t+1's encode dispatches
+                red = self.stripes.unflatten(raw[:, :tt * self.S], tt)
+                for t in range(t0, t0 + tt):
+                    pl = self.stripes.placement(base + t)
+                    for j, phys in enumerate(pl):
+                        a_blk, r_blk = blocks[t, j], red[t - t0, j]
+                        crcs[t][j] = share_crc(a_blk, r_blk,
+                                               zero_copy=not copy_shares)
+                        if self.is_up(phys):
+                            self._guard("write", phys)
+                            if copy_shares:
+                                a_blk, r_blk = a_blk.copy(), r_blk.copy()
+                            staged.append((phys, t, [j + 1, a_blk, r_blk]))
+
+            self._install(install)
 
         self.pipeline.map(range(0, smap.n_stripes, tile),
                           encode_window, place_window, read=flatten_window)
@@ -567,37 +656,54 @@ class CodedObjectStore:
         codec = self._codec_for(cc)
         code = codec.code
         n, q, d_blocks = codec.n, code.share_blocks, code.data_blocks
-        blocks, smap = codec.chunk(payload)
+        blocks, smap = codec.chunk(payload, one_pass=self.staging_enabled)
+        copy_shares = not self.staging_enabled
         base = self._next_stripe
         self._next_stripe += smap.n_stripes
         tile = self.put_tile_stripes
 
+        planner = getattr(code, "planner", None)
+
         def flatten_window(t0: int):
             tb = blocks[t0: t0 + tile]
-            return tb.shape[0], codec.flatten(tb)
+            tt = tb.shape[0]
+            buf = self._stage_into(planner, d_blocks, tt * self.S)
+            if buf is None:
+                return tt, codec.flatten(tb)
+            codec.flatten(tb, out=buf[:, :tt * self.S])
+            buf[:, tt * self.S:] = 0
+            return tt, buf
 
         def encode_window(t0: int, flat):
             tt, view = flat
-            return tt, code.encode_derived_planned(view)
+            return tt, code.encode_derived_planned(view), view
 
         staged: list[tuple[int, int, list]] = []    # (phys, t, share)
         crcs: list[list[int]] = [[0] * n for _ in range(smap.n_stripes)]
 
         def place_window(t0: int, res) -> None:
-            tt, planned = res
-            derived = codec.unflatten_rows(planned.host(),
-                                           code.derived_rows, tt)
-            for t in range(t0, t0 + tt):
-                pl = codec.placement(base + t)
-                for j, phys in enumerate(pl):
-                    blks = code.stripe_share_blocks(blocks[t],
-                                                    derived[t - t0], j + 1)
-                    crcs[t][j] = code.share_crc_blocks(blks)
-                    if self.is_up(phys):
-                        self._guard("write", phys)
-                        staged.append((phys, t, [j + 1] +
-                                       [np.asarray(b, np.int32).copy()
-                                        for b in blks]))
+            tt, planned, view = res
+            raw = planned.host()
+            if planner is not None:
+                planner.staging.release(view)
+
+            def install() -> None:
+                derived = codec.unflatten_rows(raw[:, :tt * self.S],
+                                               code.derived_rows, tt)
+                for t in range(t0, t0 + tt):
+                    pl = codec.placement(base + t)
+                    for j, phys in enumerate(pl):
+                        blks = code.stripe_share_blocks(
+                            blocks[t], derived[t - t0], j + 1)
+                        crcs[t][j] = code.share_crc_blocks(blks)
+                        if self.is_up(phys):
+                            self._guard("write", phys)
+                            arrs = [np.asarray(b, np.int32) for b in blks]
+                            if copy_shares:
+                                arrs = [b.copy() for b in arrs]
+                            staged.append((phys, t, [j + 1] + arrs))
+
+            self._install(install)
 
         self.pipeline.map(range(0, smap.n_stripes, tile),
                           encode_window, place_window, read=flatten_window)
@@ -683,21 +789,35 @@ class CodedObjectStore:
             latency = max(latency, sys_lat)
             groups.setdefault((helpers, missing), []).append(t)
         acct = {"bytes": 0, "latency": 0.0}
+        planner = getattr(self.code, "planner", None)
 
         def gather(item):
             (helpers, _missing), ts = item
-            return np.concatenate([self._downloads(key, t, helpers)
-                                   for t in ts], axis=1)        # (2k, G*S)
+            # pooled, bucket-padded gather staging (DESIGN.md §16.1):
+            # the per-stripe downloads land directly in the buffer the
+            # decode dispatches over — no concatenate copy, no pad copy
+            buf = self._stage_into(planner, 2 * self.k, len(ts) * self.S)
+            if buf is None:
+                return np.concatenate([self._downloads(key, t, helpers)
+                                       for t in ts], axis=1)    # (2k, G*S)
+            for g, t in enumerate(ts):
+                buf[:, g * self.S:(g + 1) * self.S] = \
+                    self._downloads(key, t, helpers)
+            buf[:, len(ts) * self.S:] = 0
+            return buf
 
         def decode(item, downloads):
             (helpers, missing), _ts = item
             mat = self.code.repair.decode_matrix(helpers)
             return self.code.repair.apply_planned(mat[list(missing)],
-                                                  downloads)
+                                                  downloads), downloads
 
         def scatter(item, res) -> None:
             (_helpers, missing), ts = item
-            decoded = res.host()
+            planned, downloads = res
+            decoded = planned.host()
+            if planner is not None:
+                planner.staging.release(downloads)
             for g, t in enumerate(ts):
                 blocks[t, list(missing)] = \
                     decoded[:, g * self.S:(g + 1) * self.S]
@@ -762,21 +882,33 @@ class CodedObjectStore:
             latency = max(latency, sys_lat)
             groups.setdefault((helpers, missing_rows), []).append(t)
         acct = {"bytes": 0, "latency": 0.0}
+        planner = getattr(code, "planner", None)
 
         def gather(item):
             (helpers, _missing), ts = item
-            return np.concatenate(
-                [self._downloads_generic(key, t, helpers, codec)
-                 for t in ts], axis=1)                    # (k*q, G*S)
+            buf = self._stage_into(planner, k * q, len(ts) * self.S)
+            if buf is None:
+                return np.concatenate(
+                    [self._downloads_generic(key, t, helpers, codec)
+                     for t in ts], axis=1)                # (k*q, G*S)
+            for g, t in enumerate(ts):
+                buf[:, g * self.S:(g + 1) * self.S] = \
+                    self._downloads_generic(key, t, helpers, codec)
+            buf[:, len(ts) * self.S:] = 0
+            return buf
 
         def decode(item, downloads):
             (helpers, missing), _ts = item
             return code.apply_planned(
-                code.decode_rows(helpers, list(missing)), downloads)
+                code.decode_rows(helpers, list(missing)), downloads), \
+                downloads
 
         def scatter(item, res) -> None:
             (_helpers, missing), ts = item
-            decoded = res.host()
+            planned, downloads = res
+            decoded = planned.host()
+            if planner is not None:
+                planner.staging.release(downloads)
             for g, t in enumerate(ts):
                 blocks[t, list(missing)] = \
                     decoded[:, g * self.S:(g + 1) * self.S]
@@ -1014,10 +1146,7 @@ class CodedObjectStore:
             (legacy if self._is_default(self.class_of(task[0]))
              else generic).append(task)
         if generic:
-            symbols = dispatches = 0
-            for key, t, node in generic:
-                symbols += self._repair_stripe_regen(key, t, node)
-                dispatches += 1
+            symbols, dispatches = self._repair_generic(generic)
             if legacy:
                 s2, d2 = self.repair_stripes_embedded(legacy)
                 symbols, dispatches = symbols + s2, dispatches + d2
@@ -1049,17 +1178,103 @@ class CodedObjectStore:
         def land(window, out) -> None:
             res, placements = out
             pairs = res.host()
-            for (key, t, node), pl, pair in zip(window, placements, pairs):
+
+            def install() -> None:
+                # share copies off the critical thread (DESIGN.md §16.3)
+                for (key, t, node), pl, pair in zip(window, placements,
+                                                    pairs):
+                    phys = pl[node - 1]
+                    if not self.is_up(phys):
+                        raise RuntimeError(f"replace node {phys} before "
+                                           f"repairing onto it")
+                    self._guard("write", phys)
+                    blks = ([pair[0], pair[1]] if self.staging_enabled
+                            else [pair[0].copy(), pair[1].copy()])
+                    self._shares[phys - 1][(key, t)] = [node] + blks
+
+            self._install(install)
+
+        self.pipeline.map(windows, regen, land, read=gather)
+        return len(tasks) * (self.k + 1) * self.S, len(windows)
+
+    def _repair_generic(self, tasks: Sequence[tuple[str, int, int]],
+                        ) -> tuple[int, int]:
+        """Family-generic single-loss repairs.  Families whose
+        ``supports_batched_regen()`` is True coalesce into windowed
+        per-element batched dispatches (``matmul_batch`` — one dispatch
+        per ``repair_tile_tasks`` window even though the newcomer
+        matrices differ per task, DESIGN.md §16.5); the rest keep the
+        one-dispatch-per-task plan path.  Returns (symbols moved,
+        dispatch count)."""
+        symbols = dispatches = 0
+        by_codec: dict[tuple, tuple[StripeCodec, list]] = {}
+        for task in tasks:
+            codec = self.codec_of(task[0])
+            by_codec.setdefault(self.class_of(task[0]).key(),
+                                (codec, []))[1].append(task)
+        for codec, group in by_codec.values():
+            if not codec.code.supports_batched_regen():
+                for key, t, node in group:
+                    symbols += self._repair_stripe_regen(key, t, node)
+                    dispatches += 1
+                continue
+            s2, d2 = self._repair_generic_batched(codec, group)
+            symbols, dispatches = symbols + s2, dispatches + d2
+        return symbols, dispatches
+
+    def _repair_generic_batched(self, codec: StripeCodec,
+                                tasks: Sequence[tuple[str, int, int]],
+                                ) -> tuple[int, int]:
+        """Coalesced single-loss regeneration for one non-default
+        family: window t's helper sends gather on the pool, each window
+        is ONE ``regenerate_many_planned`` dispatch (the (F, q, d)
+        newcomer-matrix stack rides the batched per-element matmul),
+        and installs overlap the next window's dispatch."""
+        code = codec.code
+        tile = self.repair_tile_tasks
+        windows = [tasks[i: i + tile] for i in range(0, len(tasks), tile)]
+        moved = [0]
+
+        def gather(window):
+            plans, sends, placements = [], [], []
+            for key, t, node in window:
+                pl = self.placement_of(key, t)
+                present = sorted(self._present_code_nodes(key, t, pl))
+                plan = code.repair_plan(node, available=present)
+                if plan is None:
+                    raise RuntimeError(f"no regeneration plan for code "
+                                       f"node {node} of stripe {t} of "
+                                       f"{key!r}")
+                sends.append(np.stack([
+                    code.helper_send(
+                        sm, self._read_share_verified(pl[h - 1], key, t)[1:])
+                    for sm, h in zip(plan.send_matrices, plan.helpers)]))
+                plans.append(plan)
+                placements.append(pl)
+            return plans, np.stack(sends), placements    # sends (F, d, S)
+
+        def regen(window, gathered):
+            plans, sends, placements = gathered
+            return (code.regenerate_many_planned(plans, sends),
+                    plans, placements)
+
+        def land(window, out) -> None:
+            res, plans, placements = out
+            rebuilt = res.host()                         # (F, q, S)
+            for (key, t, node), plan, pl, blks in zip(window, plans,
+                                                      placements, rebuilt):
                 phys = pl[node - 1]
                 if not self.is_up(phys):
                     raise RuntimeError(f"replace node {phys} before "
                                        f"repairing onto it")
                 self._guard("write", phys)
-                self._shares[phys - 1][(key, t)] = [node, pair[0].copy(),
-                                                    pair[1].copy()]
+                self._shares[phys - 1][(key, t)] = \
+                    [node] + (list(blks) if self.staging_enabled
+                              else [b.copy() for b in blks])
+                moved[0] += plan.d * self.S
 
         self.pipeline.map(windows, regen, land, read=gather)
-        return len(tasks) * (self.k + 1) * self.S, len(windows)
+        return moved[0], len(windows)
 
     def _repair_stripe_regen(self, key: str, t: int, node: int) -> int:
         """Bandwidth-optimal single-share regeneration through the

@@ -32,6 +32,27 @@ from repro.core.circulant import CodeSpec
 from repro.core.msr import DoubleCirculantMSR
 
 
+def _flatten_into(blocks: np.ndarray, axes: tuple, out_shape: tuple,
+                  out: np.ndarray | None) -> np.ndarray:
+    """Transpose ``blocks`` by ``axes`` into ``out_shape``, writing into
+    ``out`` in place when given (the zero-copy staging path, DESIGN.md
+    §16) or materializing a fresh contiguous array otherwise."""
+    if out is None:
+        return np.ascontiguousarray(
+            np.transpose(blocks, axes)).reshape(out_shape)
+    if out.shape != out_shape or out.dtype != np.int32:
+        raise ValueError(f"staging out must be int32 {out_shape}, got "
+                         f"{out.dtype} {out.shape}")
+    from time import perf_counter
+    t0 = perf_counter()
+    # 3-D view of the destination so the strided transpose writes land
+    # directly in the pooled buffer (one pass, no intermediate copy)
+    np.copyto(out.reshape(tuple(blocks.shape[a] for a in axes)),
+              np.transpose(blocks, axes))
+    gf.record_stage("pack", perf_counter() - t0)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class StripeMap:
     """Geometry of one striped object (everything needed to reassemble).
@@ -103,13 +124,26 @@ class StripeManager:
         return placement.rotate_placement(self.layout, self.n, stripe)
 
     # ----------------------------------------------------------------- chunk
-    def chunk(self, payload: bytes) -> tuple[np.ndarray, StripeMap]:
-        """payload -> ((T, n, S) int32 data blocks, StripeMap)."""
-        sym = gf.bytes_to_symbols(payload, self.p)
+    def chunk(self, payload: bytes,
+              one_pass: bool = True) -> tuple[np.ndarray, StripeMap]:
+        """payload -> ((T, n, S) int32 data blocks, StripeMap).
+
+        ``one_pass`` (the zero-copy staging default, DESIGN.md §16.1)
+        writes the byte payload straight into the freshly allocated
+        block array — cast and stripe padding fused into one strided
+        write.  ``one_pass=False`` keeps the legacy astype -> pad ->
+        astype copy chain as the measurable A/B baseline; both produce
+        bit-identical blocks."""
         per_stripe = self.n * self.stripe_symbols
-        t = max(1, -(-len(sym) // per_stripe))
-        sym = np.pad(sym, (0, t * per_stripe - len(sym)))
-        blocks = sym.reshape(t, self.n, self.stripe_symbols).astype(np.int32)
+        t = max(1, -(-len(payload) // per_stripe))
+        if one_pass:
+            blocks = np.empty((t, self.n, self.stripe_symbols), np.int32)
+            gf.bytes_to_symbols_into(payload, blocks.reshape(-1), self.p)
+        else:
+            sym = gf.bytes_to_symbols(payload, self.p)
+            sym = np.pad(sym, (0, t * per_stripe - len(sym)))
+            blocks = sym.reshape(t, self.n,
+                                 self.stripe_symbols).astype(np.int32)
         return blocks, StripeMap(orig_bytes=len(payload), n_stripes=t,
                                  stripe_symbols=self.stripe_symbols)
 
@@ -119,15 +153,20 @@ class StripeManager:
         return gf.symbols_to_bytes(sym)[: smap.orig_bytes]
 
     # ---------------------------------------------------------------- encode
-    def flatten(self, blocks: np.ndarray) -> np.ndarray:
+    def flatten(self, blocks: np.ndarray,
+                out: np.ndarray | None = None) -> np.ndarray:
         """(T, n, S) data blocks -> the (n, T*S) stream view the encode
         dispatches over (the stripe axis folds into the symbol axis —
-        the circulant encode is independent per symbol column)."""
+        the circulant encode is independent per symbol column).
+
+        ``out`` (int32, exactly (n, T*S)) receives the transpose in
+        place — the zero-copy staging path (DESIGN.md §16): the put
+        pipeline passes a view into a pooled, bucket-padded buffer so
+        flatten + pad collapse into one strided write."""
         t, n, s = blocks.shape
         if n != self.n:
             raise ValueError(f"expected {self.n} blocks per stripe, got {n}")
-        return np.ascontiguousarray(
-            np.transpose(blocks, (1, 0, 2))).reshape(n, t * s)
+        return _flatten_into(blocks, (1, 0, 2), (n, t * s), out)
 
     def unflatten(self, flat: np.ndarray, t: int) -> np.ndarray:
         """Inverse of :meth:`flatten`: (n, T*S) -> (T, n, S)."""
@@ -181,15 +220,22 @@ class StripeCodec:
         return placement.rotate_placement(self.layout, self.n, stripe)
 
     # ----------------------------------------------------------------- chunk
-    def chunk(self, payload: bytes) -> tuple[np.ndarray, StripeMap]:
-        """payload -> ((T, D, S) int32 payload blocks, StripeMap)."""
+    def chunk(self, payload: bytes,
+              one_pass: bool = True) -> tuple[np.ndarray, StripeMap]:
+        """payload -> ((T, D, S) int32 payload blocks, StripeMap).
+        ``one_pass`` stages the bytes in one fused write like
+        :meth:`StripeManager.chunk`."""
         d_blocks = self.code.data_blocks
-        sym = gf.bytes_to_symbols(payload, self.p)
         per_stripe = d_blocks * self.stripe_symbols
-        t = max(1, -(-len(sym) // per_stripe))
-        sym = np.pad(sym, (0, t * per_stripe - len(sym)))
-        blocks = sym.reshape(t, d_blocks,
-                             self.stripe_symbols).astype(np.int32)
+        t = max(1, -(-len(payload) // per_stripe))
+        if one_pass:
+            blocks = np.empty((t, d_blocks, self.stripe_symbols), np.int32)
+            gf.bytes_to_symbols_into(payload, blocks.reshape(-1), self.p)
+        else:
+            sym = gf.bytes_to_symbols(payload, self.p)
+            sym = np.pad(sym, (0, t * per_stripe - len(sym)))
+            blocks = sym.reshape(t, d_blocks,
+                                 self.stripe_symbols).astype(np.int32)
         return blocks, StripeMap(orig_bytes=len(payload), n_stripes=t,
                                  stripe_symbols=self.stripe_symbols)
 
@@ -199,15 +245,16 @@ class StripeCodec:
         return gf.symbols_to_bytes(sym)[: smap.orig_bytes]
 
     # ---------------------------------------------------------------- encode
-    def flatten(self, blocks: np.ndarray) -> np.ndarray:
+    def flatten(self, blocks: np.ndarray,
+                out: np.ndarray | None = None) -> np.ndarray:
         """(T, D, S) -> (D, T*S) stream view (stripe axis folded into
-        the symbol axis; every family's encode is column-independent)."""
+        the symbol axis; every family's encode is column-independent).
+        ``out`` stages in place like ``StripeManager.flatten``."""
         t, d_blocks, s = blocks.shape
         if d_blocks != self.code.data_blocks:
             raise ValueError(f"expected {self.code.data_blocks} payload "
                              f"blocks per stripe, got {d_blocks}")
-        return np.ascontiguousarray(
-            np.transpose(blocks, (1, 0, 2))).reshape(d_blocks, t * s)
+        return _flatten_into(blocks, (1, 0, 2), (d_blocks, t * s), out)
 
     def unflatten_rows(self, flat: np.ndarray, rows: int,
                        t: int) -> np.ndarray:

@@ -1,0 +1,329 @@
+"""Zero-copy host staging tests (DESIGN.md §16): StagingPool
+semantics and the aliasing rule, per-stage wall-time accounting
+(`Pipeline.stage_stats()`), bit-exactness of every zero-copy path
+against its legacy copying twin (chunk / flatten / pack257 / CRC /
+store put-get-repair via the ``staging_enabled`` A/B flag), and the
+machine-aware pipeline-depth default."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import gf
+from repro.core.circulant import CodeSpec
+from repro.codes import (CodeClass, FAMILY_PRODUCT_MATRIX, make_code)
+from repro.exec import staging
+from repro.exec.pipeline import Pipeline
+from repro.exec.plan import PlanCache
+from repro.exec.staging import POOL_BUCKET_MIN, STAGE_NAMES, StagingPool
+from repro.kernels import dispatch
+from repro.store import CodedObjectStore
+from repro.store.object_store import share_crc
+from repro.store.stripes import StripeManager
+
+P = 257
+SPEC4 = CodeSpec.make(4, P)
+rng = np.random.default_rng(16)
+
+
+def make_store(staging_on=True, spec=SPEC4, **kw):
+    st = CodedObjectStore(spec, n_nodes=12, stripe_symbols=64, **kw)
+    st.staging_enabled = staging_on
+    return st
+
+
+def payload_bytes(size, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, size, dtype=np.uint8).tobytes()
+
+
+# ------------------------------------------------------------ staging pool
+class TestStagingPool:
+    def test_miss_then_hit_reuses_same_base(self):
+        pool = StagingPool()
+        a = pool.acquire((3, 100))
+        base = StagingPool._base_of(a)
+        pool.release(a)
+        b = pool.acquire((300,))        # same bucket, different shape
+        assert StagingPool._base_of(b) is base
+        s = pool.stats()
+        assert (s.hits, s.misses, s.released, s.in_use) == (1, 1, 1, 1)
+
+    def test_bucket_ladder_floor_and_growth(self):
+        pool = StagingPool()
+        small = StagingPool._base_of(pool.acquire((8,)))
+        assert small.size == POOL_BUCKET_MIN
+        big = StagingPool._base_of(pool.acquire((POOL_BUCKET_MIN + 1,)))
+        assert big.size == POOL_BUCKET_MIN * 2
+
+    def test_unreleased_buffer_never_reissued(self):
+        # the aliasing rule: pool depth grows on demand, so concurrent
+        # acquires (>= any pipeline depth) all get distinct backing
+        pool = StagingPool()
+        views = [pool.acquire((64,)) for _ in range(4)]
+        bases = {id(StagingPool._base_of(v)) for v in views}
+        assert len(bases) == 4
+        assert pool.stats().in_use == 4
+
+    def test_double_and_foreign_release_are_noops(self):
+        pool = StagingPool()
+        a = pool.acquire((16,))
+        pool.release(a)
+        pool.release(a)                       # double release
+        pool.release(np.zeros(16, np.int32))  # never issued
+        pool.release("not an array")
+        s = pool.stats()
+        assert s.released == 1 and s.in_use == 0
+        # the freed buffer is pooled exactly once, not twice
+        b1 = pool.acquire((16,))
+        b2 = pool.acquire((16,))
+        assert StagingPool._base_of(b1) is not StagingPool._base_of(b2)
+
+    def test_max_pooled_cap_drops_excess(self):
+        pool = StagingPool(max_pooled=1)
+        a, b = pool.acquire((8,)), pool.acquire((8,))
+        pool.release(a)
+        pool.release(b)
+        assert pool.stats().pooled_bytes == POOL_BUCKET_MIN * 4  # one int32 buf
+
+    def test_dtype_slots_are_separate(self):
+        pool = StagingPool()
+        a = pool.acquire((32,), np.int32)
+        pool.release(a)
+        b = pool.acquire((32,), np.uint8)
+        assert b.dtype == np.uint8
+        assert StagingPool._base_of(b) is not StagingPool._base_of(a)
+
+    def test_clear_resets_everything(self):
+        pool = StagingPool()
+        pool.release(pool.acquire((8,)))
+        pool.clear()
+        s = pool.stats()
+        assert s == (0, 0, 0, 0, 0)
+
+
+# ------------------------------------------------- aliasing: planner pads
+class TestPlannerStagingAliasing:
+    def _pc(self):
+        return PlanCache(dispatch.get("jnp-int32"), P, bucket_min=32)
+
+    def test_pad_buffer_held_until_host_then_recycled(self):
+        pc = self._pc()
+        mat = rng.integers(0, P, (4, 8)).astype(np.int32)
+        blocks = rng.integers(0, P, (8, 33)).astype(np.int32)  # odd -> pad
+        res = pc.matmul(mat, blocks)
+        assert pc.staging.stats().in_use > 0      # staged pad in flight
+        out = res.host()
+        assert pc.staging.stats().in_use == 0     # released at host()
+        np.testing.assert_array_equal(
+            out, (mat.astype(np.int64) @ blocks) % P)
+
+    def test_scribbling_reused_buffer_never_alters_results(self):
+        # the caller-visible aliasing guarantee: once host() returned,
+        # the pooled pad buffer may be reused and scribbled freely
+        # without disturbing any previously materialized result
+        pc = self._pc()
+        mat = rng.integers(0, P, (4, 8)).astype(np.int32)
+        blocks = rng.integers(0, P, (8, 41)).astype(np.int32)
+        ref = (mat.astype(np.int64) @ blocks) % P
+        out = pc.matmul(mat, blocks).host()
+        reused = pc.staging.acquire((8, 64))      # same bucket as the pad
+        reused[...] = 12345
+        np.testing.assert_array_equal(out, ref)
+
+
+# ------------------------------------------------------ stage accounting
+class TestStageStats:
+    def test_pipeline_reports_all_stage_clocks(self):
+        pipe = Pipeline(io_workers=1, depth=2)
+        pipe.reset_stage_stats()
+        pipe.map(list(range(4)),
+                 read=lambda i: i,
+                 compute=lambda i, d: d * 2,
+                 consume=lambda i, out: None)
+        stats = pipe.stage_stats()
+        assert set(STAGE_NAMES) <= set(stats)
+        assert all(stats[k] >= 0.0 for k in STAGE_NAMES)
+        assert stats["t_stage_read"] > 0.0
+        assert stats["t_dispatch"] > 0.0
+        pipe.close()
+
+    def test_pack_clock_counts_staging_writes(self):
+        pipe = Pipeline(io_workers=1, depth=1)
+        pipe.reset_stage_stats()
+        out = np.empty(1 << 12, np.int32)
+        gf.bytes_to_symbols_into(payload_bytes(1000), out)
+        assert pipe.stage_stats()["t_pack"] > 0.0
+        pipe.reset_stage_stats()
+        assert pipe.stage_stats()["t_pack"] == 0.0
+        pipe.close()
+
+    def test_reset_rebases_process_clock_not_other_pipelines(self):
+        # stage clocks are deltas of the process-wide accumulator: one
+        # pipeline's reset must not erase another's view
+        a, b = Pipeline(io_workers=1), Pipeline(io_workers=1)
+        a.reset_stage_stats()
+        b.reset_stage_stats()
+        staging.record_stage("pack", 0.5)
+        a.reset_stage_stats()
+        assert a.stage_stats()["t_pack"] == 0.0
+        assert b.stage_stats()["t_pack"] == pytest.approx(0.5)
+        a.close(); b.close()
+
+
+# ------------------------------------------------- zero-copy bit-exactness
+class TestZeroCopyBitExact:
+    @pytest.mark.parametrize("nbytes", [0, 1, 63, 64, 65, 1000])
+    def test_bytes_to_symbols_into_matches_pad_chain(self, nbytes):
+        data = payload_bytes(nbytes, seed=nbytes)
+        cap = 4 * 256
+        out = np.full(cap, -1, np.int32)
+        gf.bytes_to_symbols_into(data, out)
+        ref = np.pad(gf.bytes_to_symbols(data), (0, cap - nbytes))
+        np.testing.assert_array_equal(out, ref)
+
+    def test_bytes_to_symbols_into_validates(self):
+        with pytest.raises(ValueError):
+            gf.bytes_to_symbols_into(b"x" * 10, np.empty(4, np.int32))
+        with pytest.raises(ValueError):
+            gf.bytes_to_symbols_into(b"x", np.empty(4, np.int64))
+
+    @pytest.mark.parametrize("nbytes", [0, 1, 511, 512, 513, 5000])
+    def test_chunk_one_pass_matches_legacy(self, nbytes):
+        sm = StripeManager(SPEC4, CodedObjectStore(
+            SPEC4, n_nodes=12, stripe_symbols=64).stripes.layout,
+            stripe_symbols=64)
+        data = payload_bytes(nbytes, seed=nbytes)
+        fast, map_f = sm.chunk(data, one_pass=True)
+        slow, map_s = sm.chunk(data, one_pass=False)
+        assert map_f == map_s
+        np.testing.assert_array_equal(fast, slow)
+
+    def test_flatten_out_matches_fresh(self):
+        sm = StripeManager(SPEC4, CodedObjectStore(
+            SPEC4, n_nodes=12, stripe_symbols=64).stripes.layout,
+            stripe_symbols=64)
+        blocks = rng.integers(0, P, (3, SPEC4.n, 64)).astype(np.int32)
+        ref = sm.flatten(blocks)
+        out = np.empty((SPEC4.n, 3 * 64), np.int32)
+        assert sm.flatten(blocks, out=out) is out
+        np.testing.assert_array_equal(out, ref)
+
+    @pytest.mark.parametrize("s", [1, 31, 64])
+    def test_pack257_rows_out_matches_fresh(self, s):
+        sym = rng.integers(0, 257, (6, s)).astype(np.int32)
+        sym[0, 0] = 256                       # force the wrap case
+        low_ref, his_ref = gf.pack257_rows(sym)
+        buf = np.empty(sym.shape, np.uint8)
+        low, his = gf.pack257_rows(sym, out=buf)
+        assert low is buf
+        np.testing.assert_array_equal(low, low_ref)
+        for h, hr in zip(his, his_ref):
+            np.testing.assert_array_equal(h, hr)
+        # roundtrip through the out= expansion path too
+        exp = np.empty(sym.shape, np.int32)
+        assert gf.unpack257_rows(low, his, out=exp) is exp
+        np.testing.assert_array_equal(exp, sym)
+
+    def test_share_crc_zero_copy_matches_legacy(self):
+        for seed in range(4):
+            r = np.random.default_rng(seed)
+            a = r.integers(0, 256, 97).astype(np.int32)
+            red = r.integers(0, 257, 97).astype(np.int32)
+            red[seed] = 256                   # cover the 256 wrap
+            assert share_crc(a, red, zero_copy=True) == \
+                share_crc(a, red, zero_copy=False)
+
+
+# --------------------------------------------- store A/B: staged vs legacy
+class TestStoreStagingAB:
+    def test_put_get_bit_exact_and_crcs_identical(self):
+        data = payload_bytes(3000, seed=3)
+        st_on, st_off = make_store(True), make_store(False)
+        st_on.put("obj", data)
+        st_off.put("obj", data)
+        assert st_on.get("obj") == data
+        assert st_off.get("obj") == data
+        # the zero-copy CRC chain must land in the SAME integrity ledger
+        assert st_on._stats["obj"].share_crcs == \
+            st_off._stats["obj"].share_crcs
+
+    def test_degraded_get_and_repair_bit_exact(self):
+        from repro.store import RepairScheduler
+        data = payload_bytes(4096, seed=5)
+        for staging_on in (True, False):
+            st = make_store(staging_on)
+            sched = RepairScheduler(st)
+            st.subscribe(sched.on_event)
+            st.put("obj", data)
+            st.fail_node(1)
+            assert st.get("obj") == data       # degraded read
+            sched.drain_all()
+            assert st.get("obj") == data and st.verify()
+
+    def test_view_installs_keep_shares_independent(self):
+        # staged installs store VIEWS into the per-put block arrays;
+        # the drills corrupt shares in place ([1][0] ^= 0x55), so a
+        # mutation through one share must never leak into another
+        st = make_store(True)
+        data = payload_bytes(2048, seed=7)
+        st.put("obj", data)
+        shares = [sh for node in st._shares
+                  for (key, _t), sh in node.items() if key == "obj"]
+        assert len(shares) >= 2
+        before = [np.array(sh[1], copy=True) for sh in shares[1:]]
+        shares[0][1][0] ^= 0x55               # scribble one share's data
+        for sh, ref in zip(shares[1:], before):
+            np.testing.assert_array_equal(np.asarray(sh[1]), ref)
+
+
+# ----------------------------------------- batched PM regeneration parity
+class TestBatchedRegenParity:
+    def test_regenerate_many_planned_matches_per_plan(self):
+        cc = CodeClass(FAMILY_PRODUCT_MATRIX, n=5, k=2, d=3)
+        code = make_code(cc)
+        assert code.supports_batched_regen()
+        plans = [code.repair_plan(node) for node in (1, 3, 5, 2)]
+        assert all(p is not None for p in plans)
+        s = 37
+        sends = rng.integers(0, P, (len(plans), plans[0].d, s),
+                             dtype=np.int64).astype(np.int32)
+        batched = code.regenerate_many_planned(plans, sends).host()
+        for i, plan in enumerate(plans):
+            np.testing.assert_array_equal(
+                batched[i], code.regenerate(plan, sends[i]))
+
+    def test_shape_validation(self):
+        cc = CodeClass(FAMILY_PRODUCT_MATRIX, n=4, k=2, d=2)
+        code = make_code(cc)
+        plan = code.repair_plan(1)
+        with pytest.raises(ValueError):
+            code.regenerate_many_planned([plan], np.zeros((2, 2, 8), np.int32))
+
+
+# ------------------------------------------------- machine-aware defaults
+class TestPipelineDepthDefault:
+    def test_store_auto_depth_matches_machine(self):
+        st = CodedObjectStore(SPEC4, n_nodes=12, stripe_symbols=64)
+        want = 2 if (os.cpu_count() or 1) >= 2 else 1
+        assert st.pipeline.depth == want
+
+    def test_explicit_depth_honored(self):
+        st = CodedObjectStore(SPEC4, n_nodes=12, stripe_symbols=64,
+                              pipeline_depth=1)
+        assert st.pipeline.depth == 1
+
+    def test_install_inline_at_depth_1_pooled_above(self):
+        # depth 1 must stay a true serial baseline: installs run on the
+        # calling thread, never through the pool
+        st1 = CodedObjectStore(SPEC4, n_nodes=12, stripe_symbols=64,
+                               pipeline_depth=1)
+        st2 = CodedObjectStore(SPEC4, n_nodes=12, stripe_symbols=64,
+                               pipeline_depth=2)
+        ran_on = []
+        st1._install(lambda: ran_on.append(threading.get_ident()))
+        assert ran_on == [threading.get_ident()]
+        st2._install(lambda: ran_on.append(threading.get_ident()))
+        st2.pipeline.barrier()
+        assert len(ran_on) == 2 and ran_on[1] != threading.get_ident()
